@@ -1,0 +1,102 @@
+"""Figure 10: the 28 real-world Kron-Matmul sizes of Table 4.
+
+Covers odd / non-power-of-two M, rectangular and distinct factors, N from
+1 to 8 — the shape diversity the paper uses to show FastKron generalizes
+beyond cube sizes (paper: 5.7x-40.7x over GPyTorch, 1.4x-8.1x over COGENT).
+
+Cases exceeding the CPU element budget run with N reduced (flagged
+``scaled=1``) — same shape family, smaller exponent.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+from repro.core import kron as K
+from repro.core.fastkron import kron_matmul
+from repro.core.kron import KronProblem
+
+from .util import csv_row, gflops, make_inputs, timeit
+
+# (id, source, M, [(P,Q), ...]) — Table 4 verbatim
+TABLE4 = [
+    (1, "lstm", 20, [(128, 128)]),
+    (2, "lstm", 20, [(512, 512)]),
+    (3, "lstm", 50, [(512, 512)]),
+    (4, "lstm", 20, [(1024, 1024)]),
+    (5, "lstm", 1, [(2048, 2048)]),
+    (6, "compress", 10, [(52, 50), (65, 20)]),
+    (7, "compress", 50, [(32, 8), (64, 128)]),
+    (8, "compress", 10, [(52, 65), (50, 20)]),
+    (9, "hypa", 4, [(512, 512)]),
+    (10, "hypa", 8, [(512, 512)]),
+    (11, "hypa", 16, [(512, 512)]),
+    (12, "hypa", 20, [(512, 512)]),
+    (13, "hypa", 4, [(8, 8)] * 3),
+    (14, "hypa", 8, [(8, 8)] * 3),
+    (15, "hypa", 16, [(8, 8)] * 3),
+    (16, "hypa", 20, [(8, 8)] * 3),
+    (17, "graphs", 1024, [(3, 3)] * 7),
+    (18, "graphs", 1024, [(4, 4)] * 7),
+    (19, "graphs", 1024, [(6, 6)] * 7),
+    (20, "biology", 1, [(5, 5)] * 3 + [(2, 2)]),
+    (21, "biology", 1, [(5, 5)] * 2 + [(2, 2), (25, 25)]),
+    (22, "drug", 1526, [(4, 4)] * 6),
+    (23, "drug", 156, [(8, 8)] * 3),
+    (24, "drug", 2967, [(4, 4)] * 7),
+    (25, "gp", 16, [(8, 8)] * 8),
+    (26, "gp", 16, [(16, 16)] * 6),
+    (27, "gp", 16, [(32, 32)] * 6),
+    (28, "gp", 16, [(64, 64)] * 3),
+]
+
+BUDGET = 3 * 10**7  # elements per intermediate (CPU RAM/time cap)
+
+
+def _cap(m, factors):
+    """Drop trailing factors until intermediates fit the budget."""
+    scaled = 0
+    while factors:
+        ps = [p for p, _ in factors]
+        qs = [q for _, q in factors]
+        prob = KronProblem(m, tuple(ps), tuple(qs))
+        if m * prob.intermediate_elems <= BUDGET:
+            return factors, scaled
+        factors = factors[:-1]
+        scaled = 1
+    raise ValueError("empty")
+
+
+def run(quick: bool = False):
+    rows = []
+    cases = TABLE4[::4] if quick else TABLE4
+    for cid, src, m, factors in cases:
+        factors, scaled = _cap(m, list(factors))
+        ps = tuple(p for p, _ in factors)
+        qs = tuple(q for _, q in factors)
+        prob = KronProblem(m, ps, qs)
+        x, fs = make_inputs(m, ps, qs)
+        sh = jax.jit(lambda x, fs: K.kron_matmul_shuffle(x, fs))
+        ft = jax.jit(lambda x, fs: K.kron_matmul_ftmmt(x, fs))
+        fk = jax.jit(lambda x, fs: kron_matmul(x, fs))
+        t_sh = timeit(lambda: sh(x, fs), iters=3)
+        t_ft = timeit(lambda: ft(x, fs), iters=3)
+        t_fk = timeit(lambda: fk(x, fs), iters=3)
+        rows.append(csv_row(
+            "fig10",
+            id=cid,
+            source=src,
+            m=m,
+            shape="x".join(f"{p}x{q}" for p, q in factors),
+            scaled=scaled,
+            speedup_vs_shuffle=f"{t_sh/t_fk:.2f}",
+            speedup_vs_ftmmt=f"{t_ft/t_fk:.2f}",
+            gflops_fastkron=f"{gflops(prob, t_fk):.2f}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,60 @@
+"""Figure 9: GFLOP/s of shuffle / FTMMT / FastKron (planned) / FastKron
+without fusion, for M=1024, P in {8..64}, the largest N fitting the budget.
+
+Paper claims reproduced (on CPU, as ratios):
+  * FastKron beats the shuffle algorithm at every size (paper: 3.1x-7.6x);
+  * fusion (C3 planning) helps most at small P (paper: 2.2x at 8^5 -> 1.15x
+    at 32^3);
+  * throughput grows with P (arithmetic intensity = P).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core import kron as K
+from repro.core.autotune import make_plan
+from repro.core.fastkron import kron_matmul
+from repro.core.kron import KronProblem
+
+from .util import csv_row, gflops, largest_n, make_inputs, timeit
+
+
+def run(quick: bool = False):
+    rows = []
+    m = 1024
+    ps = [8, 16, 32] if quick else [8, 16, 32, 64]
+    for p in ps:
+        n = largest_n(m, p, p, budget_elems=(8 if quick else 48) * 10**6)
+        prob = KronProblem.uniform(m, p, p, n)
+        x, fs = make_inputs(m, prob.ps, prob.qs)
+
+        shuffle = jax.jit(lambda x, fs: K.kron_matmul_shuffle(x, fs))
+        ftmmt = jax.jit(lambda x, fs: K.kron_matmul_ftmmt(x, fs))
+        fk = jax.jit(lambda x, fs: kron_matmul(x, fs, plan="auto"))
+        fk_nofuse = jax.jit(lambda x, fs: kron_matmul(x, fs, plan=None))
+
+        t_sh = timeit(lambda: shuffle(x, fs))
+        t_ft = timeit(lambda: ftmmt(x, fs))
+        t_fk = timeit(lambda: fk(x, fs))
+        t_nf = timeit(lambda: fk_nofuse(x, fs))
+        # the plan actually executed on this backend (prekron is TPU-only)
+        plan = make_plan(prob, enable_prekron=jax.default_backend() == "tpu")
+        rows.append(csv_row(
+            "fig9",
+            size=f"{p}^{n}",
+            gflops_shuffle=f"{gflops(prob, t_sh):.2f}",
+            gflops_ftmmt=f"{gflops(prob, t_ft):.2f}",
+            gflops_fastkron=f"{gflops(prob, t_fk):.2f}",
+            gflops_fastkron_nofuse=f"{gflops(prob, t_nf):.2f}",
+            speedup_vs_shuffle=f"{t_sh / t_fk:.2f}",
+            fusion_gain=f"{t_nf / t_fk:.2f}",
+            plan=plan.describe().replace(",", ";"),
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

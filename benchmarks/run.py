@@ -1,0 +1,47 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig9,tab5]
+
+Prints one CSV row per measurement (name,key=value,...).  CPU container:
+absolute GFLOP/s are not paper-comparable; the reproduced claims are the
+RATIOS (FastKron vs shuffle vs FTMMT) and the HLO-derived bytes / comm
+volumes, which are hardware-independent.  Roofline/§Perf numbers come from
+launch/dryrun.py, not from here.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+ALL = ["fig9", "tab1", "tab2", "tab3", "fig10", "fig11", "tab5"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(ALL))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else ALL
+    failures = []
+    for name in names:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            for row in mod.run(quick=args.quick):
+                print(row, flush=True)
+            print(f"# {name} done in {time.time()-t0:.0f}s", flush=True)
+        except Exception as e:
+            failures.append(name)
+            traceback.print_exc()
+            print(f"# {name} FAILED: {e}", flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+    print("# ALL BENCHMARKS OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Table 1: where the shuffle algorithm's time goes (Matmul vs transpose)
+vs FastKron total.
+
+Paper claim: the transpose/reshuffle pass costs up to 80% of GPyTorch's
+total time; FastKron removes it entirely.  We time the shuffle algorithm's
+two phases separately (same decomposition as GPyTorch: cuBLAS GEMM +
+transpose kernel) and FastKron end-to-end.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kron as K
+from repro.core.fastkron import kron_matmul
+from repro.core.kron import KronProblem
+
+from .util import csv_row, largest_n, make_inputs, timeit
+
+
+def _shuffle_matmul_only(x, fs):
+    """The GEMM part of every shuffle iteration (no transpose/reshape)."""
+    y = x
+    m = x.shape[0]
+    for f in reversed(fs):
+        p, q = f.shape
+        s = y.shape[1] // p
+        t = y.reshape(m * s, p) @ f
+        y = t.reshape(m, s * q)  # WRONG layout on purpose: no shuffle pass
+    return y
+
+
+def _shuffle_transpose_only(x, fs):
+    """Only the transpose passes (on same-shaped intermediates)."""
+    y = x
+    m = x.shape[0]
+    for f in reversed(fs):
+        p, q = f.shape
+        s = y.shape[1] // p
+        y = jnp.swapaxes(y.reshape(m, s, q), 1, 2).reshape(m, q * s)
+    return y
+
+
+def run(quick: bool = False):
+    rows = []
+    m = 1024
+    for p in ([8, 32] if quick else [8, 16, 32, 64]):
+        n = largest_n(m, p, p, budget_elems=(8 if quick else 48) * 10**6)
+        prob = KronProblem.uniform(m, p, p, n)
+        x, fs = make_inputs(m, prob.ps, prob.qs)
+        mm = jax.jit(lambda x, fs: _shuffle_matmul_only(x, fs))
+        tr = jax.jit(lambda x, fs: _shuffle_transpose_only(x, fs))
+        full = jax.jit(lambda x, fs: K.kron_matmul_shuffle(x, fs))
+        fk = jax.jit(lambda x, fs: kron_matmul(x, fs))
+        t_mm = timeit(lambda: mm(x, fs))
+        t_tr = timeit(lambda: tr(x, fs))
+        t_full = timeit(lambda: full(x, fs))
+        t_fk = timeit(lambda: fk(x, fs))
+        rows.append(csv_row(
+            "tab1",
+            size=f"{p}^{n}",
+            shuffle_matmul_ms=f"{t_mm*1e3:.2f}",
+            shuffle_transpose_ms=f"{t_tr*1e3:.2f}",
+            shuffle_total_ms=f"{t_full*1e3:.2f}",
+            transpose_frac=f"{t_tr/(t_mm+t_tr):.2f}",
+            fastkron_ms=f"{t_fk*1e3:.2f}",
+            speedup=f"{t_full/t_fk:.2f}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

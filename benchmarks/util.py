@@ -1,0 +1,63 @@
+"""Shared benchmark utilities: timing, FLOP accounting, CSV emission.
+
+All benchmarks run on CPU (the container has no TPU): absolute numbers are
+not paper-comparable, but the RATIOS between algorithms on identical inputs
+are the reproduction target (FastKron vs shuffle vs FTMMT), plus HLO-derived
+bytes/comm which are hardware-independent.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kron import KronProblem
+
+
+def timeit(fn: Callable[[], jax.Array], *, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds per call (after jit warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def gflops(prob: KronProblem, seconds: float) -> float:
+    return prob.flops / seconds / 1e9
+
+
+def make_inputs(m: int, ps, qs, dtype=jnp.float32, seed: int = 0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(ps) + 1)
+    x = jax.random.normal(keys[0], (m, math.prod(ps))).astype(dtype)
+    fs = [
+        jax.random.normal(k, (p, q)).astype(dtype)
+        for k, p, q in zip(keys[1:], ps, qs)
+    ]
+    return x, fs
+
+
+def csv_row(name: str, **fields) -> str:
+    parts = [name] + [f"{k}={v}" for k, v in fields.items()]
+    return ",".join(parts)
+
+
+def largest_n(m: int, p: int, q: int, budget_elems: int = 3 * 10**7) -> int:
+    """Largest N with all intermediates (M x cols) under the element budget
+    (CPU-RAM/time analogue of 'largest allocatable P^N on a 32GB GPU')."""
+    n = 1
+    while True:
+        prob = KronProblem.uniform(m, p, q, n + 1)
+        if m * prob.intermediate_elems > budget_elems:
+            return n
+        n += 1
+
+
+__all__ = ["timeit", "gflops", "make_inputs", "csv_row", "largest_n"]

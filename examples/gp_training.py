@@ -1,0 +1,96 @@
+"""Paper §6.4 case study: training a SKI (KISS-GP) Gaussian Process with
+FastKron-accelerated conjugate-gradient solves.
+
+    PYTHONPATH=src python examples/gp_training.py [--p 16] [--d 3] [--epochs 5]
+
+End-to-end: synthetic regression data -> SKI interpolation onto a D-dim
+grid of P points/dim -> kernel K = (x)_d RBF_1d -> per epoch, CG-solve
+(K + noise I)^-1 V with M=16 probe rows (the paper's setting) and update
+the noise hyperparameter from the residual.  The hot op of every CG
+iteration is a Kron-Matmul; --backend switches the engine so the speedup
+of FastKron over the shuffle algorithm shows up as epoch time.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.gp import (
+    KronKernel,
+    conjugate_gradient,
+    gp_train_epoch,
+    interp_matrix,
+    rbf_kernel_1d,
+)
+
+
+def make_data(key, n: int, d: int):
+    kx, ky = jax.random.split(key)
+    x = jax.random.uniform(kx, (n, d))
+    f = jnp.sin(4 * x.sum(-1)) + 0.5 * jnp.cos(7 * x[:, 0])
+    y = f + 0.1 * jax.random.normal(ky, (n,))
+    return x, y
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--p", type=int, default=16, help="grid points per dim")
+    ap.add_argument("--d", type=int, default=3, help="input dims")
+    ap.add_argument("--n", type=int, default=512, help="training points")
+    ap.add_argument("--epochs", type=int, default=5)
+    ap.add_argument("--cg-iters", type=int, default=10)
+    ap.add_argument("--backend", default="fastkron",
+                    choices=["fastkron", "shuffle"])
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(0)
+    x, y = make_data(key, args.n, args.d)
+    grid = jnp.linspace(0, 1, args.p)
+    kernel = KronKernel(tuple(rbf_kernel_1d(grid) for _ in range(args.d)))
+    w = interp_matrix(x, [args.p] * args.d)          # (n, P^D)
+    print(f"SKI: n={args.n} pts -> grid {args.p}^{args.d} "
+          f"({kernel.dim} inducing), backend={args.backend}")
+
+    # project targets onto the grid (W^T y) and train with M=16 probe rows
+    wty = (w.T @ y)[None, :]                          # (1, dim)
+    probes = jax.random.normal(jax.random.fold_in(key, 1), (15, kernel.dim))
+    v = jnp.concatenate([wty, probes], axis=0)        # (16, dim) as in paper
+
+    noise = 0.1
+    epoch = jax.jit(
+        lambda v, noise: gp_train_epoch(
+            kernel, v, noise=noise, cg_iters=args.cg_iters,
+            backend=args.backend,
+        )
+    )
+    # warmup/compile
+    jax.block_until_ready(epoch(v, noise)[0])
+
+    t_total = 0.0
+    for e in range(args.epochs):
+        t0 = time.perf_counter()
+        sol, resid = epoch(v, noise)
+        jax.block_until_ready(sol)
+        dt = time.perf_counter() - t0
+        t_total += dt
+        # crude hyperparameter step: match noise to residual scale
+        noise = float(jnp.clip(0.9 * noise + 0.1 * resid.mean()
+                               / max(kernel.dim, 1) * 100, 1e-3, 1.0))
+        print(f"epoch {e}: {dt*1e3:7.1f} ms  cg_resid={float(resid[0]):.3e} "
+              f"noise={noise:.4f}")
+
+    # posterior mean at training points: mu = W K alpha  (alpha = K^-1 W^T y)
+    alpha = sol[0]
+    mu = w @ kernel.matmul(alpha[None, :], backend=args.backend)[0]
+    rmse = float(jnp.sqrt(jnp.mean((mu / jnp.maximum(mu.std(), 1e-9)
+                                    * y.std() - y) ** 2)))
+    print(f"train RMSE (scale-matched): {rmse:.3f}  "
+          f"avg epoch: {t_total/args.epochs*1e3:.1f} ms")
+    print("re-run with --backend shuffle to compare engines")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Batched serving example: prefill a batch of prompts, stream tokens.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma-2b --batch 4
+
+Demonstrates the serving path the decode_32k / long_500k dry-run cells
+lower at production scale: jitted prefill builds the KV/SSM cache for the
+whole batch, a jitted one-token serve_step (cache donated -> in-place ring
+update) runs the autoregressive loop.  Works for every registered arch
+(--arch mamba2-130m serves with O(1) recurrent state, --arch mixtral-8x22b
+with a window-bounded ring cache).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.data import SyntheticLM
+from repro.models import model as M
+from repro.models.config import reduced
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch), dtype="float32")
+    max_len = args.prompt_len + args.gen
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=args.prompt_len,
+                       batch=args.batch)
+    prompts, _ = data.global_batch(0)
+    n_fe = cfg.n_frontend_tokens
+    embeds = (jax.random.normal(jax.random.PRNGKey(7),
+                                (args.batch, n_fe, cfg.d_model))
+              if n_fe else None)
+
+    prefill = jax.jit(lambda p, t, e: M.prefill(cfg, p, t, max_len + n_fe, e))
+    step = jax.jit(
+        lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos),
+        donate_argnums=(1,),
+    )
+
+    t0 = time.time()
+    logits, cache = prefill(params, prompts, embeds)
+    jax.block_until_ready(logits)
+    print(f"prefill {args.batch}x{args.prompt_len}: {time.time()-t0:.2f}s")
+
+    key = jax.random.PRNGKey(1)
+    tok = jnp.argmax(logits[:, -1:, : cfg.vocab], axis=-1).astype(jnp.int32)
+    rows = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        pos = jnp.int32(n_fe + args.prompt_len + i)
+        logits, cache = step(params, cache, tok, pos)
+        key = jax.random.fold_in(key, i)
+        lg = logits[:, -1, : cfg.vocab]
+        if args.temperature > 0:
+            tok = jax.random.categorical(key, lg / args.temperature)[:, None]
+        else:
+            tok = jnp.argmax(lg, axis=-1)[:, None]
+        tok = tok.astype(jnp.int32)
+        rows.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(rows, axis=1)
+    print(f"decode {args.gen-1} steps: {dt:.2f}s "
+          f"({args.batch*(args.gen-1)/dt:.1f} tok/s)")
+    for b in range(min(2, args.batch)):
+        print(f"  seq{b}: {prompts[b, -6:].tolist()} => {gen[b].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro — FastKron on TPU: a JAX/Pallas Kron-Matmul training/inference framework.
+
+Reproduction of "Fast Kronecker Matrix-Matrix Multiplication on GPUs"
+(Jangda & Yadav, PPoPP 2024), adapted TPU-native and integrated as a
+first-class feature (KronLinear) of a multi-pod LM framework.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,2 @@
+"""Fault-tolerance substrate: atomic sharded checkpointing."""
+from .manager import CheckpointManager  # noqa: F401

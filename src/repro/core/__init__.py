@@ -1,0 +1,20 @@
+"""Core: the paper's contribution — FastKron Kron-Matmul in JAX."""
+from .kron import (  # noqa: F401
+    KronProblem,
+    kron_matrix,
+    kron_matmul_naive,
+    kron_matmul_shuffle,
+    kron_matmul_ftmmt,
+    kron_matmul_fastkron,
+    sliced_multiply,
+    pair_factors,
+)
+from .fastkron import kron_matmul, kron_matmul_unfused  # noqa: F401
+from .autotune import KronPlan, Stage, TileConfig, make_plan  # noqa: F401
+from .layers import (  # noqa: F401
+    KronLinearSpec,
+    kron_linear_init,
+    kron_linear_apply,
+    kron_linear_materialize,
+    balanced_factorization,
+)

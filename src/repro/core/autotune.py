@@ -1,0 +1,252 @@
+"""Autotuner for FastKron tile sizes + execution plans (contribution C5).
+
+The paper's autotuner compiles ~10k CUDA kernels and times them.  On TPU the
+equivalent search space is the Pallas block shapes; since this container has
+no TPU, candidates are scored *analytically* with a two-term (compute, HBM)
+model that knows the MXU's 128x128 systolic shape and the (8,128) VMEM tile —
+the same "narrow by resource limits, then rank" structure as the paper's §4.3.
+``measure=True`` ranks the narrowed candidates by wall clock instead, for use
+on real hardware (and exercised on CPU in tests with the XLA backend).
+
+Plan construction additionally decides, per the paper + our beyond-paper
+extension:
+
+  * fusion grouping (C3): how many consecutive factors one kernel chains,
+    bounded by ``N_fused = floor(log_P T_K)`` and the VMEM budget;
+  * factor pre-kronization (beyond paper): explicitly form F^i (x) F^{i+1}
+    when P is too small to feed the MXU's 128-deep contraction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kron import KronProblem
+
+# TPU v5e hardware model (same constants as EXPERIMENTS.md).
+PEAK_FLOPS = 197e12  # bf16
+PEAK_FLOPS_F32 = 98.5e12
+HBM_BW = 819e9  # bytes/s
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_DIM = 128
+SUBLANE = 8
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _divisors(n: int) -> list[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    t_m: int
+    t_s: int  # slices per block (T_K = t_s * P)
+    t_q: int
+
+    @property
+    def as_tuple(self) -> tuple[int, int, int]:
+        return (self.t_m, self.t_s, self.t_q)
+
+
+def vmem_elems(cfg: TileConfig, p: int, growth: float = 1.0) -> int:
+    """f32-elements resident per block (x tile, f tile, y tile), x2 buffered."""
+    x_t = cfg.t_m * cfg.t_s * p
+    f_t = p * cfg.t_q
+    y_t = int(cfg.t_m * cfg.t_q * cfg.t_s * growth)
+    return 2 * (x_t + f_t + y_t)
+
+
+def predict_seconds(
+    prob_m: int, s: int, p: int, q: int, cfg: TileConfig, dtype_bytes: int = 4
+) -> float:
+    """Two-term analytic time model for one sliced multiply on one chip."""
+    flops = 2.0 * prob_m * s * p * q
+    # MXU utilization: contraction dim padded to 128, lanes to 128, rows to 8.
+    u_c = p / _ceil_to(p, MXU_DIM)
+    u_q = cfg.t_q / _ceil_to(cfg.t_q, MXU_DIM)
+    rows = cfg.t_m * cfg.t_s
+    u_r = rows / _ceil_to(rows, SUBLANE)
+    peak = PEAK_FLOPS if dtype_bytes <= 2 else PEAK_FLOPS_F32
+    t_compute = flops / (peak * max(u_c * u_q * u_r, 1e-6))
+    # HBM traffic: X re-read once per Q-tile sweep; F negligible; Y written once.
+    x_bytes = prob_m * s * p * dtype_bytes * (q // cfg.t_q)
+    y_bytes = prob_m * s * q * dtype_bytes
+    f_bytes = p * q * dtype_bytes * (prob_m // cfg.t_m) * (s // cfg.t_s)
+    t_mem = (x_bytes + y_bytes + f_bytes) / HBM_BW
+    return max(t_compute, t_mem)
+
+
+def candidate_tiles(m: int, s: int, p: int, q: int) -> list[TileConfig]:
+    """Paper §4.3 search-space narrowing, restated for Pallas blocks."""
+    t_ms = [t for t in (1, 2, 4, 8, 16, 32) if t <= m and m % t == 0]
+    t_ss = [t for t in _divisors(s) if t <= 2048 and (t * p) % 1 == 0]
+    # keep lane-friendly slice tiles preferentially but allow all divisors
+    t_qs = _divisors(q)
+    out = []
+    for t_m, t_s, t_q in itertools.product(t_ms, t_ss, t_qs):
+        cfg = TileConfig(t_m, t_s, t_q)
+        if vmem_elems(cfg, p) * 4 > VMEM_BYTES * 3 // 4:
+            continue  # resource-limit pruning (paper: smem + regs cap)
+        out.append(cfg)
+    return out
+
+
+def tune_sliced(
+    m: int, s: int, p: int, q: int, *, dtype_bytes: int = 4
+) -> TileConfig:
+    """Best analytic tile config for a single sliced multiply."""
+    cands = candidate_tiles(m, s, p, q)
+    if not cands:
+        return TileConfig(min(m, 8), 1, 1)
+    return min(cands, key=lambda c: predict_seconds(m, s, p, q, c, dtype_bytes))
+
+
+def measure_best(
+    fn_of_cfg: Callable[[TileConfig], Callable[[], jax.Array]],
+    cands: Sequence[TileConfig],
+    *,
+    warmup: int = 2,
+    iters: int = 5,
+) -> tuple[TileConfig, float]:
+    """Wall-clock ranking of candidates (for real hardware)."""
+    best, best_t = None, float("inf")
+    for cfg in cands:
+        try:
+            fn = fn_of_cfg(cfg)
+            for _ in range(warmup):
+                fn().block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                fn().block_until_ready()
+            dt = (time.perf_counter() - t0) / iters
+        except Exception:
+            continue
+        if dt < best_t:
+            best, best_t = cfg, dt
+    if best is None:
+        raise RuntimeError("no candidate executed successfully")
+    return best, best_t
+
+
+# ---------------------------------------------------------------------------
+# Plan: pairing + fusion grouping + tiles per stage
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One kernel launch: chain ``factor_ids`` (in application order, i.e.
+    reversed problem order) inside a single fused kernel.
+
+    ``prekron=True`` means the stage's factors are first combined into their
+    explicit Kronecker product (beyond-paper MXU-utilization optimization)
+    and applied as ONE sliced multiply.
+    """
+
+    factor_ids: tuple[int, ...]
+    prekron: bool
+    tiles: TileConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class KronPlan:
+    stages: tuple[Stage, ...]
+
+    def describe(self) -> str:
+        parts = []
+        for st in self.stages:
+            kind = "prekron" if st.prekron else ("fused" if len(st.factor_ids) > 1 else "sliced")
+            parts.append(f"{kind}{list(st.factor_ids)}@{st.tiles.as_tuple}")
+        return " -> ".join(parts)
+
+
+def make_plan(
+    prob: KronProblem,
+    *,
+    dtype_bytes: int = 4,
+    enable_fusion: bool = True,
+    enable_prekron: bool = True,
+    prekron_max_p: int = 16,
+    prekron_max_dim: int = 256,
+    vmem_budget_elems: int = 2 * 1024 * 1024,
+) -> KronPlan:
+    """Greedy plan over the reversed factor list (application order).
+
+    Stage selection per position i (0 = last factor, applied first):
+      1. If P_i and P_{i+1} are both small, pre-kronize the pair (MXU win).
+      2. Else fuse as many consecutive factors as N_fused/VMEM allow (C3).
+      3. Else a single tuned sliced multiply.
+    """
+    ps = list(reversed(prob.ps))
+    qs = list(reversed(prob.qs))
+    n = len(ps)
+    stages: list[Stage] = []
+    k = prob.k
+    i = 0
+    while i < n:
+        p, q = ps[i], qs[i]
+        # -- beyond-paper pre-kronization --
+        if (
+            enable_prekron
+            and i + 1 < n
+            and p <= prekron_max_p
+            and ps[i + 1] <= prekron_max_p
+            and p * ps[i + 1] <= prekron_max_dim
+            and q * qs[i + 1] <= prekron_max_dim
+        ):
+            pp, qq = p * ps[i + 1], q * qs[i + 1]
+            s = k // pp
+            tiles = tune_sliced(prob.m, s, pp, qq, dtype_bytes=dtype_bytes)
+            stages.append(Stage((i, i + 1), True, tiles))
+            k = s * qq
+            i += 2
+            continue
+        # -- C3 fusion grouping --
+        group = [i]
+        if enable_fusion:
+            pprod, qprod = p, q
+            j = i + 1
+            while j < n:
+                np_, nq = pprod * ps[j], qprod * qs[j]
+                growth = max(1.0, nq / np_)
+                # T_K must be a multiple of prod(P); try the largest T_K that
+                # fits VMEM with a T_M of 8 (refined below).
+                t_k = min(k, np_ * max(1, (vmem_budget_elems // (8 * np_ * 4))) * 1)
+                if np_ > k or 8 * np_ * growth * 4 > vmem_budget_elems:
+                    break
+                pprod, qprod = np_, nq
+                group.append(j)
+                j += 1
+        pprod = math.prod(ps[g] for g in group)
+        qprod = math.prod(qs[g] for g in group)
+        s = k // pprod
+        tiles = tune_sliced(prob.m, s, pprod, qprod, dtype_bytes=dtype_bytes)
+        stages.append(Stage(tuple(group), False, tiles))
+        k = s * qprod
+        i = group[-1] + 1
+    return KronPlan(tuple(stages))
+
+
+__all__ = [
+    "TileConfig",
+    "Stage",
+    "KronPlan",
+    "make_plan",
+    "tune_sliced",
+    "candidate_tiles",
+    "predict_seconds",
+    "measure_best",
+    "vmem_elems",
+    "PEAK_FLOPS",
+    "HBM_BW",
+    "VMEM_BYTES",
+]

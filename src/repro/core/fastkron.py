@@ -1,0 +1,178 @@
+"""Public FastKron API: planned, differentiable Kron-Matmul.
+
+``kron_matmul(x, factors)`` computes ``x @ (F^1 (x) F^2 (x) ... (x) F^N)``
+for ``x: (..., prod P_i)`` and ``F^i: (P_i, Q_i)`` without materializing the
+Kronecker matrix, using the FastKron sliced-multiply algorithm (paper §3)
+with an execution plan (fusion grouping C3 + tile sizes C5 + beyond-paper
+pre-kronization) chosen by ``core.autotune.make_plan``.
+
+Differentiation: the VJP of a Kron-Matmul is itself Kron-shaped —
+``dX = dY @ (F^1 (x) ... (x) F^N)^T`` — so the backward pass reuses the same
+sliced-multiply machinery with per-stage transposed contractions, rather than
+relying on autodiff tracing through ``pallas_call``.  This makes the Pallas
+and XLA backends interchangeable inside ``jax.grad``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from . import autotune
+from .autotune import KronPlan, Stage, TileConfig
+from .kron import KronProblem
+
+
+# ---------------------------------------------------------------------------
+# Stage execution (forward)
+# ---------------------------------------------------------------------------
+
+
+def _stage_forward(
+    y: jax.Array, stage_factors: Sequence[jax.Array], stage: Stage, backend: str
+) -> jax.Array:
+    if stage.prekron:
+        # stage_factors are in APPLICATION order (rev[i], rev[i+1], ...);
+        # the explicit Kronecker product must be formed in PROBLEM order,
+        # i.e. kron(rev[i+1], rev[i]):  x @ (A (x) B) applies B first.
+        f = stage_factors[-1]
+        for g in reversed(stage_factors[:-1]):
+            f = jnp.kron(f, g)
+        return ops.sliced_multiply(y, f, backend=backend, tiles=stage.tiles.as_tuple)
+    if len(stage_factors) == 1:
+        return ops.sliced_multiply(
+            y, stage_factors[0], backend=backend, tiles=stage.tiles.as_tuple
+        )
+    pprod = math.prod(int(f.shape[0]) for f in stage_factors)
+    t_k = stage.tiles.t_s * pprod
+    return ops.fused_kron(
+        y, stage_factors, backend=backend, t_m=stage.tiles.t_m, t_k=t_k
+    )
+
+
+# ---------------------------------------------------------------------------
+# VJP building blocks (pure jnp; MXU-friendly einsums on TPU)
+# ---------------------------------------------------------------------------
+
+
+def _sliced_vjp_input(g: jax.Array, f: jax.Array, backend: str = "xla") -> jax.Array:
+    """du for y = sliced(u, f):  du[m, s*P+p] = sum_q g[m, q*S+s] f[p, q].
+
+    This is the TRANSPOSED sliced multiply — itself Kron-shaped, with its
+    own Pallas kernel (kernels/kron_sliced_t.py) on TPU."""
+    return ops.sliced_multiply_t(g, f, backend=backend)
+
+
+def _sliced_vjp_factor(u: jax.Array, g: jax.Array, p: int, q: int) -> jax.Array:
+    """df[p,q] = sum_{m,s} u[m, s*P+p] g[m, q*S+s]."""
+    m, k = u.shape
+    s = k // p
+    acc = jnp.promote_types(g.dtype, jnp.float32)
+    u3 = u.reshape(m, s, p)
+    g3 = g.reshape(m, q, s)
+    return jnp.einsum("msp,mqs->pq", u3.astype(acc), g3.astype(acc))
+
+
+# ---------------------------------------------------------------------------
+# Planned, differentiable core
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _build_kron_fn(n: int, backend: str, plan: KronPlan | None):
+    """Returns a custom-vjp function of (x, factors_tuple) for N factors."""
+
+    def fwd_only(x, factors):
+        # Application order: last factor first (Algorithm 1).
+        rev = tuple(reversed(factors))
+        y = x
+        if plan is None:
+            for f in rev:
+                y = ops.sliced_multiply(y, f, backend=backend)
+            return y
+        for stage in plan.stages:
+            y = _stage_forward(y, [rev[i] for i in stage.factor_ids], stage, backend)
+        return y
+
+    @jax.custom_vjp
+    def kron_fn(x, factors):
+        return fwd_only(x, factors)
+
+    def kron_fwd(x, factors):
+        # Residuals: just (x, factors).  The per-factor intermediates are
+        # recomputed in bwd (rematerialization): storing them would cost
+        # ~N*M*K extra memory, while recompute adds <= 1x forward FLOPs —
+        # the right trade inside LM training where this op lives under scan.
+        return fwd_only(x, factors), (x, factors)
+
+    def kron_bwd(res, g):
+        x, factors = res
+        rev = tuple(reversed(factors))
+        inputs = []
+        y = x
+        for i, f in enumerate(rev):
+            inputs.append(y)
+            if i + 1 < len(rev):
+                y = ops.sliced_multiply(y, f, backend="xla")
+        dfs_rev = []
+        for i in reversed(range(len(rev))):  # last applied stage first
+            f = rev[i]
+            p, q = int(f.shape[0]), int(f.shape[1])
+            u = inputs[i]
+            dfs_rev.append(_sliced_vjp_factor(u, g, p, q).astype(f.dtype))
+            g = _sliced_vjp_input(g, f, backend=backend)
+        dfs = tuple(reversed(dfs_rev))  # back to application order
+        dfactors = tuple(reversed(dfs))  # back to problem order F^1..F^N
+        return g, dfactors
+
+    kron_fn.defvjp(kron_fwd, kron_bwd)
+    return kron_fn
+
+
+def kron_matmul(
+    x: jax.Array,
+    factors: Sequence[jax.Array],
+    *,
+    backend: str = "auto",
+    plan: KronPlan | str | None = "auto",
+) -> jax.Array:
+    """``x @ (F^1 (x) ... (x) F^N)`` for ``x: (..., prod P_i)``.
+
+    plan: ``"auto"`` builds one with autotune.make_plan; ``None`` runs the
+    paper-faithful unfused per-factor path; or pass an explicit KronPlan.
+    """
+    factors = tuple(factors)
+    ps = tuple(int(f.shape[0]) for f in factors)
+    qs = tuple(int(f.shape[1]) for f in factors)
+    k = math.prod(ps)
+    if x.shape[-1] != k:
+        raise ValueError(f"x last dim {x.shape[-1]} != prod(P)={k} for {ps}")
+    lead = x.shape[:-1]
+    m = math.prod(lead) if lead else 1
+    prob = KronProblem(m, ps, qs)
+    if plan == "auto":
+        # pre-kronization trades FLOPs for MXU contraction depth — a win on
+        # the 128x128 systolic array, measured a LOSS on CPU AVX (see
+        # EXPERIMENTS.md §Perf); auto-plans enable it only on TPU.
+        plan = autotune.make_plan(
+            prob,
+            dtype_bytes=x.dtype.itemsize,
+            enable_prekron=jax.default_backend() == "tpu",
+        )
+    fn = _build_kron_fn(len(factors), backend, plan)
+    y = fn(x.reshape(m, k), factors)
+    return y.reshape(*lead, prob.k_out)
+
+
+def kron_matmul_unfused(
+    x: jax.Array, factors: Sequence[jax.Array], *, backend: str = "auto"
+) -> jax.Array:
+    """Paper-faithful Algorithm 1 without fusion/pairing (the C1 baseline)."""
+    return kron_matmul(x, factors, backend=backend, plan=None)
+
+
+__all__ = ["kron_matmul", "kron_matmul_unfused", "KronPlan", "Stage", "TileConfig"]

@@ -1,0 +1,242 @@
+"""Core Kron-Matmul algorithms.
+
+Implements, in pure JAX:
+  * a naive oracle (materialize the Kronecker matrix),
+  * the shuffle algorithm  [Davio'81; GPyTorch/PyKronecker baseline],
+  * the FTMMT-style fused contraction baseline,
+  * FastKron's sliced-multiply algorithm (paper §3, contribution C1).
+
+All support non-uniform factor shapes (P_i, Q_i).  Shapes follow the paper:
+``X: (M, prod_i P_i)``, ``F^i: (P_i, Q_i)``, ``Y: (M, prod_i Q_i)`` and the
+product applied is ``Y = X @ (F^1 ⊗ F^2 ⊗ ... ⊗ F^N)``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Problem description
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class KronProblem:
+    """Static description of a Kron-Matmul problem."""
+
+    m: int
+    ps: tuple[int, ...]  # (P_1, ..., P_N) row dims of factors
+    qs: tuple[int, ...]  # (Q_1, ..., Q_N) col dims of factors
+
+    @property
+    def n(self) -> int:
+        return len(self.ps)
+
+    @property
+    def k(self) -> int:
+        return math.prod(self.ps)
+
+    @property
+    def k_out(self) -> int:
+        return math.prod(self.qs)
+
+    @property
+    def flops(self) -> int:
+        """MAC*2 FLOPs of the sliced-multiply algorithm (paper §3).
+
+        Iteration i multiplies an (M, K_i) intermediate by F^i (P_i, Q_i):
+        output elems M*K_i*Q_i/P_i each needing P_i MACs.
+        """
+        total = 0
+        k = self.k
+        for p, q in zip(reversed(self.ps), reversed(self.qs)):
+            out_cols = (k // p) * q
+            total += 2 * self.m * out_cols * p
+            k = out_cols
+        return total
+
+    @property
+    def intermediate_elems(self) -> int:
+        """Max #elements of any intermediate (paper line 3 of Algorithm 1)."""
+        best = self.k
+        k = self.k
+        for p, q in zip(reversed(self.ps), reversed(self.qs)):
+            k = (k // p) * q
+            best = max(best, k)
+        return best
+
+    @classmethod
+    def uniform(cls, m: int, p: int, q: int, n: int) -> "KronProblem":
+        return cls(m, (p,) * n, (q,) * n)
+
+
+def _check(x: jax.Array, factors: Sequence[jax.Array]) -> KronProblem:
+    ps = tuple(int(f.shape[0]) for f in factors)
+    qs = tuple(int(f.shape[1]) for f in factors)
+    prob = KronProblem(int(x.shape[0]), ps, qs)
+    if x.ndim != 2:
+        raise ValueError(f"x must be 2-D, got {x.shape}")
+    if x.shape[1] != prob.k:
+        raise ValueError(f"x cols {x.shape[1]} != prod(P_i) {prob.k} for {ps}")
+    return prob
+
+
+# ---------------------------------------------------------------------------
+# Naive oracle
+# ---------------------------------------------------------------------------
+
+
+def kron_matrix(factors: Sequence[jax.Array]) -> jax.Array:
+    """Materialize F^1 ⊗ ... ⊗ F^N (test oracle only; O(prod P * prod Q))."""
+    g = factors[0]
+    for f in factors[1:]:
+        g = jnp.kron(g, f)
+    return g
+
+
+def kron_matmul_naive(x: jax.Array, factors: Sequence[jax.Array]) -> jax.Array:
+    """Oracle: X @ (F^1 ⊗ ... ⊗ F^N) by materializing the Kronecker matrix."""
+    _check(x, factors)
+    return x @ kron_matrix(factors)
+
+
+# ---------------------------------------------------------------------------
+# Shuffle algorithm (the GPyTorch/PyKronecker baseline)
+# ---------------------------------------------------------------------------
+
+
+def shuffle_iteration(y: jax.Array, f: jax.Array) -> jax.Array:
+    """One shuffle-algorithm iteration: reshape -> matmul -> transpose -> reshape.
+
+    This is the paper's Figure 1 (steps a-c).  The transpose materializes a
+    shuffled intermediate — the expensive step FastKron removes.
+    """
+    m, k = y.shape
+    p, q = f.shape
+    s = k // p
+    t = y.reshape(m * s, p) @ f          # (a) reshape + GEMM
+    t = t.reshape(m, s, q)
+    t = jnp.swapaxes(t, 1, 2)            # (b) transpose inner dims
+    return t.reshape(m, q * s)           # (c) reshape
+
+def shuffle_transpose_only(t: jax.Array, m: int, s: int, q: int) -> jax.Array:
+    """The isolated transpose step (for the Table-1 cost-breakdown benchmark)."""
+    return jnp.swapaxes(t.reshape(m, s, q), 1, 2).reshape(m, q * s)
+
+
+def kron_matmul_shuffle(x: jax.Array, factors: Sequence[jax.Array]) -> jax.Array:
+    """Full shuffle algorithm, iterating factors from last to first."""
+    _check(x, factors)
+    y = x
+    for f in reversed(factors):
+        y = shuffle_iteration(y, f)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# FTMMT-style baseline (transpose fused into a tensor contraction)
+# ---------------------------------------------------------------------------
+
+
+def kron_matmul_ftmmt(x: jax.Array, factors: Sequence[jax.Array]) -> jax.Array:
+    """FTMMT algorithm: represent the intermediate as a 3-D tensor and contract.
+
+    ``einsum('msp,pq->mqs')`` fuses transpose+multiply like COGENT/cuTensor —
+    but each intermediate still round-trips through "global memory" (a
+    materialized array) every iteration.  Mathematically identical to FastKron's
+    per-iteration result; the difference on real hardware is kernel-level
+    (fusion across iterations, C3), which our Pallas kernels implement.
+    """
+    _check(x, factors)
+    m = x.shape[0]
+    y = x
+    for f in reversed(factors):
+        p, q = f.shape
+        s = y.shape[1] // p
+        y = jnp.einsum("msp,pq->mqs", y.reshape(m, s, p), f).reshape(m, q * s)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# FastKron sliced-multiply algorithm (contribution C1)
+# ---------------------------------------------------------------------------
+
+
+def sliced_multiply(y: jax.Array, f: jax.Array) -> jax.Array:
+    """One FastKron iteration: Y'[m, q*S + s] = sum_p Y[m, s*P+p] * F[p, q].
+
+    Output elements are written at their final indices (paper Figure 2); on
+    TPU the Pallas kernel (kernels/kron_sliced.py) performs this with a
+    BlockSpec over the (M, Q, S) view of the output so no shuffled
+    intermediate ever exists.  This jnp version is the XLA path and oracle.
+    """
+    m, k = y.shape
+    p, q = f.shape
+    s = k // p
+    return jnp.einsum("msp,pq->mqs", y.reshape(m, s, p), f).reshape(m, q * s)
+
+
+def kron_matmul_fastkron(x: jax.Array, factors: Sequence[jax.Array]) -> jax.Array:
+    """FastKron Algorithm 1 (pure-JAX path)."""
+    _check(x, factors)
+    y = x
+    for f in reversed(factors):
+        y = sliced_multiply(y, f)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: factor pre-kronization for small P (MXU utilization)
+# ---------------------------------------------------------------------------
+
+
+def pair_factors(
+    factors: Sequence[jax.Array], max_p: int = 16, max_pair_dim: int = 256
+) -> list[jax.Array]:
+    """Fuse adjacent small factors into their explicit Kronecker product.
+
+    TPU MXU contracts 128 elements per pass; a P=8 factor leaves 94% of the
+    systolic array idle.  Multiplying by (F^i ⊗ F^{i+1}) (contraction dim P^2)
+    costs ~Q/2 x more FLOPs but lifts MXU utilization min(P^2,128)/P x and
+    halves the passes over HBM — a net win for P <= 16 (see EXPERIMENTS.md
+    §Perf for the napkin math + measured deltas).  Adjacency matters:
+    (A ⊗ B) ⊗ C == A ⊗ (B ⊗ C), so pairing preserves the product.
+    """
+    out: list[jax.Array] = []
+    i = 0
+    fs = list(factors)
+    while i < len(fs):
+        f = fs[i]
+        if (
+            i + 1 < len(fs)
+            and f.shape[0] <= max_p
+            and fs[i + 1].shape[0] <= max_p
+            and f.shape[0] * fs[i + 1].shape[0] <= max_pair_dim
+            and f.shape[1] * fs[i + 1].shape[1] <= max_pair_dim
+        ):
+            out.append(jnp.kron(f, fs[i + 1]))
+            i += 2
+        else:
+            out.append(f)
+            i += 1
+    return out
+
+
+__all__ = [
+    "KronProblem",
+    "kron_matrix",
+    "kron_matmul_naive",
+    "kron_matmul_shuffle",
+    "kron_matmul_ftmmt",
+    "kron_matmul_fastkron",
+    "sliced_multiply",
+    "shuffle_iteration",
+    "shuffle_transpose_only",
+    "pair_factors",
+]

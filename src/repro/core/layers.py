@@ -1,0 +1,116 @@
+"""KronLinear: a projection stored as Kronecker factors (paper's ML-compression
+use case, Table 4 rows 6-8 / Kronecker Recurrent Units).
+
+``W = F^1 (x) ... (x) F^N`` replaces a dense ``(d_in, d_out)`` matrix with
+``sum_i P_i*Q_i`` parameters; the forward pass is a FastKron Kron-Matmul.
+Used by the model zoo when a config sets ``kron_ffn``/``kron_proj``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .fastkron import kron_matmul
+
+
+def balanced_factorization(d: int, n: int) -> tuple[int, ...]:
+    """Split ``d`` into ``n`` integer factors as geometrically balanced as
+    possible (largest factors first).  Exact: prod(out) == d."""
+    if n <= 0:
+        raise ValueError("n must be >= 1")
+    # prime factorization
+    primes: list[int] = []
+    x = d
+    f = 2
+    while f * f <= x:
+        while x % f == 0:
+            primes.append(f)
+            x //= f
+        f += 1
+    if x > 1:
+        primes.append(x)
+    out = [1] * n
+    for p in sorted(primes, reverse=True):
+        # put the next prime on the currently-smallest bucket
+        out[min(range(n), key=lambda i: out[i])] *= p
+    return tuple(sorted(out, reverse=True))
+
+
+@dataclass(frozen=True)
+class KronLinearSpec:
+    ps: tuple[int, ...]
+    qs: tuple[int, ...]
+    use_bias: bool = False
+
+    @property
+    def d_in(self) -> int:
+        return math.prod(self.ps)
+
+    @property
+    def d_out(self) -> int:
+        return math.prod(self.qs)
+
+    @property
+    def n_params(self) -> int:
+        return sum(p * q for p, q in zip(self.ps, self.qs)) + (
+            self.d_out if self.use_bias else 0
+        )
+
+    @classmethod
+    def balanced(
+        cls, d_in: int, d_out: int, n_factors: int = 2, use_bias: bool = False
+    ) -> "KronLinearSpec":
+        return cls(
+            balanced_factorization(d_in, n_factors),
+            balanced_factorization(d_out, n_factors),
+            use_bias,
+        )
+
+
+def kron_linear_init(
+    key: jax.Array, spec: KronLinearSpec, dtype=jnp.float32
+) -> dict:
+    """Init so the composed operator matches dense fan-in scaling:
+    Var(W) = prod Var(F^i) = 1/d_in  =>  std_i = d_in^(-1/(2N))."""
+    n = len(spec.ps)
+    std = spec.d_in ** (-1.0 / (2 * n))
+    keys = jax.random.split(key, n)
+    params = {
+        "factors": tuple(
+            (jax.random.normal(k, (p, q)) * std).astype(dtype)
+            for k, p, q in zip(keys, spec.ps, spec.qs)
+        )
+    }
+    if spec.use_bias:
+        params["bias"] = jnp.zeros((spec.d_out,), dtype)
+    return params
+
+
+def kron_linear_apply(
+    params: dict, x: jax.Array, *, backend: str = "auto", plan="auto"
+) -> jax.Array:
+    y = kron_matmul(x, params["factors"], backend=backend, plan=plan)
+    if "bias" in params:
+        y = y + params["bias"]
+    return y
+
+
+def kron_linear_materialize(params: dict) -> jax.Array:
+    """Dense (d_in, d_out) equivalent — test oracle / export."""
+    w = params["factors"][0]
+    for f in params["factors"][1:]:
+        w = jnp.kron(w, f)
+    return w
+
+
+__all__ = [
+    "KronLinearSpec",
+    "kron_linear_init",
+    "kron_linear_apply",
+    "kron_linear_materialize",
+    "balanced_factorization",
+]

@@ -1,0 +1,2 @@
+"""Data substrate: deterministic, shard-aware synthetic token pipeline."""
+from .pipeline import SyntheticLM, make_batch  # noqa: F401

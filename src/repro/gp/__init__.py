@@ -1,0 +1,8 @@
+"""Gaussian-Process substrate for the paper's §6.4 case study (SKI/KISS-GP)."""
+from .ski import (  # noqa: F401
+    KronKernel,
+    conjugate_gradient,
+    gp_train_epoch,
+    interp_matrix,
+    rbf_kernel_1d,
+)

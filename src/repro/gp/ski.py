@@ -1,0 +1,129 @@
+"""Structured Kernel Interpolation (SKI / KISS-GP) with Kron-Matmul solves.
+
+Paper §6.4: SKI approximates a GP kernel as ``W (K^1 (x) ... (x) K^D) W^T``
+where each ``K^i`` is a 1-D kernel on a grid of P inducing points and ``W``
+is a sparse interpolation matrix.  Training computes ``K^-1 V`` by
+conjugate gradients whose hot operation is the Kron-Matmul of the CG
+residual block with the Kronecker kernel — exactly what FastKron
+accelerates (paper: up to 1.95x single-GPU, 6.2x on 16 GPUs).
+
+The CG batch is M=16 rows as in the paper's experiments.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core import kron as K
+from ..core.fastkron import kron_matmul
+
+
+def rbf_kernel_1d(grid: jax.Array, lengthscale: float = 0.2) -> jax.Array:
+    """(P, P) RBF kernel on a 1-D grid, jittered for PSD."""
+    d = grid[:, None] - grid[None, :]
+    k = jnp.exp(-0.5 * (d / lengthscale) ** 2)
+    return k + 1e-4 * jnp.eye(grid.shape[0])
+
+
+@dataclass(frozen=True)
+class KronKernel:
+    """K = (x)_i factors[i], each (P_i, P_i) PSD."""
+
+    factors: tuple[jax.Array, ...]
+
+    @property
+    def dim(self) -> int:
+        return math.prod(f.shape[0] for f in self.factors)
+
+    def matmul(self, v: jax.Array, *, backend: str = "fastkron") -> jax.Array:
+        """v: (M, prod P) -> v @ K  (symmetric K: right-multiply == solve op)."""
+        if backend == "fastkron":
+            return kron_matmul(v, self.factors)
+        if backend == "shuffle":
+            return K.kron_matmul_shuffle(v, list(self.factors))
+        if backend == "naive":
+            return K.kron_matmul_naive(v, list(self.factors))
+        raise ValueError(backend)
+
+
+def interp_matrix(x: jax.Array, grid_sizes: Sequence[int]) -> jax.Array:
+    """SKI's sparse W as a dense stand-in (test scale): nearest-two linear
+    interpolation per dimension, Kronecker-composed per point.
+
+    x: (n, D) in [0,1]^D.  Returns (n, prod P)."""
+    n, d = x.shape
+    ws = None
+    for j, p in enumerate(grid_sizes):
+        pos = jnp.clip(x[:, j] * (p - 1), 0, p - 1 - 1e-6)
+        lo = jnp.floor(pos).astype(jnp.int32)
+        frac = pos - lo
+        w = jnp.zeros((n, p))
+        w = w.at[jnp.arange(n), lo].set(1 - frac)
+        w = w.at[jnp.arange(n), lo + 1].set(frac)
+        ws = w if ws is None else jax.vmap(jnp.kron)(ws, w)
+    return ws
+
+
+def conjugate_gradient(
+    matvec: Callable[[jax.Array], jax.Array],
+    b: jax.Array,
+    *,
+    iters: int = 10,
+    tol: float = 0.0,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched CG on rows of b: solves A x = b with A given as row-matvec.
+
+    Fixed iteration count (paper: 10 CG iterations per epoch) under
+    lax.scan so it jits once.  Returns (x, final residual norm per row).
+    """
+    x0 = jnp.zeros_like(b)
+    r0 = b - matvec(x0)
+    p0 = r0
+
+    def body(carry, _):
+        x, r, p, rs = carry
+        ap = matvec(p)
+        denom = jnp.sum(p * ap, axis=-1, keepdims=True)
+        alpha = rs / jnp.maximum(denom, 1e-20)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.sum(r * r, axis=-1, keepdims=True)
+        beta = rs_new / jnp.maximum(rs, 1e-20)
+        p = r + beta * p
+        return (x, r, p, rs_new), None
+
+    rs0 = jnp.sum(r0 * r0, axis=-1, keepdims=True)
+    (x, r, _, _), _ = jax.lax.scan(body, (x0, r0, p0, rs0), None, length=iters)
+    return x, jnp.sqrt(jnp.sum(r * r, axis=-1))
+
+
+def gp_train_epoch(
+    kernel: KronKernel,
+    v: jax.Array,
+    *,
+    noise: float = 0.1,
+    cg_iters: int = 10,
+    backend: str = "fastkron",
+) -> tuple[jax.Array, jax.Array]:
+    """One paper-style training epoch: solve (K + noise*I)^-1 V with CG.
+
+    v: (M, dim) probe/batch block (M=16 in the paper's runs)."""
+
+    def matvec(rows):
+        return kernel.matmul(rows, backend=backend) + noise * rows
+
+    return conjugate_gradient(matvec, v, iters=cg_iters)
+
+
+__all__ = [
+    "rbf_kernel_1d",
+    "KronKernel",
+    "interp_matrix",
+    "conjugate_gradient",
+    "gp_train_epoch",
+]

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the Kron-Matmul hot spots the paper optimizes.
+
+kron_sliced.py — one sliced multiply (contributions C1+C2), BlockSpec-tiled.
+kron_fused.py  — VMEM-resident chain of sliced multiplies (contribution C3).
+ops.py         — jit'd wrappers + backend dispatch (pallas on TPU, xla else).
+ref.py         — pure-jnp oracles for the allclose sweeps in tests/.
+"""

@@ -1,0 +1,125 @@
+"""Pallas TPU kernel fusing consecutive sliced multiplies (contribution C3).
+
+The paper's fused kernel keeps intermediates in shared memory for up to
+``N_fused = floor(log_P T_K)`` factors.  The TPU analogue holds the whole
+``(T_M, T_K)`` tile chain in VMEM: one ``pallas_call`` multiplies the tile
+through ``n`` factors and stores the final block once, eliminating the
+``n-1`` intermediate HBM round-trips of the per-factor path.
+
+Correctness of per-tile fusion (why a tile can be pushed through several
+factors independently): after ``j`` multiplies the global intermediate column
+index is ``(q_vec, s)`` with ``s`` strictly inherited from the source tile's
+column range; slices of factor ``j+1`` group ``P`` *adjacent* ``s`` values of
+one ``q_vec``, so as long as ``prod(P_i) | T_K`` no slice ever crosses a tile
+boundary.  The final store target is the contiguous block
+``(T_M, prod(Q_i), T_K/prod(P_i))`` of the ``(M, prod(Q), K/prod(P))`` output
+view — the paper's STOREFUSEDSHMEM index arithmetic, expressed as a BlockSpec.
+
+VMEM budget: the live set is two tiles of ``T_M * T_K * max(1, (Q/P)^j)``
+elements (f32 accumulation), so the wrapper checks
+``T_M * T_K * growth <= vmem_budget_elems``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Conservative usable-VMEM budget (f32 elements): ~16 MiB VMEM, keep half for
+# double buffering / Mosaic temporaries.
+VMEM_BUDGET_ELEMS = 2 * 1024 * 1024
+
+
+def _fused_kernel(x_ref, *refs, ps: tuple[int, ...], qs: tuple[int, ...], acc_dtype):
+    f_refs, (y_ref,) = refs[:-1], refs[-1:]
+    t_m = x_ref.shape[0]
+    y = x_ref[...]
+    cols = x_ref.shape[1]
+    # Chain the factors, last factor first (Algorithm 1 order: callers pass
+    # factors already reversed so f_refs[0] is F^N).
+    for f_ref, p, q in zip(f_refs, ps, qs):
+        s = cols // p
+        x2 = y.reshape(t_m * s, p)
+        acc = jax.lax.dot_general(
+            x2, f_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=acc_dtype,
+        )  # (t_m*s, q)
+        # FastKron layout (m, q, s) — stays in VMEM between factors.
+        y = jnp.swapaxes(acc.reshape(t_m, s, q), 1, 2).reshape(t_m, q * s)
+        cols = q * s
+    y_ref[...] = y.reshape(y_ref.shape).astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("t_m", "t_k", "interpret", "acc_dtype", "vmem_budget_elems"),
+)
+def fused_kron_pallas(
+    x: jax.Array,
+    *factors_last_first: jax.Array,
+    t_m: int = 8,
+    t_k: int | None = None,
+    interpret: bool = False,
+    acc_dtype=None,
+    vmem_budget_elems: int = VMEM_BUDGET_ELEMS,
+) -> jax.Array:
+    """Apply ``n`` sliced multiplies in one kernel.
+
+    ``factors_last_first[0]`` is applied first (i.e. it is F^N).  Returns the
+    (M, K * prod(Q)/prod(P)) intermediate after all given factors.
+    """
+    if acc_dtype is None:
+        acc_dtype = jnp.promote_types(x.dtype, jnp.float32)
+    m, k = x.shape
+    ps = tuple(int(f.shape[0]) for f in factors_last_first)
+    qs = tuple(int(f.shape[1]) for f in factors_last_first)
+    pprod = math.prod(ps)
+    qprod = math.prod(qs)
+    if k % pprod:
+        raise ValueError(f"K={k} not divisible by prod(P)={pprod}")
+    t_m = min(t_m, m)
+    t_k = min(t_k or k, k)
+    # Fusion validity: every slice of every fused stage stays inside the tile.
+    if t_k % pprod:
+        raise ValueError(f"T_K={t_k} must be a multiple of prod(P)={pprod}")
+    growth = max(
+        [1.0]
+        + [math.prod(qs[: i + 1]) / math.prod(ps[: i + 1]) for i in range(len(ps))]
+    )
+    if t_m * t_k * growth > vmem_budget_elems:
+        raise ValueError(
+            f"tile {t_m}x{t_k} (growth {growth:.2f}) exceeds VMEM budget; "
+            f"reduce t_k or n_fused"
+        )
+    if m % t_m or k % t_k:
+        raise ValueError(f"tiles must divide dims: {(m, k)} vs {(t_m, t_k)}")
+
+    s_out = k // pprod          # global output minor dim
+    ts_out = t_k // pprod       # per-tile share of it
+    grid = (m // t_m, k // t_k)
+    in_specs = [pl.BlockSpec((t_m, t_k), lambda i, j: (i, j))]
+    for f in factors_last_first:
+        p, q = f.shape
+        in_specs.append(pl.BlockSpec((p, q), lambda i, j: (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, ps=ps, qs=qs, acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((t_m, qprod, ts_out), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, qprod, s_out), x.dtype),
+        interpret=interpret,
+    )(x, *factors_last_first)
+    return out.reshape(m, qprod * s_out)
+
+
+def max_n_fused(t_k: int, p: int) -> int:
+    """Paper: N_fused = floor(log_P T_K)."""
+    n = 0
+    while t_k >= p and t_k % p == 0:
+        t_k //= p
+        n += 1
+    return n

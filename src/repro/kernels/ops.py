@@ -1,0 +1,147 @@
+"""Jit'd wrappers + backend dispatch for the Kron-Matmul kernels.
+
+Three backends for one sliced multiply / fused chain:
+
+  * ``xla``     — the pure-jnp einsum formulation (kernels/ref.py semantics,
+                  but in the input dtype with f32 accumulation).  On CPU this
+                  is the fast path; on TPU XLA fuses it reasonably but cannot
+                  chain factors in VMEM.
+  * ``pallas``  — the Pallas TPU kernels (kron_sliced.py / kron_fused.py).
+                  ``interpret=True`` is forced automatically off-TPU so the
+                  same call sites work in this CPU container (correctness
+                  validation) and on real hardware (performance).
+  * ``auto``    — pallas on TPU, xla elsewhere.
+
+The wrappers are shape-polymorphic dispatchers, not jitted themselves: the
+underlying implementations are jitted (or meant to be called under an outer
+jit, e.g. inside train_step).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import kron_fused, kron_sliced, kron_sliced_t
+from . import ref as _ref
+
+Backend = str  # "auto" | "xla" | "pallas"
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_backend(backend: Backend) -> str:
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "xla"
+    return backend
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+def acc_dtype_for(dtype) -> jnp.dtype:
+    """f32 accumulation for <=f32 inputs, f64 for f64 (never truncate)."""
+    return jnp.promote_types(dtype, jnp.float32)
+
+
+@jax.jit
+def _sliced_xla(x: jax.Array, f: jax.Array) -> jax.Array:
+    m, k = x.shape
+    p, q = f.shape
+    s = k // p
+    acc = jax.lax.dot_general(
+        x.reshape(m * s, p), f, (((1,), (0,)), ((), ())),
+        preferred_element_type=acc_dtype_for(x.dtype),
+    )
+    return (
+        jnp.swapaxes(acc.reshape(m, s, q), 1, 2).reshape(m, q * s).astype(x.dtype)
+    )
+
+
+def sliced_multiply(
+    x: jax.Array,
+    f: jax.Array,
+    *,
+    backend: Backend = "auto",
+    tiles: tuple[int, int, int] | None = None,
+) -> jax.Array:
+    """One FastKron sliced multiply: (M, K) x (P, Q) -> (M, K//P*Q)."""
+    b = resolve_backend(backend)
+    if b == "xla":
+        return _sliced_xla(x, f)
+    t_m, t_s, t_q = tiles or (8, None, None)
+    return kron_sliced.sliced_multiply_pallas(
+        x, f, t_m=t_m, t_s=t_s, t_q=t_q, interpret=_interpret()
+    )
+
+
+@jax.jit
+def _sliced_t_xla(dy: jax.Array, f: jax.Array) -> jax.Array:
+    m, l = dy.shape
+    p, q = f.shape
+    s = l // q
+    acc = jax.lax.dot_general(
+        jnp.swapaxes(dy.reshape(m, q, s), 1, 2).reshape(m * s, q),
+        jnp.swapaxes(f, 0, 1),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=acc_dtype_for(dy.dtype),
+    )
+    return acc.reshape(m, s * p).astype(dy.dtype)
+
+
+def sliced_multiply_t(
+    dy: jax.Array,
+    f: jax.Array,
+    *,
+    backend: Backend = "auto",
+    tiles: tuple[int, int, int] | None = None,
+) -> jax.Array:
+    """Transposed sliced multiply (C1 backward): (M, Q*S) x (P,Q) -> (M, S*P)."""
+    b = resolve_backend(backend)
+    if b == "xla":
+        return _sliced_t_xla(dy, f)
+    t_m, t_s, t_q = tiles or (8, None, None)
+    return kron_sliced_t.sliced_multiply_t_pallas(
+        dy, f, t_m=t_m, t_s=t_s, t_q=t_q, interpret=_interpret()
+    )
+
+
+def fused_kron(
+    x: jax.Array,
+    factors_last_first: Sequence[jax.Array],
+    *,
+    backend: Backend = "auto",
+    t_m: int = 8,
+    t_k: int | None = None,
+) -> jax.Array:
+    """Chain of sliced multiplies in one kernel (C3).  factors[0] == F^N."""
+    b = resolve_backend(backend)
+    if b == "xla":
+        y = x
+        for f in factors_last_first:
+            y = _sliced_xla(y, f)
+        return y
+    return kron_fused.fused_kron_pallas(
+        x, *factors_last_first, t_m=t_m, t_k=t_k, interpret=_interpret()
+    )
+
+
+# Re-export the oracles so tests can import one module.
+sliced_multiply_ref = _ref.sliced_multiply_ref
+fused_kron_ref = _ref.fused_kron_ref
+sliced_multiply_t_ref = _ref.sliced_multiply_t_ref
+
+__all__ = [
+    "sliced_multiply",
+    "sliced_multiply_t",
+    "fused_kron",
+    "resolve_backend",
+    "sliced_multiply_ref",
+    "sliced_multiply_t_ref",
+    "fused_kron_ref",
+]

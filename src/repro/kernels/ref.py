@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each function mirrors the signature of its kernel wrapper in ``ops.py`` and is
+the ground truth for the per-kernel allclose sweeps in tests/.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def sliced_multiply_ref(x: jax.Array, f: jax.Array) -> jax.Array:
+    """Y[m, q*S+s] = sum_p X[m, s*P+p] * F[p, q]  (paper Figure 2)."""
+    m, k = x.shape
+    p, q = f.shape
+    s = k // p
+    acc = jnp.einsum(
+        "msp,pq->mqs",
+        x.reshape(m, s, p).astype(jnp.float32),
+        f.astype(jnp.float32),
+    )
+    return acc.reshape(m, q * s).astype(x.dtype)
+
+
+def fused_kron_ref(x: jax.Array, factors: Sequence[jax.Array]) -> jax.Array:
+    """Chain of sliced multiplies, applied last factor first (Algorithm 1)."""
+    y = x
+    for f in reversed(list(factors)):
+        y = sliced_multiply_ref(y, f)
+    return y
+
+
+def sliced_multiply_t_ref(dy: jax.Array, f: jax.Array) -> jax.Array:
+    """dX[m, s*P+p] = sum_q dY[m, q*S+s] F[p, q]  (backward of C1)."""
+    m, l = dy.shape
+    p, q = f.shape
+    s = l // q
+    acc = jnp.einsum(
+        "mqs,pq->msp",
+        dy.reshape(m, q, s).astype(jnp.float32),
+        f.astype(jnp.float32),
+    )
+    return acc.reshape(m, s * p).astype(dy.dtype)

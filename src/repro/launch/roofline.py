@@ -1,0 +1,114 @@
+"""Roofline report generator: experiments/dryrun/*.json -> markdown tables.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--dir experiments/dryrun]
+
+Per (arch x shape x mesh): the three roofline terms (compute / HBM /
+collective seconds per step, per chip), dominant bottleneck, MODEL_FLOPS
+vs HLO FLOPs ratio, HBM fit, and a one-line "what would move the dominant
+term" note.  Also ranks cells for the §Perf hillclimb (worst roofline
+fraction / most collective-bound / most paper-representative).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+HW = "TPU v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s/link ICI"
+
+SUGGESTIONS = {
+    ("memory_s", "train"): "fuse norm/residual f32 round-trips; bf16 boundaries",
+    ("memory_s", "prefill"): "fuse attention softmax pipeline (flash kernel)",
+    ("memory_s", "decode"): "quantize KV cache; fuse cache-update+attention",
+    ("collective_s", "train"): "overlap FSDP gathers with compute; bf16 collectives",
+    ("collective_s", "prefill"): "shard KV heads not hd; fewer norm reshards",
+    ("collective_s", "decode"): "replicate small weights; batch cache collectives",
+    ("compute_s", "train"): "already MXU-bound: raise arithmetic intensity",
+    ("compute_s", "prefill"): "already MXU-bound",
+    ("compute_s", "decode"): "already MXU-bound",
+}
+
+
+def load(dir_: str):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def step_time(rec) -> float:
+    t = rec["roofline"]
+    return max(t["compute_s"], t["memory_s"], t["collective_s"])
+
+
+def roofline_fraction(rec) -> float:
+    """ideal/achieved step time.
+
+    train/prefill: ideal = MODEL_FLOPS at peak MXU (compute roofline).
+    decode: one token must stream weights+cache once from HBM — the
+    bandwidth roofline: ideal = argument bytes / HBM_BW (compute ideal is
+    meaningless at batch*1 token granularity)."""
+    t = rec["roofline"]
+    if rec["meta"]["kind"] == "decode":
+        args = rec["memory_analysis"].get("argument_size_in_bytes", 0)
+        ideal = args / 819e9
+    else:
+        ideal = t["model_flops_per_device"] / 197e12
+    return ideal / max(step_time(rec), 1e-12)
+
+
+def table(recs, mesh: str) -> str:
+    rows = [
+        "| arch | shape | comp (ms) | HBM (ms) | coll (ms) | dominant | "
+        "useful | RF | peak GB | fit |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        t = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']*1e3:.2f} | "
+            f"{t['memory_s']*1e3:.2f} | {t['collective_s']*1e3:.2f} | "
+            f"{t['dominant'].removesuffix('_s')} | "
+            f"{t['useful_flops_ratio']:.2f} | {roofline_fraction(r):.4f} | "
+            f"{r['peak_bytes_per_device']/1e9:.2f} | "
+            f"{'Y' if r['fits_hbm'] else 'N'} |"
+        )
+    return "\n".join(rows)
+
+
+def pick_hillclimb(recs) -> list[tuple[str, str]]:
+    single = [r for r in recs if r["mesh"] == "16x16"]
+    worst_rf = min(single, key=roofline_fraction)
+    most_coll = max(
+        single,
+        key=lambda r: r["roofline"]["collective_s"] / max(step_time(r), 1e-12)
+        * (1 if r["roofline"]["dominant"] == "collective_s" else 0.5),
+    )
+    return [
+        (worst_rf["arch"], worst_rf["shape"], "worst roofline fraction"),
+        (most_coll["arch"], most_coll["shape"], "most collective-bound"),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print(f"# Roofline ({HW})\n")
+    for mesh in ("16x16", "2x16x16"):
+        n = sum(1 for r in recs if r["mesh"] == mesh)
+        print(f"## mesh {mesh} ({n} cells)\n")
+        print(table(recs, mesh))
+        print()
+    print("## hillclimb candidates (single-pod)\n")
+    for arch, shape, why in pick_hillclimb(recs):
+        print(f"* {arch} {shape} — {why}")
+    print("* (third pick: most paper-representative — set manually)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Batched serving launcher: prefill a batch of prompts, then decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
+        --batch 4 --prompt-len 32 --gen 16
+
+Serving path: jitted prefill builds the KV/SSM cache for the whole batch,
+then a jitted single-token serve_step runs the autoregressive loop (greedy
+or temperature sampling).  Cache is donated each step (in-place ring-buffer
+update on real hardware).  Reports prefill and decode tokens/s.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..data import SyntheticLM
+from ..models.config import reduced as reduce_cfg
+from ..runtime.fault import elastic_mesh
+from ..train import make_prefill_step, make_serve_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--want-model-parallel", type=int, default=16)
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache (halves serving memory)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg, dtype="float32")
+    if args.kv_quant:
+        from dataclasses import replace
+
+        cfg = replace(cfg, kv_quant=True)
+    mesh = elastic_mesh(jax.device_count(), want_model=args.want_model_parallel)
+    max_len = args.prompt_len + args.gen
+
+    with mesh:
+        from ..models import model as M
+
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        data = SyntheticLM(vocab=cfg.vocab, seq_len=args.prompt_len,
+                           batch=args.batch)
+        prompts, _ = data.global_batch(0)
+
+        prefill = jax.jit(make_prefill_step(cfg, max_len=max_len))
+        step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+        t0 = time.time()
+        logits, cache = prefill(params, prompts)
+        jax.block_until_ready(logits)
+        t_prefill = time.time() - t0
+
+        def sample(logits, key):
+            lg = logits[:, -1, : cfg.vocab]
+            if args.temperature <= 0:
+                return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            return jax.random.categorical(key, lg / args.temperature).astype(
+                jnp.int32
+            )
+
+        key = jax.random.PRNGKey(1)
+        tok = sample(logits, key)[:, None]
+        out_tokens = [tok]
+        t0 = time.time()
+        for i in range(args.gen - 1):
+            key = jax.random.fold_in(key, i)
+            logits, cache = step(params, cache, tok, jnp.int32(args.prompt_len + i))
+            tok = sample(logits, key)[:, None]
+            out_tokens.append(tok)
+        jax.block_until_ready(tok)
+        t_decode = time.time() - t0
+
+    gen = jnp.concatenate(out_tokens, axis=1)
+    print(f"generated shape: {gen.shape}")
+    print(f"sample row: {gen[0, :12].tolist()}")
+    pre_tps = args.batch * args.prompt_len / max(t_prefill, 1e-9)
+    dec_tps = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"prefill: {t_prefill:.2f}s ({pre_tps:.0f} tok/s)  "
+          f"decode: {t_decode:.2f}s ({dec_tps:.0f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

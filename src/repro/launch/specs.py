@@ -1,0 +1,185 @@
+"""input_specs: ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no
+device allocation) for every (arch x shape) dry-run cell, plus the jitted
+step builder each cell lowers.
+
+Cell kinds:
+  train_4k    -> train_step(state, batch)
+  prefill_32k -> prefill_step(params, tokens[, embeds])
+  decode_32k / long_500k -> serve_step(params, cache, tokens, pos)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, ShapeSpec, get_config
+from ..models import model as M
+from ..models.config import ModelConfig
+from ..optim.adamw import OptConfig, opt_init
+from ..runtime.sharding import cache_shardings, param_shardings, token_sharding
+from ..train.steps import (
+    TrainState,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+
+# per-arch training overrides for the production meshes: activation memory
+# (microbatches) and optimizer-state dtype (100B+ models need bf16 m/v to
+# fit 256 chips; DESIGN.md §8)
+TRAIN_OVERRIDES: dict[str, dict] = {
+    "jamba-1.5-large-398b": dict(
+        microbatches=16, state_dtype="bfloat16", acc_dtype="bfloat16"
+    ),
+    "mixtral-8x22b": dict(microbatches=8, state_dtype="bfloat16"),
+    # mb=8 -> 4 after TP-sharded boundaries freed memory: halves the
+    # per-microbatch FSDP weight regathers (§Perf C1 iteration 5)
+    "qwen2.5-32b": dict(microbatches=4),
+}
+DEFAULT_MICROBATCHES = 4
+
+# decode-cell overrides: int8 KV cache for the archs whose bf16 cache (plus
+# XLA:CPU loop-carry copies) exceeds 16 GB/chip on the single-pod mesh —
+# halves the dominant serving buffer (§Perf "beyond the three cells")
+SERVE_OVERRIDES: dict[str, dict] = {
+    "qwen2.5-32b": dict(kv_quant=True),
+    "musicgen-large": dict(kv_quant=True),
+    "jamba-1.5-large-398b": dict(kv_quant=True),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _with_sharding(tree_shapes: Any, tree_shardings: Any) -> Any:
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree_shapes,
+        tree_shardings,
+    )
+
+
+@dataclasses.dataclass
+class Cell:
+    """Everything the dry-run needs to lower one (arch x shape x mesh)."""
+
+    arch: str
+    shape: ShapeSpec
+    cfg: ModelConfig
+    fn: Any                 # callable to jit
+    in_specs: tuple         # ShapeDtypeStructs with shardings
+    in_shardings: tuple
+    out_shardings: Any
+    meta: dict
+
+
+def _param_structs(cfg: ModelConfig, mesh: Mesh, *, fsdp_pods: bool):
+    p_shape = jax.eval_shape(partial(M.init_params, cfg), jax.random.PRNGKey(0))
+    p_shard = param_shardings(
+        p_shape, mesh, fsdp_pods=fsdp_pods, tied_embed=cfg.tie_embeddings
+    )
+    return _with_sharding(p_shape, p_shard), p_shard
+
+
+def _needs_pod_fsdp(cfg: ModelConfig, mesh: Mesh, state_dtype: str) -> bool:
+    """Shard weights over pods too when one pod's HBM is tight for the
+    state (params + m + v + grad/accumulator headroom)."""
+    if "pod" not in mesh.axis_names:
+        return False
+    bytes_per_param = 2 + 2 + 2 * (4 if state_dtype == "float32" else 2)
+    pod_devices = mesh.shape["data"] * mesh.shape["model"]
+    return cfg.param_count() * bytes_per_param > 0.25 * pod_devices * 16e9
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode":
+        sov = SERVE_OVERRIDES.get(cfg.name, {})
+        if sov:
+            cfg = dataclasses.replace(cfg, **sov)
+    s, b = shape.seq_len, shape.global_batch
+    ov = TRAIN_OVERRIDES.get(cfg.name, {})
+    state_dtype = ov.get("state_dtype", "float32")
+    fsdp_pods = _needs_pod_fsdp(cfg, mesh, state_dtype)
+    params, p_shard = _param_structs(cfg, mesh, fsdp_pods=fsdp_pods)
+    tok_sh = token_sharding(mesh, b)
+    n_fe = cfg.n_frontend_tokens
+    meta = dict(arch=arch, shape=shape_name, kind=shape.kind,
+                mesh=dict(mesh.shape), fsdp_pods=fsdp_pods)
+
+    if shape.kind == "train":
+        opt_cfg = OptConfig(state_dtype=state_dtype)
+        opt_shape = jax.eval_shape(partial(opt_init, cfg=opt_cfg), params)
+        opt_shard = jax.tree.map(
+            lambda s_, p_sh: NamedSharding(mesh, P())
+            if s_.ndim == 0
+            else p_sh,
+            opt_shape,
+            {"m": p_shard, "v": p_shard, "step": NamedSharding(mesh, P())},
+        )
+        state = TrainState(
+            params,
+            _with_sharding(opt_shape, opt_shard),
+            _sds((), jnp.int32),
+        )
+        state_sh = TrainState(p_shard, opt_shard, NamedSharding(mesh, P()))
+        tokens = jax.ShapeDtypeStruct((b, s - n_fe), jnp.int32, sharding=tok_sh)
+        labels = jax.ShapeDtypeStruct((b, s - n_fe), jnp.int32, sharding=tok_sh)
+        batch = {"tokens": tokens, "labels": labels}
+        batch_sh = {"tokens": tok_sh, "labels": tok_sh}
+        if n_fe:
+            e_sh = NamedSharding(mesh, P(tok_sh.spec[0], None, None))
+            batch["embeds"] = jax.ShapeDtypeStruct(
+                (b, n_fe, cfg.d_model), jnp.dtype(cfg.dtype), sharding=e_sh
+            )
+            batch_sh["embeds"] = e_sh
+        microbatches = ov.get("microbatches", DEFAULT_MICROBATCHES)
+        fn = make_train_step(
+            cfg, opt_cfg, microbatches=microbatches, with_embeds=bool(n_fe),
+            acc_dtype=jnp.dtype(ov.get("acc_dtype", "float32")),
+        )
+        meta.update(microbatches=microbatches, state_dtype=state_dtype,
+                    params=cfg.param_count(),
+                    params_active=cfg.param_count(active_only=True))
+        return Cell(arch, shape, cfg, fn, (state, batch),
+                    (state_sh, batch_sh), (state_sh, None), meta)
+
+    if shape.kind == "prefill":
+        tokens = jax.ShapeDtypeStruct((b, s - n_fe), jnp.int32, sharding=tok_sh)
+        cache_shape = jax.eval_shape(lambda: M.init_cache(cfg, b, s))
+        cache_sh = cache_shardings(cache_shape, mesh, b)
+        fn = make_prefill_step(cfg, max_len=s, with_embeds=bool(n_fe))
+        args = [params, tokens]
+        shards = [p_shard, tok_sh]
+        if n_fe:
+            e_sh = NamedSharding(mesh, P(tok_sh.spec[0], None, None))
+            args.append(jax.ShapeDtypeStruct(
+                (b, n_fe, cfg.d_model), jnp.dtype(cfg.dtype), sharding=e_sh))
+            shards.append(e_sh)
+        meta.update(params=cfg.param_count())
+        return Cell(arch, shape, cfg, fn, tuple(args), tuple(shards),
+                    (None, cache_sh), meta)
+
+    # decode: one new token against a seq_len-deep cache
+    cache_shape = jax.eval_shape(lambda: M.init_cache(cfg, b, s))
+    cache_sh = cache_shardings(cache_shape, mesh, b)
+    cache = _with_sharding(cache_shape, cache_sh)
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32, sharding=tok_sh)
+    pos = _sds((), jnp.int32)
+    fn = make_serve_step(cfg)
+    meta.update(params=cfg.param_count())
+    return Cell(arch, shape, cfg, fn,
+                (params, cache, tokens, pos),
+                (p_shard, cache_sh, tok_sh, NamedSharding(mesh, P())),
+                (None, cache_sh), meta)
+
+
+__all__ = ["build_cell", "Cell", "TRAIN_OVERRIDES"]

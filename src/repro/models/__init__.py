@@ -1,0 +1,8 @@
+"""Model zoo: composable LM definitions covering the 10 assigned architectures.
+
+Pure-functional JAX: ``init_params(cfg, key)`` builds a pytree;
+``forward`` / ``prefill`` / ``decode_step`` are pure functions of it.
+Layer stacks are scanned over the config's repeating layer *period* so a
+72-layer hybrid lowers as 9 scan steps, not 72 inlined blocks.
+"""
+from .config import ModelConfig, MoEConfig, MambaConfig, LayerSpec  # noqa: F401

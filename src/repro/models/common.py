@@ -1,0 +1,57 @@
+"""Shared model components: norms, RoPE, initializers, activations."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm: variance reduction in f32, tensor-wide math in the input
+    dtype.  Keeping the (B,S,D)-wide intermediates bf16 matters at scale:
+    XLA places the TP boundary collectives on whatever dtype the adjacent
+    tensors carry — an all-f32 norm was measured to turn every residual
+    psum/gather into f32 (2x collective bytes; EXPERIMENTS.md §Perf C1.it2)."""
+    dt = x.dtype
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(dt)
+    return x * inv * (1.0 + scale).astype(dt)
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, dtype) -> jax.Array:
+    """Truncated-normal fan-in init (LeCun) — standard for LM projections."""
+    std = d_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out)) * std).astype(
+        dtype
+    )
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x, approximate=True)}[
+        name
+    ]
+
+
+__all__ = ["rms_norm", "dense_init", "embed_init", "apply_rope", "rope_freqs", "act_fn"]

@@ -1,0 +1,49 @@
+"""Gated FFN (SwiGLU / GeGLU) + the Kron-compressed variant (paper feature).
+
+``kron_ffn`` swaps the three dense projections for KronLinear factors —
+the paper's ML-compression use case (Table 4 rows 6-8): parameters drop
+from ``3*d*f`` to ``3*sum(P_i*Q_i)`` and every projection becomes a
+FastKron Kron-Matmul.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.layers import (
+    KronLinearSpec,
+    kron_linear_apply,
+    kron_linear_init,
+)
+from .common import act_fn, dense_init
+from .config import ModelConfig
+
+
+def ffn_init(key: jax.Array, cfg: ModelConfig, dtype, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.kron_ffn:
+        up = KronLinearSpec.balanced(d, f, cfg.kron_factors)
+        down = KronLinearSpec.balanced(f, d, cfg.kron_factors)
+        return {
+            "w1": kron_linear_init(k1, up, dtype),
+            "w3": kron_linear_init(k2, up, dtype),
+            "w2": kron_linear_init(k3, down, dtype),
+        }
+    return {
+        "w1": dense_init(k1, d, f, dtype),
+        "w3": dense_init(k2, d, f, dtype),
+        "w2": dense_init(k3, f, d, dtype),
+    }
+
+
+def ffn_apply(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    act = act_fn(cfg.ffn_act)
+    if cfg.kron_ffn:
+        h = act(kron_linear_apply(p["w1"], x)) * kron_linear_apply(p["w3"], x)
+        return kron_linear_apply(p["w2"], h)
+    h = act(x @ p["w1"]) * (x @ p["w3"])
+    return h @ p["w2"]
+
+
+__all__ = ["ffn_init", "ffn_apply"]

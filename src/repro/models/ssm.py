@@ -1,0 +1,241 @@
+"""Mamba2 (SSD — state-space duality) block: chunked train/prefill scan +
+O(1)-state recurrent decode.  [arXiv:2405.21060]
+
+Recurrence (per head h, A scalar per head):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t (x) x_t      h: (N, P)
+    y_t = C_t . h_t + D * x_t
+
+Training uses the chunked SSD form: within a chunk the output is a masked
+(C B^T)-weighted matmul (MXU-friendly); across chunks a short ``lax.scan``
+carries the (H, N, P) state.  Projections are kept separate (z/x/B/C/dt)
+rather than fused so each is cleanly TP-shardable.
+
+Jamba note (DESIGN.md §Arch-applicability): Jamba-1.5 ships Mamba-1 layers;
+we use this SSD block for its mamba positions — the TPU-native successor
+formulation with the same state-space interface.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..runtime.sharding import constrain, tp_size
+from .common import dense_init, rms_norm
+from .config import ModelConfig
+
+
+def _dims(cfg: ModelConfig):
+    mc = cfg.mamba
+    d = cfg.d_model
+    din = mc.d_inner(d)
+    nh = mc.n_heads(d)
+    return mc, d, din, nh, mc.d_state, mc.n_groups
+
+
+def mamba_init(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    mc, d, din, nh, n, g = _dims(cfg)
+    conv_dim = din + 2 * g * n
+    ks = jax.random.split(key, 8)
+    # dt in [1e-3, 1e-1] log-uniform; store inverse-softplus as bias
+    dt = jnp.exp(
+        jax.random.uniform(ks[0], (nh,)) * (math.log(0.1) - math.log(1e-3))
+        + math.log(1e-3)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # softplus^-1
+    a_init = jax.random.uniform(ks[1], (nh,), minval=1.0, maxval=16.0)
+    return {
+        "wz": dense_init(ks[2], d, din, dtype),
+        "wx": dense_init(ks[3], d, din, dtype),
+        "wb": dense_init(ks[4], d, g * n, dtype),
+        "wc": dense_init(ks[5], d, g * n, dtype),
+        "wdt": dense_init(ks[6], d, nh, dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "a_log": jnp.log(a_init).astype(jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "conv_w": (jax.random.normal(ks[7], (mc.d_conv, conv_dim)) *
+                   (mc.d_conv ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "norm": jnp.zeros((din,), dtype),
+        "wo": dense_init(jax.random.fold_in(key, 99), din, d, dtype),
+    }
+
+
+def _proj_conv(cfg, p, x, conv_state=None):
+    """Project + causal depthwise conv.  x: (B,S,D).
+    Returns z, xh (B,S,H,P), bh/ch (B,S,G,N), dt (B,S,H) and new conv tail."""
+    mc, d, din, nh, n, g = _dims(cfg)
+    b, s, _ = x.shape
+    z = x @ p["wz"]                       # (B,S,din)
+    xbc = jnp.concatenate([x @ p["wx"], x @ p["wb"], x @ p["wc"]], axis=-1)
+    width = mc.d_conv
+    if conv_state is None:
+        pad = jnp.zeros((b, width - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = conv_state
+    xbc_pad = jnp.concatenate([pad, xbc], axis=1)  # (B, S+w-1, C)
+    # causal depthwise conv as a sum of shifted slices (w is tiny: 4)
+    out = jnp.zeros_like(xbc)
+    for i in range(width):
+        out = out + xbc_pad[:, i : i + s] * p["conv_w"][i]
+    xbc = jax.nn.silu(out + p["conv_b"])
+    new_tail = xbc_pad[:, -(width - 1):] if width > 1 else pad
+    xh = xbc[..., :din].reshape(b, s, nh, mc.head_dim)
+    bh = xbc[..., din : din + g * n].reshape(b, s, g, n)
+    ch = xbc[..., din + g * n :].reshape(b, s, g, n)
+    dt = jax.nn.softplus(
+        (x @ p["wdt"]).astype(jnp.float32) + p["dt_bias"]
+    )  # (B,S,H) f32
+    return z, xh, bh, ch, dt, new_tail
+
+
+def _expand_groups(t: jax.Array, nh: int) -> jax.Array:
+    """(B,S,G,N) -> (B,S,H,N) broadcasting each group over H/G heads."""
+    b, s, g, n = t.shape
+    rep = nh // g
+    return jnp.broadcast_to(t[:, :, :, None, :], (b, s, g, rep, n)).reshape(
+        b, s, nh, n
+    )
+
+
+def mamba_forward(
+    cfg: ModelConfig, p: dict, x: jax.Array, *, return_state: bool = False
+):
+    """Chunked SSD scan.  x: (B,S,D) with chunk | S (pad upstream)."""
+    mc, d, din, nh, n, g = _dims(cfg)
+    b, s, _ = x.shape
+    z, xh, bh, ch, dt, conv_tail = _proj_conv(cfg, p, x)
+    # SSD streams ride the MODEL dtype (bf16 at scale — halves the dominant
+    # HBM traffic, §Perf C2); only the decay/cumsum math and the carried
+    # state stay f32.  Weight values are bounded (w <= dt_max), bf16-safe.
+    sdt = x.dtype
+    bh = _expand_groups(bh, nh).astype(sdt)
+    ch = _expand_groups(ch, nh).astype(sdt)
+    xh32 = xh.astype(sdt)
+    a = -jnp.exp(p["a_log"])              # (H,) negative
+    da = dt * a                           # (B,S,H) log-decay per step, f32
+
+    lc = min(mc.chunk, s)
+    if s % lc:
+        lc = math.gcd(s, lc)
+    nc = s // lc
+    ph = mc.head_dim
+
+    # NOTE §Perf C2 it3 (refuted): sharding the chunk axis over "tp" (SSD
+    # context parallelism) was tried here and REVERTED — XLA inserted
+    # resharding copies around the inter-chunk scan that cost more HBM
+    # traffic than the head-dim fallback it replaced (1.93s -> 2.36s).
+
+    def chunk(arr, feat_shape):
+        return arr.reshape(b, nc, lc, *feat_shape)
+
+    xc = chunk(xh32, (nh, ph))
+    bc = chunk(bh, (nh, n))
+    cc = chunk(ch, (nh, n))
+    dac = chunk(da, (nh,))
+    dtc = chunk(dt, (nh,))
+
+    cum = jnp.cumsum(dac, axis=2)          # (B,nc,lc,H) inclusive, f32
+    total = cum[:, :, -1:, :]              # (B,nc,1,H)
+
+    # intra-chunk: Y[i] = sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) dt_j X_j
+    smat = jnp.einsum("bclhn,bckhn->bchlk", cc, bc)  # (B,nc,H,lc,lc)
+    cum_t = jnp.swapaxes(cum, 2, 3)        # (B,nc,H,lc)
+    logw = cum_t[..., :, None] - cum_t[..., None, :]  # cum_i - cum_j
+    mask = jnp.tril(jnp.ones((lc, lc), bool))
+    # mask in log space BEFORE exp: keeps gradients NaN-free (no inf * 0)
+    logw = jnp.where(mask, logw, -1e30)
+    dt_j = jnp.swapaxes(dtc, 2, 3)[..., None, :]      # (B,nc,H,1,lc)
+    w = (jnp.exp(logw) * dt_j).astype(sdt)
+    y_intra = jnp.einsum(
+        "bchlk,bckhp->bclhp", smat * w, xc,
+        preferred_element_type=jnp.float32,
+    )
+
+    # chunk states: S_c = sum_j exp(total - cum_j) dt_j B_j (x) X_j  (H,N,P)
+    decay_to_end = (jnp.exp(total - cum) * dtc).astype(sdt)  # (B,nc,lc,H)
+    sstate = jnp.einsum(
+        "bclh,bclhn,bclhp->bchnp", decay_to_end, bc, xc,
+        preferred_element_type=jnp.float32,
+    )
+
+    # inter-chunk scan over nc: h_c = h_{c-1} * exp(total_c) + S_c
+    chunk_decay = jnp.exp(total[:, :, 0, :])  # (B,nc,H)
+
+    def scan_body(h, inp):
+        s_c, dec = inp                     # (B,H,N,P), (B,H)
+        h_prev = h
+        h = h * dec[..., None, None] + s_c
+        return h, h_prev
+
+    h0 = jnp.zeros((b, nh, n, ph), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        scan_body,
+        h0,
+        (jnp.swapaxes(sstate, 0, 1), jnp.swapaxes(chunk_decay, 0, 1)),
+    )
+    h_prevs = jnp.swapaxes(h_prevs, 0, 1)  # (B,nc,H,N,P) state entering chunk
+
+    # inter contribution: Y[i] += C_i . (h_prev * exp(cum_i))
+    y_inter = jnp.einsum(
+        "bclhn,bchnp->bclhp",
+        (cc * jnp.exp(cum).astype(sdt)[..., None]),
+        h_prevs,
+        preferred_element_type=jnp.float32,
+    )
+
+    y = (y_intra + y_inter).reshape(b, s, nh, ph)
+    y = y + xh32 * p["d_skip"][:, None]
+    y = y.reshape(b, s, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["wo"]
+    if return_state:
+        return out, (conv_tail, h_final)
+    return out
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # (B, d_conv-1, conv_dim)
+    h: jax.Array      # (B, H, N, P) f32
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype) -> MambaCache:
+    mc, d, din, nh, n, g = _dims(cfg)
+    conv_dim = din + 2 * g * n
+    return MambaCache(
+        conv=jnp.zeros((batch, mc.d_conv - 1, conv_dim), dtype),
+        h=jnp.zeros((batch, nh, n, mc.head_dim), jnp.float32),
+    )
+
+
+def mamba_decode(
+    cfg: ModelConfig, p: dict, x: jax.Array, cache: MambaCache
+) -> tuple[jax.Array, MambaCache]:
+    """One token.  x: (B, 1, D)."""
+    mc, d, din, nh, n, g = _dims(cfg)
+    b = x.shape[0]
+    z, xh, bh, ch, dt, conv_tail = _proj_conv(cfg, p, x, conv_state=cache.conv)
+    bh = _expand_groups(bh, nh).astype(jnp.float32)[:, 0]   # (B,H,N)
+    ch = _expand_groups(ch, nh).astype(jnp.float32)[:, 0]
+    xh32 = xh.astype(jnp.float32)[:, 0]                      # (B,H,P)
+    dt = dt[:, 0]                                            # (B,H)
+    a = -jnp.exp(p["a_log"])
+    dec = jnp.exp(dt * a)                                    # (B,H)
+    h = cache.h * dec[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dt, bh, xh32
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", ch, h) + xh32 * p["d_skip"][:, None]
+    y = y.reshape(b, 1, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["wo"], MambaCache(conv=conv_tail, h=h)
+
+
+__all__ = [
+    "mamba_init",
+    "mamba_forward",
+    "mamba_decode",
+    "mamba_cache_init",
+    "MambaCache",
+]

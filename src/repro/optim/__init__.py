@@ -1,0 +1,2 @@
+"""Optimizer substrate: AdamW + schedules + gradient compression."""
+from .adamw import OptConfig, opt_init, opt_update, lr_at  # noqa: F401

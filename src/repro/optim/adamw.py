@@ -1,0 +1,134 @@
+"""AdamW with cosine schedule, global-norm clipping, configurable state
+dtype (ZeRO-friendly: m/v can be bf16 to fit 100B+ models on small meshes)
+and gradient compression with error feedback.
+
+State sharding: m/v mirror the parameter pytree, so the same NamedShardings
+apply — with FSDP'd params the optimizer state is automatically ZeRO-3
+partitioned.
+
+Gradient compression (``compress="bf16"|"int8"``): quantize gradients with a
+persistent error-feedback residual (the standard trick that keeps SGD/Adam
+convergence unharmed).  On a real pod this quantization is what rides the
+DP reduce-scatter (half / quarter traffic); under a single jit the reduction
+is XLA-inserted, so the hook quantizes post-reduce — same numerics, comm
+saving documented in DESIGN.md §8.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"      # "float32" | "bfloat16"
+    compress: str | None = None        # None | "bf16" | "int8"
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(math.pi * prog))
+    scale = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+def opt_init(params: Any, cfg: OptConfig) -> dict:
+    sd = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, sd)
+    state = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.compress:
+        state["err"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def _quantize(g: jax.Array, mode: str) -> jax.Array:
+    if mode == "bf16":
+        return g.astype(jnp.bfloat16).astype(jnp.float32)
+    if mode == "int8":
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127)
+        return q * scale
+    raise ValueError(mode)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree))
+    )
+
+
+def opt_update(
+    grads: Any, state: dict, params: Any, cfg: OptConfig
+) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+    # gradient compression with error feedback
+    if cfg.compress:
+        compensated = jax.tree.map(lambda g, e: g + e, grads, state["err"])
+        quant = jax.tree.map(lambda g: _quantize(g, cfg.compress), compensated)
+        new_err = jax.tree.map(lambda c, q: c - q, compensated, quant)
+        grads = quant
+    else:
+        new_err = state.get("err")
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    sd = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        m32 = m.astype(jnp.float32) * b1 + g * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + g * g * (1 - b2)
+        u = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (standard: skip norms/bias)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return newp, m32.astype(sd), v32.astype(sd)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if cfg.compress:
+        new_state["err"] = new_err
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics
+
+
+__all__ = ["OptConfig", "opt_init", "opt_update", "lr_at", "global_norm"]

@@ -1,0 +1,1 @@
+"""Runtime substrate: mesh/sharding helpers, HLO analysis, fault tolerance."""

@@ -1,0 +1,102 @@
+"""Fault-tolerance runtime: straggler monitor + elastic re-meshing.
+
+StragglerMonitor — per-step wall-time EWMA/EWVAR; steps beyond
+``mean + k*std`` are flagged.  On a real pod each host reports its step
+time; a persistent straggler (same host flagged ``patience`` times) triggers
+the configured action: "log", "callback" (e.g. request reschedule via the
+cluster manager) or "raise" (fail fast so the job restarts from the last
+checkpoint minus the bad node).
+
+elastic_mesh — given whatever devices survive, pick the largest
+(data, model) grid with model <= requested TP and data maximal; combined
+with CheckpointManager.restore's cross-mesh device_put this is the elastic
+restart path (tested in tests/test_fault.py with fake device counts).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+
+
+@dataclass
+class StragglerMonitor:
+    threshold_sigma: float = 3.0
+    patience: int = 3
+    alpha: float = 0.1           # EWMA decay
+    action: str = "log"          # log | raise | callback
+    callback: Callable[[int, float], None] | None = None
+    warmup_steps: int = 5
+
+    _mean: float = field(default=0.0, init=False)
+    _var: float = field(default=0.0, init=False)
+    _n: int = field(default=0, init=False)
+    _consecutive: int = field(default=0, init=False)
+    flagged_steps: list = field(default_factory=list, init=False)
+    _t0: float = field(default=0.0, init=False)
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int) -> bool:
+        """Record one step; returns True if flagged as straggling."""
+        dt = time.perf_counter() - self._t0
+        return self.observe(step, dt)
+
+    def observe(self, step: int, dt: float) -> bool:
+        self._n += 1
+        if self._n <= self.warmup_steps:
+            # prime with running mean / mean squared deviation
+            k = self._n
+            delta = dt - self._mean
+            self._mean += delta / k
+            self._var += ((dt - self._mean) * delta - self._var) / k
+            return False
+        # floor the std at 5% of the mean: healthy jitter never flags
+        std = max(math.sqrt(max(self._var, 0.0)), 0.05 * self._mean, 1e-9)
+        is_slow = dt > self._mean + self.threshold_sigma * std
+        if is_slow:
+            self._consecutive += 1
+            self.flagged_steps.append((step, dt))
+            if self._consecutive >= self.patience:
+                msg = (
+                    f"straggler: step {step} took {dt:.3f}s "
+                    f"(mean {self._mean:.3f}s +{self.threshold_sigma} sigma)"
+                )
+                if self.action == "raise":
+                    raise RuntimeError(msg)
+                if self.action == "callback" and self.callback:
+                    self.callback(step, dt)
+                else:
+                    print(f"[straggler-monitor] {msg}")
+        else:
+            self._consecutive = 0
+            # EWMA update only on healthy steps (stragglers don't poison it)
+            self._mean = (1 - self.alpha) * self._mean + self.alpha * dt
+            delta = dt - self._mean
+            self._var = (1 - self.alpha) * self._var + self.alpha * delta * delta
+        return is_slow
+
+
+def elastic_mesh(
+    n_devices: int, *, want_model: int = 16, axis_names=("data", "model"),
+    devices=None,
+):
+    """Largest (data, model) grid for however many devices survived.
+
+    model = largest power-of-two divisor of n_devices that is <= want_model;
+    data = n_devices // model.  Guarantees every device is used, so a job
+    that loses a host restarts on the remaining N-k devices without config
+    edits (weights re-sharded on restore).
+    """
+    model = 1
+    while model * 2 <= want_model and n_devices % (model * 2) == 0:
+        model *= 2
+    data = n_devices // model
+    return jax.make_mesh((data, model), axis_names, devices=devices)
+
+
+__all__ = ["StragglerMonitor", "elastic_mesh"]

@@ -1,0 +1,10 @@
+"""Training/serving steps: loss, train_step (with microbatch accumulation),
+prefill_step, serve_step."""
+from .steps import (  # noqa: F401
+    TrainState,
+    loss_fn,
+    make_train_step,
+    make_prefill_step,
+    make_serve_step,
+    train_state_init,
+)

@@ -1,0 +1,67 @@
+"""Autotuner (C5): analytic model sanity + measured ranking."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.autotune import (
+    TileConfig,
+    candidate_tiles,
+    make_plan,
+    measure_best,
+    predict_seconds,
+    tune_sliced,
+    vmem_elems,
+)
+from repro.core.kron import KronProblem
+
+
+def test_candidates_respect_vmem():
+    cands = candidate_tiles(m=1024, s=4096, p=64, q=64)
+    assert cands
+    for c in cands:
+        assert vmem_elems(c, 64) * 4 <= 16 * 1024 * 1024 * 3 // 4
+
+
+def test_predict_prefers_deeper_contraction():
+    """The model must know the MXU: P=128 beats P=8 at equal FLOPs/byte."""
+    cfg = TileConfig(8, 64, 8)
+    t_small = predict_seconds(1024, 512, 8, 8, cfg)
+    t_big = predict_seconds(1024, 32, 128, 128, TileConfig(8, 32, 128))
+    # big-P case has 16x the FLOPs but >=16x the MXU utilization
+    assert t_big < t_small * 32
+
+
+def test_tune_sliced_returns_dividing_tiles():
+    for (m, s, p, q) in [(1024, 512, 8, 8), (16, 64, 64, 64), (7, 9, 3, 5)]:
+        c = tune_sliced(m, s, p, q)
+        assert m % c.t_m == 0 and s % c.t_s == 0 and q % c.t_q == 0
+
+
+def test_plan_fusion_groups_small_p():
+    # P=4, N=6: fusion should chain multiple factors per stage
+    plan = make_plan(KronProblem.uniform(64, 4, 4, 6), enable_prekron=False)
+    assert any(len(st.factor_ids) > 1 for st in plan.stages)
+
+
+def test_plan_no_fusion_when_disabled():
+    plan = make_plan(
+        KronProblem.uniform(64, 4, 4, 6),
+        enable_prekron=False,
+        enable_fusion=False,
+    )
+    assert all(len(st.factor_ids) == 1 for st in plan.stages)
+
+
+def test_measure_best_ranks_by_wallclock():
+    """measure_best picks the candidate whose closure is actually fastest."""
+    x = jnp.zeros((256, 256))
+
+    def fn_of_cfg(cfg):
+        if cfg.t_m == 1:  # deliberately slow candidate
+            return lambda: sum(x @ x for _ in range(8)) / 8
+        return lambda: x @ x
+
+    best, dt = measure_best(
+        fn_of_cfg, [TileConfig(1, 1, 1), TileConfig(8, 8, 8)], warmup=1, iters=2
+    )
+    assert best.t_m == 8 and dt > 0

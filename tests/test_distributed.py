@@ -1,0 +1,30 @@
+"""Multi-device distributed Kron-Matmul tests (8 fake CPU devices).
+
+Runs tests/distributed_driver.py in a subprocess so the XLA device-count
+flag never leaks into this pytest process (jax locks device count on first
+init — see launch/dryrun.py for the same pattern).
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_distributed_driver_all_checks():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "distributed_driver.py")],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL-OK" in proc.stdout

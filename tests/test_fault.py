@@ -1,0 +1,136 @@
+"""Fault tolerance: checkpoint atomicity/keep-k/resume, straggler monitor,
+elastic re-meshing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.models.config import reduced
+from repro.optim import OptConfig
+from repro.runtime.fault import StragglerMonitor, elastic_mesh
+from repro.train import make_train_step, train_state_init
+
+
+def _tiny():
+    cfg = reduced(get_config("gemma_2b"), n_layers=2, d_model=32, n_heads=2,
+                  n_kv_heads=1, head_dim=16, d_ff=64, vocab=64,
+                  vocab_pad_multiple=32, dtype="float32")
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=2, decay_steps=50)
+    return cfg, opt_cfg
+
+
+def test_checkpoint_roundtrip_and_keep_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.float32(1.5)}}
+    for step in (1, 2, 3):
+        mgr.save(step, jax.tree.map(lambda x: x + step, tree))
+    assert mgr.all_steps() == [2, 3]  # keep-k pruned step 1
+    got = mgr.restore(tree, step=3)
+    np.testing.assert_array_equal(got["a"], np.arange(6).reshape(2, 3) + 3)
+
+
+def test_checkpoint_atomicity_ignores_tmp(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, {"x": jnp.ones(3)})
+    # simulate a crash mid-save: stray tmp dir
+    os.makedirs(tmp_path / "step_000000002.tmp")
+    assert mgr.latest_step() == 1
+    mgr.save(3, {"x": jnp.ones(3) * 3})  # gc removes the orphan
+    assert not (tmp_path / "step_000000002.tmp").exists()
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    mgr.save(7, {"x": jnp.arange(10)})
+    mgr.wait()
+    got = mgr.restore({"x": jnp.zeros(10, jnp.int32)})
+    np.testing.assert_array_equal(got["x"], np.arange(10))
+
+
+def test_training_resume_bitexact(tmp_path):
+    """train 6 steps == train 3, checkpoint, restore, train 3 more."""
+    cfg, opt_cfg = _tiny()
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=16, batch=4)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+
+    def run(state, a, b):
+        for i in range(a, b):
+            toks, labels = data.global_batch(i)
+            state, _ = step_fn(state, {"tokens": toks, "labels": labels})
+        return state
+
+    s_full = run(train_state_init(cfg, opt_cfg, jax.random.PRNGKey(0)), 0, 6)
+
+    s_half = run(train_state_init(cfg, opt_cfg, jax.random.PRNGKey(0)), 0, 3)
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    mgr.save(3, s_half._asdict())
+    restored = mgr.restore(s_half._asdict())
+    from repro.train import TrainState
+
+    s_resumed = run(TrainState(**restored), 3, 6)
+
+    for a, b in zip(jax.tree.leaves(s_full.params), jax.tree.leaves(s_resumed.params)):
+        np.testing.assert_allclose(a, b, rtol=0, atol=0)
+
+
+def test_cross_mesh_restore(tmp_path):
+    """Checkpoint saved unsharded restores onto an explicit mesh sharding."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    w = jnp.arange(16.0).reshape(4, 4)
+    mgr.save(1, {"w": w})
+    mesh = jax.make_mesh((1,), ("data",))
+    target = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    target = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, P("data", None))
+        ),
+        {"w": target},
+    )
+    got = mgr.restore(target)
+    np.testing.assert_array_equal(got["w"], np.asarray(w))
+    assert got["w"].sharding.mesh.shape == {"data": 1}
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(threshold_sigma=3.0, patience=1, warmup_steps=5)
+    for i in range(20):
+        mon.observe(i, 0.1 + 0.001 * (i % 3))
+    assert not mon.flagged_steps
+    assert mon.observe(20, 1.0)  # 10x outlier
+    assert mon.flagged_steps and mon.flagged_steps[-1][0] == 20
+
+
+def test_straggler_monitor_raises_after_patience():
+    mon = StragglerMonitor(threshold_sigma=2.0, patience=2, warmup_steps=3,
+                           action="raise")
+    for i in range(10):
+        mon.observe(i, 0.1)
+    mon.observe(10, 5.0)
+    with pytest.raises(RuntimeError, match="straggler"):
+        mon.observe(11, 5.0)
+
+
+@pytest.mark.parametrize("n,model,want", [
+    (512, 16, (32, 16)),
+    (256, 16, (16, 16)),
+    (12, 16, (3, 4)),     # lost devices: model falls to 4
+    (7, 16, (7, 1)),      # prime count: pure DP
+])
+def test_elastic_mesh_shapes(n, model, want):
+    # shape math only (can't build >1-device mesh here): replicate logic
+    m = 1
+    while m * 2 <= model and n % (m * 2) == 0:
+        m *= 2
+    assert (n // m, m) == want
+
+
+def test_elastic_mesh_single_device():
+    mesh = elastic_mesh(1, want_model=16)
+    assert dict(mesh.shape) == {"data": 1, "model": 1}

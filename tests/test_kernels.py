@@ -1,0 +1,203 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode) vs pure-jnp oracle.
+
+Shapes sweep the paper's regimes: small P (fusion territory), large P
+(MXU-aligned), rectangular P!=Q, plus tile-edge cases where the block size
+equals / divides the dims unevenly enough to exercise the grid.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.kron_fused import fused_kron_pallas, max_n_fused
+from repro.kernels.kron_sliced import sliced_multiply_pallas
+from repro.kernels.ref import fused_kron_ref, sliced_multiply_ref
+
+
+def _mk(seed, m, k, p, q, dtype=jnp.float32):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (m, k)).astype(dtype)
+    f = jax.random.normal(k2, (p, q)).astype(dtype)
+    return x, f
+
+
+SLICED_SHAPES = [
+    # (m, p, q, s)  with K = s*p
+    (2, 2, 2, 2),
+    (8, 8, 8, 64),
+    (16, 8, 8, 8),
+    (4, 16, 16, 16),
+    (8, 32, 32, 4),
+    (2, 64, 64, 2),
+    (8, 128, 128, 1),
+    (8, 4, 8, 16),     # Q > P (expanding)
+    (8, 8, 4, 16),     # Q < P (contracting)
+    (1, 8, 8, 512),    # M=1 long row (paper GP case M small)
+]
+
+
+@pytest.mark.parametrize("m,p,q,s", SLICED_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sliced_kernel_matches_ref(m, p, q, s, dtype):
+    x, f = _mk(0, m, s * p, p, q, dtype)
+    got = sliced_multiply_pallas(x, f, interpret=True)
+    want = sliced_multiply_ref(x, f)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol
+    )
+
+
+@pytest.mark.parametrize(
+    "m,p,q,s,t_m,t_s,t_q",
+    [
+        (8, 8, 8, 64, 2, 16, 4),   # all three grid dims > 1
+        (8, 8, 8, 64, 8, 64, 8),   # single block
+        (4, 16, 8, 32, 2, 8, 2),   # rectangular + tiled
+        (16, 4, 4, 16, 4, 4, 1),   # t_q = 1 edge
+    ],
+)
+def test_sliced_kernel_tilings(m, p, q, s, t_m, t_s, t_q):
+    x, f = _mk(1, m, s * p, p, q)
+    got = sliced_multiply_pallas(x, f, t_m=t_m, t_s=t_s, t_q=t_q, interpret=True)
+    want = sliced_multiply_ref(x, f)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_sliced_kernel_rejects_bad_tiles():
+    x, f = _mk(2, 8, 64, 8, 8)
+    with pytest.raises(ValueError):
+        sliced_multiply_pallas(x, f, t_m=3, interpret=True)  # 8 % 3 != 0
+
+
+FUSED_CASES = [
+    # (m, ps, qs, t_m, t_k)   factors given in application order (F^N first)
+    (2, (4, 4), (4, 4), 2, 16),
+    (4, (8, 8), (8, 8), 2, 64),
+    (2, (4, 4, 4), (4, 4, 4), 2, 64),
+    (2, (2, 2, 2, 2), (2, 2, 2, 2), 2, 16),
+    (4, (4, 8), (8, 4), 2, 32),        # rectangular chain
+    (2, (8, 8), (8, 8), 2, None),      # t_k = full K
+]
+
+
+@pytest.mark.parametrize("m,ps,qs,t_m,t_k", FUSED_CASES)
+def test_fused_kernel_matches_ref(m, ps, qs, t_m, t_k):
+    kdim = math.prod(ps)
+    keys = jax.random.split(jax.random.PRNGKey(3), len(ps) + 1)
+    x = jax.random.normal(keys[0], (m, kdim), jnp.float32)
+    factors_last_first = [
+        jax.random.normal(k, (p, q), jnp.float32)
+        for k, p, q in zip(keys[1:], ps, qs)
+    ]
+    got = fused_kron_pallas(x, *factors_last_first, t_m=t_m, t_k=t_k, interpret=True)
+    # ref applies last factor of the problem first; factors_last_first[0] is
+    # F^N, so the problem-order list is reversed(factors_last_first).
+    want = fused_kron_ref(x, list(reversed(factors_last_first)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_fused_kernel_vmem_guard():
+    x = jnp.zeros((8, 1 << 14), jnp.float32)
+    f = jnp.zeros((2, 2), jnp.float32)
+    with pytest.raises(ValueError):
+        fused_kron_pallas(
+            x, f, f, t_m=8, t_k=1 << 14, interpret=True, vmem_budget_elems=1024
+        )
+
+
+def test_max_n_fused_matches_paper_formula():
+    # paper: N_fused = floor(log_P T_K)
+    assert max_n_fused(128, 4) == 3   # 4^3=64 <=128, 4^4=256 no
+    assert max_n_fused(512, 8) == 3
+    assert max_n_fused(8, 8) == 1
+    assert max_n_fused(7, 8) == 0
+
+
+TRANSPOSED_SHAPES = [
+    (2, 2, 2, 2),
+    (8, 8, 8, 64),
+    (4, 16, 8, 16),    # rectangular
+    (8, 4, 8, 32),
+    (1, 8, 8, 512),
+]
+
+
+@pytest.mark.parametrize("m,p,q,s", TRANSPOSED_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sliced_t_kernel_matches_ref(m, p, q, s, dtype):
+    """Backward kernel (beyond-paper): dX for one sliced multiply."""
+    from repro.kernels.kron_sliced_t import sliced_multiply_t_pallas
+    from repro.kernels.ref import sliced_multiply_t_ref
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+    dy = jax.random.normal(k1, (m, q * s)).astype(dtype)
+    f = jax.random.normal(k2, (p, q)).astype(dtype)
+    got = sliced_multiply_t_pallas(dy, f, interpret=True)
+    want = sliced_multiply_t_ref(dy, f)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol
+    )
+
+
+@pytest.mark.parametrize(
+    "t_m,t_s,t_q", [(2, 16, 4), (8, 64, 8), (4, 8, 2), (8, 64, 1)]
+)
+def test_sliced_t_kernel_q_accumulation(t_m, t_s, t_q):
+    """Output blocks accumulate across the innermost Q-tile grid dim."""
+    from repro.kernels.kron_sliced_t import sliced_multiply_t_pallas
+    from repro.kernels.ref import sliced_multiply_t_ref
+
+    m, p, q, s = 8, 8, 8, 64
+    k1, k2 = jax.random.split(jax.random.PRNGKey(10))
+    dy = jax.random.normal(k1, (m, q * s), jnp.float32)
+    f = jax.random.normal(k2, (p, q), jnp.float32)
+    got = sliced_multiply_t_pallas(dy, f, t_m=t_m, t_s=t_s, t_q=t_q, interpret=True)
+    np.testing.assert_allclose(got, sliced_multiply_t_ref(dy, f), rtol=1e-5, atol=1e-5)
+
+
+def test_forward_backward_kernel_roundtrip():
+    """sliced_t(sliced(x, I_perm)) recovers x for orthonormal factors."""
+    from repro.kernels.kron_sliced import sliced_multiply_pallas
+    from repro.kernels.kron_sliced_t import sliced_multiply_t_pallas
+
+    x = jax.random.normal(jax.random.PRNGKey(11), (4, 64), jnp.float32)
+    # orthonormal F: F F^T = I, so the transposed op inverts the forward
+    f = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(12), (8, 8)))[0]
+    y = sliced_multiply_pallas(x, f, interpret=True)
+    back = sliced_multiply_t_pallas(y, f, interpret=True)
+    np.testing.assert_allclose(back, x, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_ops_sliced_t_dispatch(backend):
+    from repro.kernels.ref import sliced_multiply_t_ref
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(13))
+    dy = jax.random.normal(k1, (4, 128), jnp.float32)
+    f = jax.random.normal(k2, (8, 8), jnp.float32)
+    got = ops.sliced_multiply_t(dy, f, backend=backend)
+    np.testing.assert_allclose(got, sliced_multiply_t_ref(dy, f), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_ops_dispatch_both_backends(backend):
+    x, f = _mk(4, 8, 128, 8, 8)
+    got = ops.sliced_multiply(x, f, backend=backend)
+    want = sliced_multiply_ref(x, f)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_ops_fused_dispatch_both_backends(backend):
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    x = jax.random.normal(keys[0], (4, 64), jnp.float32)
+    f1 = jax.random.normal(keys[1], (4, 4), jnp.float32)
+    f2 = jax.random.normal(keys[2], (4, 4), jnp.float32)
+    got = ops.fused_kron(x, [f1, f2], backend=backend, t_m=2, t_k=16)
+    want = fused_kron_ref(x, [f2, f1])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)

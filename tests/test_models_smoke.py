@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward +
+one grad step + prefill/decode consistency on CPU.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation) — see launch/dryrun.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import model as M
+from repro.models.config import reduced
+
+BATCH, SEQ = 2, 32
+
+
+def _reduced(arch):
+    cfg = reduced(get_config(arch), dtype="float32")
+    return cfg
+
+
+def _inputs(cfg, key, batch=BATCH, seq=SEQ):
+    k1, k2 = jax.random.split(key)
+    n_fe = cfg.n_frontend_tokens
+    tokens = jax.random.randint(k1, (batch, seq - n_fe), 0, cfg.vocab)
+    embeds = (
+        jax.random.normal(k2, (batch, n_fe, cfg.d_model), jnp.float32)
+        if n_fe
+        else None
+    )
+    return tokens, embeds
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = _reduced(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tokens, embeds = _inputs(cfg, jax.random.PRNGKey(1))
+    logits, aux = jax.jit(lambda p, t, e: M.forward(cfg, p, t, e))(
+        params, tokens, embeds
+    )
+    assert logits.shape == (BATCH, SEQ, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_grad_step_finite(arch):
+    cfg = _reduced(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tokens, embeds = _inputs(cfg, jax.random.PRNGKey(1))
+    labels = jnp.roll(tokens, -1, axis=1)
+
+    def loss_fn(p):
+        logits, aux = M.forward(cfg, p, tokens, embeds)
+        n_fe = cfg.n_frontend_tokens
+        lg = logits[:, n_fe:, :]
+        ll = jax.nn.log_softmax(lg, axis=-1)
+        nll = -jnp.take_along_axis(ll, labels[..., None], axis=-1).mean()
+        return nll + 0.01 * aux
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert bool(jnp.isfinite(loss))
+    leaves = jax.tree.leaves(grads)
+    assert leaves and all(bool(jnp.all(jnp.isfinite(g))) for g in leaves)
+    # some gradient must be nonzero
+    assert any(float(jnp.max(jnp.abs(g))) > 0 for g in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    """logits from [prefill(t<n) + decode(t_n)] == forward(all)[n]."""
+    cfg = _reduced(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tokens, embeds = _inputs(cfg, jax.random.PRNGKey(1))
+    seq = tokens.shape[1] + cfg.n_frontend_tokens
+    max_len = seq + 4
+
+    full_logits, _ = M.forward(cfg, params, tokens, embeds)
+
+    # prefill on all but the last token, then decode it
+    pre_tokens = tokens[:, :-1]
+    pre_logits, cache = M.prefill(cfg, params, pre_tokens, max_len, embeds)
+    np.testing.assert_allclose(
+        np.asarray(pre_logits),
+        np.asarray(full_logits[:, :-1]),
+        rtol=2e-3,
+        atol=2e-3,
+    )
+    last = tokens[:, -1:]
+    dec_logits, _ = M.decode_step(
+        cfg, params, cache, last, jnp.int32(seq - 1)
+    )
+    np.testing.assert_allclose(
+        np.asarray(dec_logits[:, 0]),
+        np.asarray(full_logits[:, -1]),
+        rtol=2e-3,
+        atol=2e-3,
+    )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_multi_step_decode_finite(arch):
+    cfg = _reduced(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tokens, embeds = _inputs(cfg, jax.random.PRNGKey(1))
+    max_len = SEQ + 8
+    _, cache = M.prefill(cfg, params, tokens, max_len, embeds)
+    step = jax.jit(
+        lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos)
+    )
+    tok = tokens[:, -1:]
+    for i in range(3):
+        logits, cache = step(params, cache, tok, jnp.int32(SEQ + i))
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        tok = jnp.clip(tok, 0, cfg.vocab - 1)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_param_count_sane():
+    # full-size param counts should be near the public numbers
+    cfg = get_config("qwen2_5_32b")
+    n = cfg.param_count()
+    assert 30e9 < n < 36e9, n
+    cfg = get_config("jamba_1_5_large_398b")
+    assert 370e9 < cfg.param_count() < 420e9
+    assert 80e9 < cfg.param_count(active_only=True) < 110e9
+    cfg = get_config("mamba2_130m")
+    assert 0.1e9 < cfg.param_count() < 0.2e9
+
+
+def test_layer_plans():
+    jamba = get_config("jamba_1_5_large_398b")
+    plan = jamba.layer_plan()
+    assert sum(1 for s in plan if s.kind == "attn") == 9  # 1:7 interleave
+    assert sum(1 for s in plan if s.moe) == 36  # every other layer
+    assert jamba.period == 8 and jamba.n_periods == 9
+
+    ds = get_config("deepseek_moe_16b")
+    plan = ds.layer_plan()
+    assert not plan[0].moe and all(s.moe for s in plan[1:])
+    assert ds.prelude_len == 1 and ds.n_periods == 27
+
+    m2 = get_config("mamba2_130m")
+    assert all(s.kind == "mamba" for s in m2.layer_plan())

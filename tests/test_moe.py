@@ -1,0 +1,99 @@
+"""MoE routing unit tests vs a dense compute-all-experts oracle."""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.config import MoEConfig, ModelConfig
+from repro.models.moe import _capacity, moe_apply, moe_init
+
+
+def _cfg(e=4, k=2, cf=2.0, n_shared=0):
+    return ModelConfig(
+        name="t", family="moe", n_layers=1, d_model=16, n_heads=2,
+        n_kv_heads=2, d_ff=0, vocab=32,
+        moe=MoEConfig(n_experts=e, top_k=k, d_expert=8, n_shared=n_shared,
+                      capacity_factor=cf),
+        dtype="float32",
+    )
+
+
+def _oracle(cfg, p, x):
+    """Dense oracle: y = sum over top-k experts of w_e * FFN_e(x)."""
+    mc = cfg.moe
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, mc.top_k)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+    # compute all experts densely
+    h = jax.nn.silu(jnp.einsum("bsd,edf->bsef", x, p["ew1"])) * jnp.einsum(
+        "bsd,edf->bsef", x, p["ew3"]
+    )
+    all_out = jnp.einsum("bsef,efd->bsed", h, p["ew2"])  # (B,S,E,D)
+    mask = jax.nn.one_hot(top_i, mc.n_experts)  # (B,S,k,E)
+    w = jnp.einsum("bske,bsk->bse", mask, top_p)
+    return jnp.einsum("bsed,bse->bsd", all_out, w)
+
+
+def test_matches_dense_oracle_no_drops():
+    cfg = _cfg(cf=2.0)  # capacity == S: nothing dropped
+    p = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16))
+    got, aux = moe_apply(cfg, p, x)
+    want = _oracle(cfg, p, x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    assert float(aux) > 0
+
+
+def test_drops_occur_with_tiny_capacity():
+    cfg = _cfg(cf=0.1)
+    p = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 16))
+    got, _ = moe_apply(cfg, p, x)
+    want = _oracle(cfg, p, x)
+    # with cf=0.1 captured tokens differ from the oracle for at least one row
+    assert not np.allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+    assert bool(jnp.all(jnp.isfinite(got)))
+
+
+def test_shared_experts_added():
+    cfg = _cfg(n_shared=1)
+    p = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 16))
+    got, _ = moe_apply(cfg, p, x)
+    # shared expert contribution == plain FFN on x
+    from repro.models.ffn import ffn_apply
+
+    routed, _ = moe_apply(cfg, {**p, "shared": jax.tree.map(jnp.zeros_like, p["shared"])}, x)
+    shared_only = ffn_apply(cfg, p["shared"], x)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(routed + shared_only), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_capacity_formula():
+    mc = MoEConfig(n_experts=8, top_k=2, d_expert=4, capacity_factor=1.25)
+    c = _capacity(1024, mc)
+    assert c % 8 == 0 and c >= 1024 * 2 * 1.25 / 8
+    assert _capacity(1, mc) == 2  # decode: min(8, s*k) slots
+
+    mc_big = MoEConfig(n_experts=4, top_k=2, d_expert=4, capacity_factor=2.0)
+    assert _capacity(16, mc_big) >= 16  # cf=E/k: capacity>=S, dropless
+
+
+def test_grad_finite_through_routing():
+    cfg = _cfg()
+    p = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 16))
+
+    def loss(p):
+        y, aux = moe_apply(cfg, p, x)
+        return jnp.sum(y**2) + aux
+
+    g = jax.grad(loss)(p)
+    for leaf in jax.tree.leaves(g):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+    # router must receive gradient (via combine weights + aux loss)
+    assert float(jnp.max(jnp.abs(g["router"]))) > 0

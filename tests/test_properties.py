@@ -1,0 +1,117 @@
+"""Property-based tests (hypothesis) for Kron-Matmul system invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kron as K
+from repro.core import fastkron
+from repro.core.layers import balanced_factorization
+
+jax.config.update("jax_enable_x64", True)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+dims = st.integers(min_value=1, max_value=6)
+
+
+@st.composite
+def kron_problems(draw, max_n=3, max_dim=6, max_m=5):
+    n = draw(st.integers(1, max_n))
+    ps = tuple(draw(dims) for _ in range(n))
+    qs = tuple(draw(dims) for _ in range(n))
+    m = draw(st.integers(1, max_m))
+    seed = draw(st.integers(0, 2**31 - 1))
+    keys = jax.random.split(jax.random.PRNGKey(seed), n + 1)
+    x = jax.random.normal(keys[0], (m, math.prod(ps)), jnp.float64)
+    factors = [
+        jax.random.normal(k, (p, q), jnp.float64)
+        for k, p, q in zip(keys[1:], ps, qs)
+    ]
+    return x, factors
+
+
+@given(kron_problems())
+@settings(**SETTINGS)
+def test_all_algorithms_agree(prob):
+    """shuffle == ftmmt == fastkron == naive for arbitrary shapes."""
+    x, factors = prob
+    want = K.kron_matmul_naive(x, factors)
+    for fn in (K.kron_matmul_shuffle, K.kron_matmul_ftmmt, K.kron_matmul_fastkron):
+        np.testing.assert_allclose(fn(x, factors), want, rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(
+        fastkron.kron_matmul(x, factors), want, rtol=1e-9, atol=1e-9
+    )
+
+
+@given(kron_problems(max_n=2), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_linearity(prob, seed):
+    """Kron-Matmul is linear in X: f(aX1 + X2) = a f(X1) + f(X2)."""
+    x, factors = prob
+    x2 = jax.random.normal(jax.random.PRNGKey(seed), x.shape, jnp.float64)
+    a = 2.5
+    lhs = K.kron_matmul_fastkron(a * x + x2, factors)
+    rhs = a * K.kron_matmul_fastkron(x, factors) + K.kron_matmul_fastkron(x2, factors)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-9, atol=1e-9)
+
+
+@given(kron_problems(max_n=2, max_dim=4), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_composition(prob, seed):
+    """(X (A1(x)A2)) (B1(x)B2) == X ((A1@B1) (x) (A2@B2))  [mixed-product]."""
+    x, factors = prob
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(factors))
+    second = [
+        jax.random.normal(k, (f.shape[1], f.shape[1]), jnp.float64)
+        for k, f in zip(keys, factors)
+    ]
+    lhs = K.kron_matmul_fastkron(K.kron_matmul_fastkron(x, factors), second)
+    rhs = K.kron_matmul_fastkron(x, [a @ b for a, b in zip(factors, second)])
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-9, atol=1e-9)
+
+
+@given(kron_problems(max_n=3))
+@settings(**SETTINGS)
+def test_pair_factors_invariant(prob):
+    """pair_factors never changes the computed product."""
+    x, factors = prob
+    paired = K.pair_factors(factors, max_p=100, max_pair_dim=10000)
+    np.testing.assert_allclose(
+        K.kron_matmul_fastkron(x, paired),
+        K.kron_matmul_fastkron(x, factors),
+        rtol=1e-9,
+        atol=1e-9,
+    )
+
+
+@given(st.integers(1, 4096), st.integers(1, 4))
+@settings(max_examples=50, deadline=None)
+def test_balanced_factorization_exact(d, n):
+    fs = balanced_factorization(d, n)
+    assert len(fs) == n and math.prod(fs) == d
+
+
+@given(kron_problems(max_n=2, max_dim=4))
+@settings(max_examples=10, deadline=None)
+def test_identity_factors(prob):
+    """Kron of identities is identity: X (I (x) I) == X."""
+    x, factors = prob
+    eyes = [jnp.eye(f.shape[0], dtype=jnp.float64) for f in factors]
+    np.testing.assert_allclose(
+        K.kron_matmul_fastkron(x, eyes), x, rtol=1e-12, atol=1e-12
+    )
+
+
+@given(kron_problems(max_n=2, max_dim=4))
+@settings(max_examples=10, deadline=None)
+def test_transpose_vjp_consistency(prob):
+    """<Y g, f(X)> == <g, X f^T(Y)> : VJP wrt X equals Kron with F^T."""
+    x, factors = prob
+    y = K.kron_matmul_fastkron(x, factors)
+    g = jnp.ones_like(y)
+    (gx,) = jax.grad(lambda x_: jnp.vdot(K.kron_matmul_fastkron(x_, factors), g), argnums=(0,))(x)
+    want = K.kron_matmul_naive(g, [f.T for f in factors])
+    np.testing.assert_allclose(gx, want, rtol=1e-9, atol=1e-9)
