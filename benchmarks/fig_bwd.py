@@ -1,0 +1,136 @@
+"""Backward-pass benchmark (beyond paper — training workloads).
+
+Compares ``jax.grad`` through the PLANNED Kron-Matmul (fused stage backward:
+M-tiled cache-resident chain + shared-relayout factor grads, tiles from the
+measured autotuner) against the seed's unfused per-factor backward loop
+(``plan=None``), on the M=256, (16,16)^4 problem from the PR-1 acceptance
+criteria.  Emits ``BENCH_bwd.json`` next to the repo root for CI artifacts.
+
+Reproduced claim: the planned backward is >= 1.5x faster than the unfused
+loop on CPU (the fusion win the paper demonstrates for the forward pass,
+carried over to the gradient contractions).  Methodology in EXPERIMENTS.md
+§Backward.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autotune
+from repro.core.fastkron import kron_matmul
+from repro.core.kron import KronProblem
+
+from .util import csv_row, make_inputs
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_JSON = ROOT / "BENCH_bwd.json"
+PLAN_CACHE = ROOT / "BENCH_plan_cache.json"
+
+
+def _bench_pair(fn_a, fn_b, iters: int) -> tuple[float, float]:
+    """Block-interleaved min-of-N timing: A-block, B-block, repeated.  Block
+    interleaving cancels slow machine drift (this container shares 2 vCPUs)
+    without the per-call cache pollution of strict alternation, and min is
+    the least-noise estimator for a fixed workload."""
+    import time
+
+    for _ in range(2):
+        jax.block_until_ready(fn_a())
+        jax.block_until_ready(fn_b())
+
+    def block(fn, out):
+        for _ in range(max(1, iters // 3)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            out.append(time.perf_counter() - t0)
+
+    ta, tb = [], []
+    for _ in range(3):
+        block(fn_a, ta)
+        block(fn_b, tb)
+    return min(ta), min(tb)
+
+
+def run(quick: bool = False):
+    m, ps, qs = 256, (16,) * 4, (16,) * 4
+    prob = KronProblem(m, ps, qs)
+    x, fs = make_inputs(m, ps, qs)
+    fs = tuple(fs)
+    iters = 9 if quick else 12
+    # Runtime cotangent: a .sum() loss makes dY a compile-time constant and
+    # XLA folds the (x-independent) input-gradient chain away — for BOTH
+    # paths that can be folded, which would compare folding, not kernels.
+    gy = jax.random.normal(jax.random.PRNGKey(7), (m, math.prod(qs)), x.dtype)
+
+    def loss(plan):
+        return lambda x, fs, gy: (kron_matmul(x, fs, plan=plan) * gy).sum()
+
+    # Measured plan, persisted in the on-disk cache so re-runs skip tuning.
+    plan = autotune.make_plan(
+        prob, tune="measure", backend="xla", cache_path=str(PLAN_CACHE),
+        enable_prekron=jax.default_backend() == "tpu",
+    )
+
+    # Training-style backward: cotangents for x AND every factor.
+    g_seed = jax.jit(jax.grad(loss(None), argnums=(0, 1)))
+    g_plan = jax.jit(jax.grad(loss(plan), argnums=(0, 1)))
+    t_seed, t_plan = _bench_pair(
+        lambda: g_seed(x, fs, gy), lambda: g_plan(x, fs, gy), iters
+    )
+
+    # Inference-style backward: cotangent for x only (symbolic-zeros path —
+    # the planned version runs the fused transposed chain, nothing else).
+    gx_seed = jax.jit(jax.grad(lambda x, gy: loss(None)(x, fs, gy)))
+    gx_plan = jax.jit(jax.grad(lambda x, gy: loss(plan)(x, fs, gy)))
+    tx_seed, tx_plan = _bench_pair(
+        lambda: gx_seed(x, gy), lambda: gx_plan(x, gy), iters
+    )
+
+    record = {
+        "problem": {"m": m, "ps": list(ps), "qs": list(qs), "dtype": "float32"},
+        "backend": jax.default_backend(),
+        "plan": plan.describe(),
+        "grad_x_and_factors": {
+            "seed_unfused_s": t_seed,
+            "planned_s": t_plan,
+            "speedup": t_seed / t_plan,
+        },
+        "grad_x_only": {
+            "seed_unfused_s": tx_seed,
+            "planned_s": tx_plan,
+            "speedup": tx_seed / tx_plan,
+        },
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+
+    yield csv_row(
+        "fig_bwd",
+        size="16^4",
+        m=m,
+        grad="x+factors",
+        seed_s=f"{t_seed:.4f}",
+        planned_s=f"{t_plan:.4f}",
+        speedup=f"{t_seed / t_plan:.2f}",
+        plan=plan.describe().replace(",", ";"),
+    )
+    yield csv_row(
+        "fig_bwd",
+        size="16^4",
+        m=m,
+        grad="x-only",
+        seed_s=f"{tx_seed:.4f}",
+        planned_s=f"{tx_plan:.4f}",
+        speedup=f"{tx_seed / tx_plan:.2f}",
+        artifact=os.fspath(OUT_JSON),
+    )
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

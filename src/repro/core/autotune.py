@@ -5,28 +5,40 @@ equivalent search space is the Pallas block shapes; since this container has
 no TPU, candidates are scored *analytically* with a two-term (compute, HBM)
 model that knows the MXU's 128x128 systolic shape and the (8,128) VMEM tile —
 the same "narrow by resource limits, then rank" structure as the paper's §4.3.
-``measure=True`` ranks the narrowed candidates by wall clock instead, for use
-on real hardware (and exercised on CPU in tests with the XLA backend).
+``tune="measure"`` ranks the narrowed candidates by wall clock instead
+(``measure_best``), for use on real hardware — and persists the winner in an
+on-disk JSON plan cache keyed by (M, Ps, Qs, dtype, backend) so repeated
+calls and the benchmark harness skip both Python planning overhead and
+re-measurement (format documented in EXPERIMENTS.md §Plan-cache).
 
 Plan construction additionally decides, per the paper + our beyond-paper
-extension:
+extensions:
 
   * fusion grouping (C3): how many consecutive factors one kernel chains,
-    bounded by ``N_fused = floor(log_P T_K)`` and the VMEM budget;
+    bounded by ``N_fused = floor(log_P T_K)`` and the VMEM budget — with
+    per-factor Q-tiling (``Stage.t_qs``) to keep fusion legal when
+    ``prod(Q)/prod(P)`` alone would blow the budget;
   * factor pre-kronization (beyond paper): explicitly form F^i (x) F^{i+1}
-    when P is too small to feed the MXU's 128-deep contraction.
+    when P is too small to feed the MXU's 128-deep contraction;
+  * a BACKWARD plan (``KronPlan.bwd_stages``): the mirrored stages executed
+    by the VJP — per-stage transposed chains + factor-gradient contractions —
+    with tiles tuned for the transposed shapes.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import json
 import math
+import os
+import tempfile
 import time
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from ..kernels.kron_fused import fused_growth
 from .kron import KronProblem
 
 # TPU v5e hardware model (same constants as EXPERIMENTS.md).
@@ -36,6 +48,8 @@ HBM_BW = 819e9  # bytes/s
 VMEM_BYTES = 16 * 1024 * 1024
 MXU_DIM = 128
 SUBLANE = 8
+
+PLAN_CACHE_VERSION = 1
 
 
 def _ceil_to(x: int, m: int) -> int:
@@ -88,7 +102,7 @@ def predict_seconds(
 def candidate_tiles(m: int, s: int, p: int, q: int) -> list[TileConfig]:
     """Paper §4.3 search-space narrowing, restated for Pallas blocks."""
     t_ms = [t for t in (1, 2, 4, 8, 16, 32) if t <= m and m % t == 0]
-    t_ss = [t for t in _divisors(s) if t <= 2048 and (t * p) % 1 == 0]
+    t_ss = [t for t in _divisors(s) if t <= 2048]
     # keep lane-friendly slice tiles preferentially but allow all divisors
     t_qs = _divisors(q)
     out = []
@@ -111,22 +125,26 @@ def tune_sliced(
 
 
 def measure_best(
-    fn_of_cfg: Callable[[TileConfig], Callable[[], jax.Array]],
-    cands: Sequence[TileConfig],
+    fn_of_cfg: Callable[[object], Callable[[], jax.Array]],
+    cands: Sequence[object],
     *,
     warmup: int = 2,
     iters: int = 5,
-) -> tuple[TileConfig, float]:
-    """Wall-clock ranking of candidates (for real hardware)."""
+) -> tuple[object, float]:
+    """Wall-clock ranking of candidates (for real hardware).
+
+    Generic over the candidate type: tile configs for one kernel, or whole
+    ``KronPlan``s in ``make_plan(tune="measure")``.
+    """
     best, best_t = None, float("inf")
     for cfg in cands:
         try:
             fn = fn_of_cfg(cfg)
             for _ in range(warmup):
-                fn().block_until_ready()
+                jax.block_until_ready(fn())
             t0 = time.perf_counter()
             for _ in range(iters):
-                fn().block_until_ready()
+                jax.block_until_ready(fn())
             dt = (time.perf_counter() - t0) / iters
         except Exception:
             continue
@@ -138,7 +156,7 @@ def measure_best(
 
 
 # ---------------------------------------------------------------------------
-# Plan: pairing + fusion grouping + tiles per stage
+# Plan: pairing + fusion grouping + tiles per stage (+ mirrored backward)
 # ---------------------------------------------------------------------------
 
 
@@ -150,23 +168,57 @@ class Stage:
     ``prekron=True`` means the stage's factors are first combined into their
     explicit Kronecker product (beyond-paper MXU-utilization optimization)
     and applied as ONE sliced multiply.
+
+    ``t_qs`` (fused stages only; application order, one entry per factor)
+    tiles the composite Q axis of the fused kernel so its in-VMEM growth is
+    bounded by ``prod(t_qs)/prod(P)`` — None means no Q-tiling.
     """
 
     factor_ids: tuple[int, ...]
     prekron: bool
     tiles: TileConfig
+    t_qs: tuple[int, ...] | None = None
 
 
 @dataclasses.dataclass(frozen=True)
 class KronPlan:
     stages: tuple[Stage, ...]
+    # Backward stages in EXECUTION order (last forward stage first); None
+    # falls back to a derived mirror of ``stages`` at run time.
+    bwd_stages: tuple[Stage, ...] | None = None
 
     def describe(self) -> str:
         parts = []
         for st in self.stages:
             kind = "prekron" if st.prekron else ("fused" if len(st.factor_ids) > 1 else "sliced")
-            parts.append(f"{kind}{list(st.factor_ids)}@{st.tiles.as_tuple}")
+            tag = f"{kind}{list(st.factor_ids)}@{st.tiles.as_tuple}"
+            if st.t_qs is not None:
+                tag += f"/tq{list(st.t_qs)}"
+            parts.append(tag)
         return " -> ".join(parts)
+
+
+def mirror_bwd_stages(
+    prob: KronProblem, stages: Sequence[Stage], *, dtype_bytes: int = 4
+) -> tuple[Stage, ...]:
+    """Backward stages for a forward plan: same grouping, reversed execution
+    order, tiles tuned for the transposed contraction (P and Q swap roles)."""
+    ps = list(reversed(prob.ps))
+    qs = list(reversed(prob.qs))
+    # Column count at each stage OUTPUT (the backward stage's input).
+    k = prob.k
+    outs = []
+    for st in stages:
+        pprod = math.prod(ps[i] for i in st.factor_ids)
+        qprod = math.prod(qs[i] for i in st.factor_ids)
+        k = k // pprod * qprod
+        outs.append((st, pprod, qprod, k))
+    bwd = []
+    for st, pprod, qprod, k_out in reversed(outs):
+        s = k_out // qprod
+        tiles = tune_sliced(prob.m, s, qprod, pprod, dtype_bytes=dtype_bytes)
+        bwd.append(Stage(st.factor_ids, st.prekron, tiles, st.t_qs))
+    return tuple(bwd)
 
 
 def make_plan(
@@ -178,14 +230,35 @@ def make_plan(
     prekron_max_p: int = 16,
     prekron_max_dim: int = 256,
     vmem_budget_elems: int = 2 * 1024 * 1024,
+    tune: str = "analytic",
+    backend: str = "auto",
+    cache_path: str | None = None,
 ) -> KronPlan:
     """Greedy plan over the reversed factor list (application order).
 
     Stage selection per position i (0 = last factor, applied first):
       1. If P_i and P_{i+1} are both small, pre-kronize the pair (MXU win).
-      2. Else fuse as many consecutive factors as N_fused/VMEM allow (C3).
+      2. Else fuse as many consecutive factors as N_fused/VMEM allow (C3),
+         Q-tiling factors whose growth would otherwise end the group.
       3. Else a single tuned sliced multiply.
+
+    ``tune="measure"`` wall-clock-ranks a narrowed set of plan variants via
+    ``measure_best`` and memoizes the winner in the on-disk plan cache.
     """
+    if tune == "measure":
+        return _measured_plan(
+            prob,
+            dtype_bytes=dtype_bytes,
+            enable_fusion=enable_fusion,
+            enable_prekron=enable_prekron,
+            prekron_max_p=prekron_max_p,
+            prekron_max_dim=prekron_max_dim,
+            vmem_budget_elems=vmem_budget_elems,
+            backend=backend,
+            cache_path=cache_path,
+        )
+    if tune != "analytic":
+        raise ValueError(f"unknown tune mode {tune!r}")
     ps = list(reversed(prob.ps))
     qs = list(reversed(prob.qs))
     n = len(ps)
@@ -210,30 +283,225 @@ def make_plan(
             k = s * qq
             i += 2
             continue
-        # -- C3 fusion grouping --
+        # -- C3 fusion grouping (VMEM-bounded, with Q-tiling relief) --
         group = [i]
+        group_tqs = [q]
         if enable_fusion:
-            pprod, qprod = p, q
+            pprod, tqprod = p, q
             j = i + 1
             while j < n:
-                np_, nq = pprod * ps[j], qprod * qs[j]
-                growth = max(1.0, nq / np_)
-                # T_K must be a multiple of prod(P); try the largest T_K that
-                # fits VMEM with a T_M of 8 (refined below).
-                t_k = min(k, np_ * max(1, (vmem_budget_elems // (8 * np_ * 4))) * 1)
-                if np_ > k or 8 * np_ * growth * 4 > vmem_budget_elems:
+                np_ = pprod * ps[j]
+                if np_ > k:
+                    break  # N_fused cap: T_K can hold at most log_P K factors
+                # Largest Q-tile of factor j whose growth fits the budget with
+                # a T_M of 8 (T_K refined below); full Q when it already fits.
+                tq_j = None
+                for cand in sorted(_divisors(qs[j]), reverse=True):
+                    growth = max(1.0, tqprod * cand / np_)
+                    if 8 * np_ * growth * 4 <= vmem_budget_elems:
+                        tq_j = cand
+                        break
+                if tq_j is None:
                     break
-                pprod, qprod = np_, nq
+                pprod, tqprod = np_, tqprod * tq_j
                 group.append(j)
+                group_tqs.append(tq_j)
                 j += 1
         pprod = math.prod(ps[g] for g in group)
         qprod = math.prod(qs[g] for g in group)
         s = k // pprod
         tiles = tune_sliced(prob.m, s, pprod, qprod, dtype_bytes=dtype_bytes)
-        stages.append(Stage(tuple(group), False, tiles))
+        t_qs = tuple(group_tqs) if group_tqs != [qs[g] for g in group] else None
+        if len(group) > 1:
+            # Clamp (T_M, T_K = t_s * prod(P)) so the fused tile respects the
+            # budget (the grouping loop guaranteed a fit at T_M=8, t_s=1).
+            growth = fused_growth([ps[g] for g in group], [qs[g] for g in group], t_qs)
+            t_m = tiles.t_m
+            while t_m > 1 and t_m * pprod * growth > vmem_budget_elems:
+                t_m = max(d for d in _divisors(prob.m) if d < t_m)
+            max_ts = max(1, int(vmem_budget_elems // (t_m * pprod * growth)))
+            ts = tiles.t_s
+            if ts > max_ts:
+                ts = max(d for d in _divisors(s) if d <= max_ts)
+            if (t_m, ts) != (tiles.t_m, tiles.t_s):
+                tiles = TileConfig(t_m, ts, tiles.t_q)
+        stages.append(Stage(tuple(group), False, tiles, t_qs))
         k = s * qprod
         i = group[-1] + 1
-    return KronPlan(tuple(stages))
+    fwd = tuple(stages)
+    return KronPlan(fwd, mirror_bwd_stages(prob, fwd, dtype_bytes=dtype_bytes))
+
+
+# ---------------------------------------------------------------------------
+# Measured tuning + on-disk plan cache
+# ---------------------------------------------------------------------------
+
+
+def default_cache_path() -> str:
+    return os.environ.get(
+        "FASTKRON_PLAN_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "fastkron", "plans.json"),
+    )
+
+
+def plan_cache_key(
+    prob: KronProblem,
+    dtype_bytes: int,
+    backend: str,
+    *,
+    enable_fusion: bool = True,
+    enable_prekron: bool = True,
+    prekron_max_p: int = 16,
+    prekron_max_dim: int = 256,
+    vmem_budget_elems: int = 2 * 1024 * 1024,
+) -> str:
+    """Cache key covers every plan-shaping input (defaults mirror make_plan):
+    a hit must satisfy the caller's constraints, not just the problem shape."""
+    ps = ",".join(map(str, prob.ps))
+    qs = ",".join(map(str, prob.qs))
+    return (
+        f"m={prob.m};ps={ps};qs={qs};dtype={dtype_bytes};backend={backend}"
+        f";fuse={int(enable_fusion)};prekron={int(enable_prekron)}"
+        f";pmax={prekron_max_p};pdim={prekron_max_dim};vmem={vmem_budget_elems}"
+    )
+
+
+def _stage_to_json(st: Stage) -> dict:
+    return {
+        "factor_ids": list(st.factor_ids),
+        "prekron": st.prekron,
+        "tiles": list(st.tiles.as_tuple),
+        "t_qs": list(st.t_qs) if st.t_qs is not None else None,
+    }
+
+
+def _stage_from_json(d: dict) -> Stage:
+    return Stage(
+        tuple(d["factor_ids"]),
+        bool(d["prekron"]),
+        TileConfig(*d["tiles"]),
+        tuple(d["t_qs"]) if d.get("t_qs") is not None else None,
+    )
+
+
+def plan_to_json(plan: KronPlan) -> dict:
+    return {
+        "stages": [_stage_to_json(s) for s in plan.stages],
+        "bwd_stages": (
+            [_stage_to_json(s) for s in plan.bwd_stages]
+            if plan.bwd_stages is not None
+            else None
+        ),
+    }
+
+
+def plan_from_json(d: dict) -> KronPlan:
+    return KronPlan(
+        tuple(_stage_from_json(s) for s in d["stages"]),
+        (
+            tuple(_stage_from_json(s) for s in d["bwd_stages"])
+            if d.get("bwd_stages") is not None
+            else None
+        ),
+    )
+
+
+def load_plan_cache(path: str) -> dict:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        if data.get("version") != PLAN_CACHE_VERSION:
+            return {}
+        return data.get("entries", {})
+    except (OSError, ValueError):
+        return {}
+
+
+def save_plan_cache(path: str, entries: dict) -> None:
+    """Atomic write (temp + rename) so concurrent tuners can't corrupt it."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {"version": PLAN_CACHE_VERSION, "entries": entries}
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+
+
+def _measured_plan(
+    prob: KronProblem,
+    *,
+    dtype_bytes: int,
+    backend: str,
+    cache_path: str | None,
+    **plan_kwargs,
+) -> KronPlan:
+    path = cache_path or default_cache_path()
+    key = plan_cache_key(prob, dtype_bytes, backend, **plan_kwargs)
+    entries = load_plan_cache(path)
+    hit = entries.get(key)
+    if hit is not None:
+        return plan_from_json(hit["plan"])
+
+    base = make_plan(
+        prob, dtype_bytes=dtype_bytes, tune="analytic", backend=backend, **plan_kwargs
+    )
+    # Narrowed candidate set (paper §4.3 structure): the analytic winner plus
+    # T_M sweeps applied to every stage, forward and backward.
+    cands = [base]
+    for t_m in (4, 8, 16, 32):
+        if t_m > prob.m or prob.m % t_m:
+            continue
+        retile = lambda st: Stage(
+            st.factor_ids, st.prekron,
+            TileConfig(t_m, st.tiles.t_s, st.tiles.t_q), st.t_qs,
+        )
+        cands.append(
+            KronPlan(
+                tuple(retile(s) for s in base.stages),
+                tuple(retile(s) for s in (base.bwd_stages or ())) or None,
+            )
+        )
+    # Deferred import: fastkron imports this module at load time.
+    from . import fastkron
+
+    dtype = {2: jnp.bfloat16, 4: jnp.float32, 8: jnp.float64}.get(dtype_bytes, jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(0), prob.n + 1)
+    x = jax.random.normal(keys[0], (prob.m, prob.k)).astype(dtype)
+    factors = tuple(
+        jax.random.normal(kk, (p, q)).astype(dtype)
+        for kk, p, q in zip(keys[1:], prob.ps, prob.qs)
+    )
+
+    def fn_of_plan(plan):
+        f = jax.jit(
+            jax.grad(
+                lambda x, fs: fastkron.kron_matmul(
+                    x, fs, backend=backend, plan=plan
+                ).sum().astype(jnp.float32),
+                argnums=(0, 1),
+            )
+        )
+        return lambda: f(x, factors)
+
+    try:
+        best, seconds = measure_best(fn_of_plan, cands, warmup=1, iters=3)
+    except RuntimeError:
+        # No candidate executed (e.g. unsupported backend/dtype combination):
+        # fall back to the analytic plan and don't poison the cache.
+        return base
+    entries[key] = {
+        "plan": plan_to_json(best),
+        "seconds": seconds,
+        "measured_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+    save_plan_cache(path, entries)
+    return best
 
 
 __all__ = [
@@ -241,11 +509,18 @@ __all__ = [
     "Stage",
     "KronPlan",
     "make_plan",
+    "mirror_bwd_stages",
     "tune_sliced",
     "candidate_tiles",
     "predict_seconds",
     "measure_best",
     "vmem_elems",
+    "plan_cache_key",
+    "plan_to_json",
+    "plan_from_json",
+    "load_plan_cache",
+    "save_plan_cache",
+    "default_cache_path",
     "PEAK_FLOPS",
     "HBM_BW",
     "VMEM_BYTES",

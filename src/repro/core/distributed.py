@@ -29,6 +29,18 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+
+def _shard_map(fn, *, mesh, in_specs, out_specs):
+    """Version shim: jax.shard_map(check_vma=...) landed after 0.4.x; fall
+    back to jax.experimental.shard_map.shard_map(check_rep=...)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+
 from ..kernels import ops
 
 
@@ -180,12 +192,11 @@ def kron_matmul_distributed(
         per_iteration=per_iteration,
     )
     spec_x = P(data_axis, model_axis)
-    fn = jax.shard_map(
+    fn = _shard_map(
         lambda x_loc, fs: body(x_loc, tuple(reversed(fs))),
         mesh=mesh,
         in_specs=(spec_x, P()),
         out_specs=spec_x,
-        check_vma=False,
     )
     return fn(x, factors)
 

@@ -9,8 +9,14 @@ pre-kronization) chosen by ``core.autotune.make_plan``.
 Differentiation: the VJP of a Kron-Matmul is itself Kron-shaped —
 ``dX = dY @ (F^1 (x) ... (x) F^N)^T`` — so the backward pass reuses the same
 sliced-multiply machinery with per-stage transposed contractions, rather than
-relying on autodiff tracing through ``pallas_call``.  This makes the Pallas
-and XLA backends interchangeable inside ``jax.grad``.
+relying on autodiff tracing through ``pallas_call``.  When a plan is active
+the backward is PLAN-DRIVEN end to end: stage inputs are rematerialized with
+the forward plan's fused stages (CSE'd against the forward pass under jit),
+the input cotangent runs through the fused transposed kernels
+(``ops.fused_kron_t`` / ``ops.fused_kron_bwd``), and factor gradients are
+computed inside the same fused stage backward — no unfused per-factor XLA
+loop.  ``symbolic_zeros`` perturbation flags skip factor-gradient work
+entirely when only ``dx`` is needed (inference-style ``jax.grad`` over x).
 """
 from __future__ import annotations
 
@@ -32,16 +38,21 @@ from .kron import KronProblem
 # ---------------------------------------------------------------------------
 
 
+def _prekron_factor(stage_factors: Sequence[jax.Array]) -> jax.Array:
+    # stage_factors are in APPLICATION order (rev[i], rev[i+1], ...);
+    # the explicit Kronecker product must be formed in PROBLEM order,
+    # i.e. kron(rev[i+1], rev[i]):  x @ (A (x) B) applies B first.
+    f = stage_factors[-1]
+    for g in reversed(stage_factors[:-1]):
+        f = jnp.kron(f, g)
+    return f
+
+
 def _stage_forward(
     y: jax.Array, stage_factors: Sequence[jax.Array], stage: Stage, backend: str
 ) -> jax.Array:
     if stage.prekron:
-        # stage_factors are in APPLICATION order (rev[i], rev[i+1], ...);
-        # the explicit Kronecker product must be formed in PROBLEM order,
-        # i.e. kron(rev[i+1], rev[i]):  x @ (A (x) B) applies B first.
-        f = stage_factors[-1]
-        for g in reversed(stage_factors[:-1]):
-            f = jnp.kron(f, g)
+        f = _prekron_factor(stage_factors)
         return ops.sliced_multiply(y, f, backend=backend, tiles=stage.tiles.as_tuple)
     if len(stage_factors) == 1:
         return ops.sliced_multiply(
@@ -50,12 +61,13 @@ def _stage_forward(
     pprod = math.prod(int(f.shape[0]) for f in stage_factors)
     t_k = stage.tiles.t_s * pprod
     return ops.fused_kron(
-        y, stage_factors, backend=backend, t_m=stage.tiles.t_m, t_k=t_k
+        y, stage_factors, backend=backend, t_m=stage.tiles.t_m, t_k=t_k,
+        t_qs=stage.t_qs,
     )
 
 
 # ---------------------------------------------------------------------------
-# VJP building blocks (pure jnp; MXU-friendly einsums on TPU)
+# VJP building blocks
 # ---------------------------------------------------------------------------
 
 
@@ -77,9 +89,106 @@ def _sliced_vjp_factor(u: jax.Array, g: jax.Array, p: int, q: int) -> jax.Array:
     return jnp.einsum("msp,mqs->pq", u3.astype(acc), g3.astype(acc))
 
 
+def _prekron_vjp(dK: jax.Array, stage_factors: Sequence[jax.Array]) -> tuple:
+    """Split the cotangent of kron(rev[i+1], ..., rev[i]) back into per-factor
+    cotangents, in ``stage_factors`` (application) order."""
+    if len(stage_factors) == 1:
+        return (dK,)
+    a = stage_factors[0]
+    b = _prekron_factor(stage_factors[1:])
+    pa, qa = int(a.shape[0]), int(a.shape[1])
+    pb, qb = int(b.shape[0]), int(b.shape[1])
+    acc = jnp.promote_types(dK.dtype, jnp.float32)
+    dk4 = dK.reshape(pb, pa, qb, qa).astype(acc)
+    da = jnp.einsum("bpcq,bc->pq", dk4, b.astype(acc))
+    db = jnp.einsum("bpcq,pq->bc", dk4, a.astype(acc))
+    return (da,) + _prekron_vjp(db, stage_factors[1:])
+
+
 # ---------------------------------------------------------------------------
 # Planned, differentiable core
 # ---------------------------------------------------------------------------
+
+
+def _default_bwd_stages(plan: KronPlan) -> tuple[Stage, ...]:
+    return plan.bwd_stages or tuple(reversed(plan.stages))
+
+
+def _stage_bwd_per_factor(u, g, stage_factors, backend):
+    """Stage backward as per-factor planned ops — the fallback when the
+    one-kernel fused backward cannot hold the stage's growth in VMEM (e.g.
+    Q-tiled stages: the forward tiles Q, but the backward needs every
+    factor-gradient pair).  Still stage-local and dispatch-routed."""
+    inputs = [u]
+    for f in stage_factors[:-1]:
+        inputs.append(ops.sliced_multiply(inputs[-1], f, backend=backend))
+    dfs = [None] * len(stage_factors)
+    for idx in reversed(range(len(stage_factors))):
+        f = stage_factors[idx]
+        p, q = int(f.shape[0]), int(f.shape[1])
+        dfs[idx] = _sliced_vjp_factor(inputs[idx], g, p, q)
+        g = ops.sliced_multiply_t(g, f, backend=backend)
+    return g, tuple(dfs)
+
+
+def _planned_bwd(plan: KronPlan, backend: str, x, factors, g, f_pert: bool):
+    """Execute the backward plan: returns (dx, dfs_by_rev_id or None)."""
+    rev = tuple(reversed(factors))
+    stage_factors = [tuple(rev[i] for i in st.factor_ids) for st in plan.stages]
+    # Stage inputs rematerialized with the FORWARD plan (fused stages, not an
+    # unfused per-factor loop); under jit XLA CSEs these against the primal
+    # forward chain, so the remat is effectively free at stage granularity.
+    stage_inputs = []
+    y = x
+    for idx, (st, sf) in enumerate(zip(plan.stages, stage_factors)):
+        stage_inputs.append(y)
+        if idx + 1 < len(plan.stages):
+            y = _stage_forward(y, sf, st, backend)
+    bwd_sts = _default_bwd_stages(plan)
+    dfs_by_id: dict[int, jax.Array] = {}
+    for rev_idx in range(len(plan.stages) - 1, -1, -1):
+        st = plan.stages[rev_idx]
+        bst = bwd_sts[len(plan.stages) - 1 - rev_idx]
+        sf = stage_factors[rev_idx]
+        u = stage_inputs[rev_idx]
+        pprod = math.prod(int(f.shape[0]) for f in sf)
+        t_k = st.tiles.t_s * pprod
+        if st.prekron:
+            fk = _prekron_factor(sf)
+            if f_pert:
+                try:
+                    g, (dk,) = ops.fused_kron_bwd(
+                        u, g, (fk,), backend=backend, t_m=bst.tiles.t_m
+                    )
+                except ValueError:
+                    g, (dk,) = _stage_bwd_per_factor(u, g, (fk,), backend)
+                for fid, d in zip(st.factor_ids, _prekron_vjp(dk, sf)):
+                    dfs_by_id[fid] = d
+            else:
+                g = ops.sliced_multiply_t(
+                    g, fk, backend=backend, tiles=bst.tiles.as_tuple
+                )
+        elif f_pert:
+            try:
+                g, dfs = ops.fused_kron_bwd(
+                    u, g, sf, backend=backend, t_m=bst.tiles.t_m, t_k=t_k
+                )
+            except ValueError:
+                # Fused backward tile exceeds VMEM (Q-tiled forward stages
+                # have no Q relief on the gradient-pair side) — run the
+                # stage per factor, still through planned dispatch.
+                g, dfs = _stage_bwd_per_factor(u, g, sf, backend)
+            for fid, d in zip(st.factor_ids, dfs):
+                dfs_by_id[fid] = d
+        elif len(sf) == 1:
+            g = ops.sliced_multiply_t(
+                g, sf[0], backend=backend, tiles=bst.tiles.as_tuple
+            )
+        else:
+            g = ops.fused_kron_t(
+                g, sf, backend=backend, t_m=bst.tiles.t_m, t_k=t_k, t_qs=st.t_qs
+            )
+    return g, (dfs_by_id if f_pert else None)
 
 
 @functools.lru_cache(maxsize=None)
@@ -102,35 +211,75 @@ def _build_kron_fn(n: int, backend: str, plan: KronPlan | None):
     def kron_fn(x, factors):
         return fwd_only(x, factors)
 
-    def kron_fwd(x, factors):
-        # Residuals: just (x, factors).  The per-factor intermediates are
-        # recomputed in bwd (rematerialization): storing them would cost
-        # ~N*M*K extra memory, while recompute adds <= 1x forward FLOPs —
-        # the right trade inside LM training where this op lives under scan.
-        return fwd_only(x, factors), (x, factors)
+    def kron_fwd(x_p, factors_p):
+        x = x_p.value
+        factors = tuple(f.value for f in factors_p)
+        # Residuals: just (x, factors) plus static perturbation flags.  The
+        # per-factor intermediates are recomputed in bwd (rematerialization):
+        # storing them would cost ~N*M*K extra memory, while recompute adds
+        # <= 1x forward FLOPs and is CSE'd against the primal under jit.
+        f_pert = any(bool(f.perturbed) for f in factors_p)
+        return fwd_only(x, factors), (x, factors, f_pert)
 
     def kron_bwd(res, g):
-        x, factors = res
+        x, factors, f_pert = res
+        if isinstance(g, jax.custom_derivatives.SymbolicZero):
+            return jnp.zeros_like(x), tuple(jnp.zeros_like(f) for f in factors)
         rev = tuple(reversed(factors))
-        inputs = []
-        y = x
-        for i, f in enumerate(rev):
-            inputs.append(y)
-            if i + 1 < len(rev):
-                y = ops.sliced_multiply(y, f, backend="xla")
-        dfs_rev = []
-        for i in reversed(range(len(rev))):  # last applied stage first
-            f = rev[i]
-            p, q = int(f.shape[0]), int(f.shape[1])
-            u = inputs[i]
-            dfs_rev.append(_sliced_vjp_factor(u, g, p, q).astype(f.dtype))
-            g = _sliced_vjp_input(g, f, backend=backend)
-        dfs = tuple(reversed(dfs_rev))  # back to application order
-        dfactors = tuple(reversed(dfs))  # back to problem order F^1..F^N
-        return g, dfactors
+        if plan is None:
+            # Paper-faithful unfused loop (the C1 baseline's backward): one
+            # transposed sliced multiply + factor contraction per factor.
+            inputs = []
+            y = x
+            for i, f in enumerate(rev):
+                inputs.append(y)
+                if i + 1 < len(rev):
+                    y = ops.sliced_multiply(y, f, backend="xla")
+            dfs_rev = []
+            for i in reversed(range(len(rev))):  # last applied stage first
+                f = rev[i]
+                p, q = int(f.shape[0]), int(f.shape[1])
+                u = inputs[i]
+                dfs_rev.append(_sliced_vjp_factor(u, g, p, q).astype(f.dtype))
+                g = _sliced_vjp_input(g, f, backend=backend)
+            dfactors = tuple(dfs_rev)  # appended rev[n-1]..rev[0] == F^1..F^N
+            return g, dfactors
+        dx, dfs_by_id = _planned_bwd(plan, backend, x, factors, g, f_pert)
+        nf = len(factors)
+        if dfs_by_id is None:
+            dfactors = tuple(jnp.zeros_like(f) for f in factors)
+        else:
+            dfactors = tuple(
+                dfs_by_id[nf - 1 - j].astype(factors[j].dtype) for j in range(nf)
+            )
+        return dx.astype(x.dtype), dfactors
 
-    kron_fn.defvjp(kron_fwd, kron_bwd)
+    kron_fn.defvjp(kron_fwd, kron_bwd, symbolic_zeros=True)
     return kron_fn
+
+
+@functools.lru_cache(maxsize=None)
+def _plan_for(
+    m: int,
+    ps: tuple[int, ...],
+    qs: tuple[int, ...],
+    dtype_bytes: int,
+    backend: str,
+    enable_prekron: bool,
+    tune: str,
+    cache_path: str | None,
+) -> KronPlan:
+    """Memoized make_plan: repeated kron_matmul calls skip Python planning
+    overhead entirely (and, in tune="measure" mode, re-measurement — the
+    on-disk cache covers new processes)."""
+    return autotune.make_plan(
+        KronProblem(m, ps, qs),
+        dtype_bytes=dtype_bytes,
+        enable_prekron=enable_prekron,
+        tune=tune,
+        backend=backend,
+        cache_path=cache_path,
+    )
 
 
 def kron_matmul(
@@ -139,11 +288,15 @@ def kron_matmul(
     *,
     backend: str = "auto",
     plan: KronPlan | str | None = "auto",
+    tune: str = "analytic",
+    cache_path: str | None = None,
 ) -> jax.Array:
     """``x @ (F^1 (x) ... (x) F^N)`` for ``x: (..., prod P_i)``.
 
     plan: ``"auto"`` builds one with autotune.make_plan; ``None`` runs the
     paper-faithful unfused per-factor path; or pass an explicit KronPlan.
+    tune: ``"analytic"`` (model-ranked tiles) or ``"measure"`` (wall-clock
+    ranked via autotune.measure_best, persisted in the on-disk plan cache).
     """
     factors = tuple(factors)
     ps = tuple(int(f.shape[0]) for f in factors)
@@ -158,10 +311,13 @@ def kron_matmul(
         # pre-kronization trades FLOPs for MXU contraction depth — a win on
         # the 128x128 systolic array, measured a LOSS on CPU AVX (see
         # EXPERIMENTS.md §Perf); auto-plans enable it only on TPU.
-        plan = autotune.make_plan(
-            prob,
-            dtype_bytes=x.dtype.itemsize,
-            enable_prekron=jax.default_backend() == "tpu",
+        plan = _plan_for(
+            m, ps, qs,
+            x.dtype.itemsize,
+            backend,
+            jax.default_backend() == "tpu",
+            tune,
+            cache_path,
         )
     fn = _build_kron_fn(len(factors), backend, plan)
     y = fn(x.reshape(m, k), factors)

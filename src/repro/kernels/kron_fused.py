@@ -15,8 +15,20 @@ boundary.  The final store target is the contiguous block
 ``(T_M, prod(Q_i), T_K/prod(P_i))`` of the ``(M, prod(Q), K/prod(P))`` output
 view — the paper's STOREFUSEDSHMEM index arithmetic, expressed as a BlockSpec.
 
-VMEM budget: the live set is two tiles of ``T_M * T_K * max(1, (Q/P)^j)``
-elements (f32 accumulation), so the wrapper checks
+Q-tiling (lifts the VMEM-growth restriction): later factors never contract
+the ``q`` indices produced by earlier ones — they only slice along ``s`` — so
+each factor's output columns are pure batch indices.  Restricting factor
+``i`` to a ``T_Qi``-column slice therefore computes exactly the output block
+whose ``q_i`` digit lies in that slice, independently of all other Q-tiles.
+The grid gains a composite Q axis (``grid = (M/T_M, Q-tiles, K/T_K)``) whose
+index decomposes into one digit per factor, the output becomes the
+``(M, Q_n, ..., Q_1, K/prod(P))`` view tiled per digit, and the in-VMEM
+growth bound uses ``prod(T_Qi)`` instead of ``prod(Q_i)`` — fusion stays
+legal when ``prod(Q)/prod(P)`` is large.
+
+VMEM budget: the live set is two tiles of ``T_M * T_K * max(1, growth_j)``
+elements (f32 accumulation) where ``growth_j = prod(T_Qi)/prod(P_i)`` over
+chain prefixes, so the wrapper checks
 ``T_M * T_K * growth <= vmem_budget_elems``.
 """
 from __future__ import annotations
@@ -40,7 +52,8 @@ def _fused_kernel(x_ref, *refs, ps: tuple[int, ...], qs: tuple[int, ...], acc_dt
     y = x_ref[...]
     cols = x_ref.shape[1]
     # Chain the factors, last factor first (Algorithm 1 order: callers pass
-    # factors already reversed so f_refs[0] is F^N).
+    # factors already reversed so f_refs[0] is F^N).  ``qs`` are the per-tile
+    # Q sizes (== full Q when the Q axis is not tiled).
     for f_ref, p, q in zip(f_refs, ps, qs):
         s = cols // p
         x2 = y.reshape(t_m * s, p)
@@ -54,15 +67,30 @@ def _fused_kernel(x_ref, *refs, ps: tuple[int, ...], qs: tuple[int, ...], acc_dt
     y_ref[...] = y.reshape(y_ref.shape).astype(y_ref.dtype)
 
 
+def fused_growth(
+    ps: Sequence[int], qs: Sequence[int], t_qs: Sequence[int] | None = None
+) -> float:
+    """Max live-set multiplier over chain prefixes, with optional Q-tiling."""
+    t_qs = tuple(t_qs) if t_qs is not None else tuple(qs)
+    g = 1.0
+    pprod = qprod = 1
+    for p, tq in zip(ps, t_qs):
+        pprod *= p
+        qprod *= tq
+        g = max(g, qprod / pprod)
+    return g
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("t_m", "t_k", "interpret", "acc_dtype", "vmem_budget_elems"),
+    static_argnames=("t_m", "t_k", "t_qs", "interpret", "acc_dtype", "vmem_budget_elems"),
 )
 def fused_kron_pallas(
     x: jax.Array,
     *factors_last_first: jax.Array,
     t_m: int = 8,
     t_k: int | None = None,
+    t_qs: tuple[int, ...] | None = None,
     interpret: bool = False,
     acc_dtype=None,
     vmem_budget_elems: int = VMEM_BUDGET_ELEMS,
@@ -71,10 +99,13 @@ def fused_kron_pallas(
 
     ``factors_last_first[0]`` is applied first (i.e. it is F^N).  Returns the
     (M, K * prod(Q)/prod(P)) intermediate after all given factors.
+    ``t_qs`` (one entry per factor, each dividing Q_i) tiles the composite
+    output-Q axis so the in-VMEM growth uses prod(t_qs) instead of prod(Q).
     """
     if acc_dtype is None:
         acc_dtype = jnp.promote_types(x.dtype, jnp.float32)
     m, k = x.shape
+    n = len(factors_last_first)
     ps = tuple(int(f.shape[0]) for f in factors_last_first)
     qs = tuple(int(f.shape[1]) for f in factors_last_first)
     pprod = math.prod(ps)
@@ -83,34 +114,59 @@ def fused_kron_pallas(
         raise ValueError(f"K={k} not divisible by prod(P)={pprod}")
     t_m = min(t_m, m)
     t_k = min(t_k or k, k)
+    if t_qs is None:
+        t_qs = qs
+    t_qs = tuple(min(t, q) for t, q in zip(t_qs, qs))
+    if len(t_qs) != n:
+        raise ValueError(f"t_qs needs one entry per factor: {t_qs} vs {n}")
+    if any(q % t for q, t in zip(qs, t_qs)):
+        raise ValueError(f"t_qs must divide factor Q dims: {t_qs} vs {qs}")
     # Fusion validity: every slice of every fused stage stays inside the tile.
     if t_k % pprod:
         raise ValueError(f"T_K={t_k} must be a multiple of prod(P)={pprod}")
-    growth = max(
-        [1.0]
-        + [math.prod(qs[: i + 1]) / math.prod(ps[: i + 1]) for i in range(len(ps))]
-    )
+    growth = fused_growth(ps, qs, t_qs)
     if t_m * t_k * growth > vmem_budget_elems:
         raise ValueError(
             f"tile {t_m}x{t_k} (growth {growth:.2f}) exceeds VMEM budget; "
-            f"reduce t_k or n_fused"
+            f"reduce t_k / n_fused or tile Q via t_qs"
         )
     if m % t_m or k % t_k:
         raise ValueError(f"tiles must divide dims: {(m, k)} vs {(t_m, t_k)}")
 
     s_out = k // pprod          # global output minor dim
     ts_out = t_k // pprod       # per-tile share of it
-    grid = (m // t_m, k // t_k)
-    in_specs = [pl.BlockSpec((t_m, t_k), lambda i, j: (i, j))]
-    for f in factors_last_first:
-        p, q = f.shape
-        in_specs.append(pl.BlockSpec((p, q), lambda i, j: (0, 0)))
+    # Composite Q-tile grid axis: one mixed-radix digit per factor, factor 0
+    # (applied first) minor — matching the output layout (q_n, ..., q_1, s).
+    nq = tuple(q // t for q, t in zip(qs, t_qs))
+    strides = [1] * n
+    for i in range(1, n):
+        strides[i] = strides[i - 1] * nq[i - 1]
+    nq_tiles = math.prod(nq)
+
+    def q_digit(jq, i):
+        return (jq // strides[i]) % nq[i]
+
+    grid = (m // t_m, nq_tiles, k // t_k)
+    in_specs = [pl.BlockSpec((t_m, t_k), lambda i, jq, j: (i, j))]
+    for i, f in enumerate(factors_last_first):
+        p = ps[i]
+        in_specs.append(
+            pl.BlockSpec((p, t_qs[i]), lambda i_m, jq, j, i=i: (0, q_digit(jq, i)))
+        )
+    # Output view (M, Q_{n-1}, ..., Q_0, S): row-major it flattens to the
+    # FastKron layout (M, prod(Q)*S); each Q axis is tiled by its own digit.
+    out_view = (m,) + tuple(reversed(qs)) + (s_out,)
+    out_block = (t_m,) + tuple(reversed(t_qs)) + (ts_out,)
+
+    def out_index(i_m, jq, j):
+        return (i_m,) + tuple(q_digit(jq, i) for i in reversed(range(n))) + (j,)
+
     out = pl.pallas_call(
-        functools.partial(_fused_kernel, ps=ps, qs=qs, acc_dtype=acc_dtype),
+        functools.partial(_fused_kernel, ps=ps, qs=t_qs, acc_dtype=acc_dtype),
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((t_m, qprod, ts_out), lambda i, j: (i, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((m, qprod, s_out), x.dtype),
+        out_specs=pl.BlockSpec(out_block, out_index),
+        out_shape=jax.ShapeDtypeStruct(out_view, x.dtype),
         interpret=interpret,
     )(x, *factors_last_first)
     return out.reshape(m, qprod * s_out)

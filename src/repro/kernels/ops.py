@@ -4,12 +4,15 @@ Three backends for one sliced multiply / fused chain:
 
   * ``xla``     — the pure-jnp einsum formulation (kernels/ref.py semantics,
                   but in the input dtype with f32 accumulation).  On CPU this
-                  is the fast path; on TPU XLA fuses it reasonably but cannot
-                  chain factors in VMEM.
-  * ``pallas``  — the Pallas TPU kernels (kron_sliced.py / kron_fused.py).
-                  ``interpret=True`` is forced automatically off-TPU so the
-                  same call sites work in this CPU container (correctness
-                  validation) and on real hardware (performance).
+                  is the fast path; fused chains additionally run as a
+                  ``lax.scan`` over M-tiles so the whole per-tile chain stays
+                  cache-resident — the CPU analogue of the Pallas kernel's
+                  VMEM fusion (see EXPERIMENTS.md §Backward).
+  * ``pallas``  — the Pallas TPU kernels (kron_sliced.py / kron_fused.py /
+                  kron_fused_t.py).  ``interpret=True`` is forced
+                  automatically off-TPU so the same call sites work in this
+                  CPU container (correctness validation) and on real hardware
+                  (performance).
   * ``auto``    — pallas on TPU, xla elsewhere.
 
 The wrappers are shape-polymorphic dispatchers, not jitted themselves: the
@@ -24,7 +27,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from . import kron_fused, kron_sliced, kron_sliced_t
+from . import kron_fused, kron_fused_t, kron_sliced, kron_sliced_t
 from . import ref as _ref
 
 Backend = str  # "auto" | "xla" | "pallas"
@@ -49,8 +52,7 @@ def acc_dtype_for(dtype) -> jnp.dtype:
     return jnp.promote_types(dtype, jnp.float32)
 
 
-@jax.jit
-def _sliced_xla(x: jax.Array, f: jax.Array) -> jax.Array:
+def _sliced_body(x: jax.Array, f: jax.Array) -> jax.Array:
     m, k = x.shape
     p, q = f.shape
     s = k // p
@@ -61,6 +63,9 @@ def _sliced_xla(x: jax.Array, f: jax.Array) -> jax.Array:
     return (
         jnp.swapaxes(acc.reshape(m, s, q), 1, 2).reshape(m, q * s).astype(x.dtype)
     )
+
+
+_sliced_xla = jax.jit(_sliced_body)
 
 
 def sliced_multiply(
@@ -80,8 +85,7 @@ def sliced_multiply(
     )
 
 
-@jax.jit
-def _sliced_t_xla(dy: jax.Array, f: jax.Array) -> jax.Array:
+def _sliced_t_body(dy: jax.Array, f: jax.Array) -> jax.Array:
     m, l = dy.shape
     p, q = f.shape
     s = l // q
@@ -92,6 +96,9 @@ def _sliced_t_xla(dy: jax.Array, f: jax.Array) -> jax.Array:
         preferred_element_type=acc_dtype_for(dy.dtype),
     )
     return acc.reshape(m, s * p).astype(dy.dtype)
+
+
+_sliced_t_xla = jax.jit(_sliced_t_body)
 
 
 def sliced_multiply_t(
@@ -111,6 +118,41 @@ def sliced_multiply_t(
     )
 
 
+# ---------------------------------------------------------------------------
+# Fused chains (C3): Pallas kernels on TPU, M-tiled lax.scan on XLA/CPU
+# ---------------------------------------------------------------------------
+
+
+def _xla_tile_rows(m: int, t_m: int) -> int | None:
+    """Effective M-tile for the scan-fused XLA path, or None to run untiled.
+
+    Tiling pays off only when the tile chain fits cache and there are enough
+    tiles to amortize the scan; tiny analytic t_m values (tuned for the TPU
+    sublane) are clamped up to a useful CPU tile.
+    """
+    t = min(m, max(t_m, 8))
+    if t >= m or m % t or m // t < 2:
+        return None
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("t_m",))
+def _fused_xla(x: jax.Array, factors: tuple[jax.Array, ...], t_m: int) -> jax.Array:
+    def chain(y):
+        for f in factors:
+            y = _sliced_body(y, f)
+        return y
+
+    m, k = x.shape
+    t = _xla_tile_rows(m, t_m)
+    if t is None:
+        return chain(x)
+    _, yt = jax.lax.scan(
+        lambda _, xt: (None, chain(xt)), None, x.reshape(m // t, t, k)
+    )
+    return yt.reshape(m, -1)
+
+
 def fused_kron(
     x: jax.Array,
     factors_last_first: Sequence[jax.Array],
@@ -118,16 +160,128 @@ def fused_kron(
     backend: Backend = "auto",
     t_m: int = 8,
     t_k: int | None = None,
+    t_qs: tuple[int, ...] | None = None,
 ) -> jax.Array:
     """Chain of sliced multiplies in one kernel (C3).  factors[0] == F^N."""
     b = resolve_backend(backend)
     if b == "xla":
-        y = x
-        for f in factors_last_first:
-            y = _sliced_xla(y, f)
-        return y
+        return _fused_xla(x, tuple(factors_last_first), t_m)
     return kron_fused.fused_kron_pallas(
-        x, *factors_last_first, t_m=t_m, t_k=t_k, interpret=_interpret()
+        x, *factors_last_first, t_m=t_m, t_k=t_k, t_qs=t_qs, interpret=_interpret()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("t_m",))
+def _fused_t_xla(dy: jax.Array, factors: tuple[jax.Array, ...], t_m: int) -> jax.Array:
+    def chain(g):
+        for f in reversed(factors):
+            g = _sliced_t_body(g, f)
+        return g
+
+    m, l = dy.shape
+    t = _xla_tile_rows(m, t_m)
+    if t is None:
+        return chain(dy)
+    _, gt = jax.lax.scan(
+        lambda _, gt_: (None, chain(gt_)), None, dy.reshape(m // t, t, l)
+    )
+    return gt.reshape(m, -1)
+
+
+def fused_kron_t(
+    dy: jax.Array,
+    factors_last_first: Sequence[jax.Array],
+    *,
+    backend: Backend = "auto",
+    t_m: int = 8,
+    t_k: int | None = None,
+    t_qs: tuple[int, ...] | None = None,
+) -> jax.Array:
+    """Transposed fused chain: the input cotangent of ``fused_kron``.
+
+    Takes the SAME factor list as the forward call and un-applies the chain
+    (last-applied factor's transpose first).
+    """
+    b = resolve_backend(backend)
+    if b == "xla":
+        return _fused_t_xla(dy, tuple(factors_last_first), t_m)
+    return kron_fused_t.fused_kron_t_pallas(
+        dy, *factors_last_first, t_m=t_m, t_k=t_k, t_qs=t_qs, interpret=_interpret()
+    )
+
+
+def _fused_bwd_tile(us_first, g, factors, acc):
+    """Backward of one chain tile: shared relayout per factor feeds both the
+    factor-gradient GEMM and the chain-step GEMM."""
+    t_m = g.shape[0]
+    us = [us_first]
+    y = us_first
+    for f in factors[:-1]:
+        y = _sliced_body(y, f)
+        us.append(y)
+    dfs = [None] * len(factors)
+    cols = g.shape[1]
+    for idx in reversed(range(len(factors))):
+        f = factors[idx]
+        p, q = int(f.shape[0]), int(f.shape[1])
+        s = cols // q
+        g2 = jnp.swapaxes(g.reshape(t_m, q, s), 1, 2).reshape(t_m * s, q)
+        u2 = us[idx].reshape(t_m * s, p)
+        dfs[idx] = jax.lax.dot_general(
+            u2.astype(acc), g2.astype(acc), (((0,), (0,)), ((), ())),
+            preferred_element_type=acc,
+        )
+        g = jax.lax.dot_general(
+            g2, f, (((1,), (1,)), ((), ())), preferred_element_type=acc
+        ).reshape(t_m, s * p).astype(g.dtype)
+        cols = s * p
+    return dfs, g
+
+
+@functools.partial(jax.jit, static_argnames=("t_m",))
+def _fused_bwd_xla(
+    x: jax.Array, dy: jax.Array, factors: tuple[jax.Array, ...], t_m: int
+):
+    acc = acc_dtype_for(dy.dtype)
+    m, k = x.shape
+    t = _xla_tile_rows(m, t_m)
+    if t is None:
+        dfs, dx = _fused_bwd_tile(x, dy, factors, acc)
+        return dx, tuple(dfs)
+
+    def body(carry, xg):
+        dfs, g = _fused_bwd_tile(xg[0], xg[1], factors, acc)
+        return tuple(c + d for c, d in zip(carry, dfs)), g
+
+    carry0 = tuple(jnp.zeros(f.shape, acc) for f in factors)
+    dfs, dxt = jax.lax.scan(
+        body, carry0, (x.reshape(m // t, t, k), dy.reshape(m // t, t, -1))
+    )
+    return dxt.reshape(m, k), dfs
+
+
+def fused_kron_bwd(
+    x: jax.Array,
+    dy: jax.Array,
+    factors_last_first: Sequence[jax.Array],
+    *,
+    backend: Backend = "auto",
+    t_m: int = 8,
+    t_k: int | None = None,
+) -> tuple[jax.Array, tuple[jax.Array, ...]]:
+    """Full backward of one fused stage: (dx, per-factor grads).
+
+    x is the stage input, dy the stage output cotangent; factor grads are
+    returned in ``factors_last_first`` order, accumulated in f32 (callers
+    cast).  On XLA this runs as one M-tiled scan whose per-tile body
+    rematerializes the forward chain in cache; on TPU it is a single Pallas
+    kernel doing the same in VMEM (kron_fused_t.fused_kron_bwd_pallas).
+    """
+    b = resolve_backend(backend)
+    if b == "xla":
+        return _fused_bwd_xla(x, dy, tuple(factors_last_first), t_m)
+    return kron_fused_t.fused_kron_bwd_pallas(
+        x, dy, *factors_last_first, t_m=t_m, t_k=t_k, interpret=_interpret()
     )
 
 
@@ -135,13 +289,18 @@ def fused_kron(
 sliced_multiply_ref = _ref.sliced_multiply_ref
 fused_kron_ref = _ref.fused_kron_ref
 sliced_multiply_t_ref = _ref.sliced_multiply_t_ref
+fused_kron_t_ref = _ref.fused_kron_t_ref
 
 __all__ = [
     "sliced_multiply",
     "sliced_multiply_t",
     "fused_kron",
+    "fused_kron_t",
+    "fused_kron_bwd",
     "resolve_backend",
+    "acc_dtype_for",
     "sliced_multiply_ref",
     "sliced_multiply_t_ref",
     "fused_kron_ref",
+    "fused_kron_t_ref",
 ]

@@ -43,3 +43,12 @@ def sliced_multiply_t_ref(dy: jax.Array, f: jax.Array) -> jax.Array:
         f.astype(jnp.float32),
     )
     return acc.reshape(m, s * p).astype(dy.dtype)
+
+
+def fused_kron_t_ref(dy: jax.Array, factors: Sequence[jax.Array]) -> jax.Array:
+    """Transposed chain: un-applies ``factors`` (problem order, F^1 first) in
+    reverse of the forward application order, i.e. F^1's transpose first."""
+    g = dy
+    for f in factors:
+        g = sliced_multiply_t_ref(g, f)
+    return g

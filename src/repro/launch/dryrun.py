@@ -74,6 +74,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str | None):
 
     mem = compiled.memory_analysis()
     raw_cost = compiled.cost_analysis()
+    # jax < 0.5 returns a one-element list of dicts, newer versions the dict.
+    if isinstance(raw_cost, (list, tuple)):
+        raw_cost = raw_cost[0] if raw_cost else {}
     hlo = compiled.as_text()
     # trip-count-weighted analysis: compiled.cost_analysis() counts scan
     # bodies ONCE (verified), under-reporting layer stacks by 24-100x.

@@ -1,4 +1,7 @@
-"""Autotuner (C5): analytic model sanity + measured ranking."""
+"""Autotuner (C5): analytic model sanity + measured ranking + plan cache."""
+import math
+import os
+
 import jax
 import jax.numpy as jnp
 import pytest
@@ -6,13 +9,18 @@ import pytest
 from repro.core.autotune import (
     TileConfig,
     candidate_tiles,
+    load_plan_cache,
     make_plan,
     measure_best,
+    plan_cache_key,
+    plan_from_json,
+    plan_to_json,
     predict_seconds,
     tune_sliced,
     vmem_elems,
 )
 from repro.core.kron import KronProblem
+from repro.kernels.kron_fused import fused_growth
 
 
 def test_candidates_respect_vmem():
@@ -50,6 +58,81 @@ def test_plan_no_fusion_when_disabled():
         enable_fusion=False,
     )
     assert all(len(st.factor_ids) == 1 for st in plan.stages)
+
+
+def test_plan_stages_respect_vmem_budget():
+    """Every fused stage's (t_m, T_K, growth) must fit the kernel's VMEM
+    budget — including expanding chains where Q-tiling provides the relief."""
+    budget = 2 * 1024 * 1024
+    for prob in [
+        KronProblem.uniform(64, 4, 4, 6),
+        KronProblem.uniform(256, 16, 16, 4),
+        KronProblem(64, (2, 2, 2, 2, 2), (8, 8, 8, 8, 8)),    # growth, untiled
+        KronProblem(64, (2, 2, 2, 2, 2), (32, 32, 32, 32, 32)),  # Q-tiled
+        KronProblem(32, (4, 2, 8), (8, 4, 2)),
+    ]:
+        plan = make_plan(prob, enable_prekron=False, vmem_budget_elems=budget)
+        ps = list(reversed(prob.ps))
+        qs = list(reversed(prob.qs))
+        for st in plan.stages:
+            if len(st.factor_ids) <= 1:
+                continue
+            sps = [ps[i] for i in st.factor_ids]
+            sqs = [qs[i] for i in st.factor_ids]
+            t_k = st.tiles.t_s * math.prod(sps)
+            growth = fused_growth(sps, sqs, st.t_qs)
+            assert st.tiles.t_m * t_k * growth <= budget, (
+                prob, st, t_k, growth
+            )
+
+
+def test_plan_q_tiling_extends_fusion_on_expanding_chains():
+    """Expanding chains (Q >> P) fuse further than the untiled budget allows
+    because the plan Q-tiles the growing factors."""
+    prob = KronProblem(64, (2, 2, 2, 2, 2), (32, 32, 32, 32, 32))
+    plan = make_plan(prob, enable_prekron=False)
+    assert any(
+        len(st.factor_ids) > 1 and st.t_qs is not None for st in plan.stages
+    ), plan.describe()
+
+
+def test_plan_has_mirrored_bwd_stages():
+    prob = KronProblem(16, (4, 2, 3), (3, 2, 4))
+    plan = make_plan(prob, enable_prekron=False)
+    assert plan.bwd_stages is not None
+    fwd_ids = [st.factor_ids for st in plan.stages]
+    bwd_ids = [st.factor_ids for st in plan.bwd_stages]
+    assert bwd_ids == list(reversed(fwd_ids))
+
+
+def test_plan_json_roundtrip():
+    prob = KronProblem(64, (2, 2, 2, 2, 2), (8, 8, 8, 8, 8))
+    plan = make_plan(prob, enable_prekron=False)
+    assert plan_from_json(plan_to_json(plan)) == plan
+
+
+def test_measured_plan_cache_hit_skips_measurement(tmp_path):
+    """tune="measure" persists the winner; the second call must not measure
+    (we poison measure_best to prove the cache path is taken)."""
+    import repro.core.autotune as at
+
+    cache = str(tmp_path / "plans.json")
+    prob = KronProblem(8, (4, 4), (4, 4))
+    plan1 = make_plan(prob, tune="measure", backend="xla", cache_path=cache)
+    assert os.path.exists(cache)
+    key = plan_cache_key(prob, 4, "xla")
+    entries = load_plan_cache(cache)
+    assert key in entries and entries[key]["seconds"] > 0
+
+    orig = at.measure_best
+    at.measure_best = lambda *a, **k: (_ for _ in ()).throw(
+        AssertionError("measure_best called on cache hit")
+    )
+    try:
+        plan2 = make_plan(prob, tune="measure", backend="xla", cache_path=cache)
+    finally:
+        at.measure_best = orig
+    assert plan2 == plan1
 
 
 def test_measure_best_ranks_by_wallclock():

@@ -201,3 +201,141 @@ def test_ops_fused_dispatch_both_backends(backend):
     got = ops.fused_kron(x, [f1, f2], backend=backend, t_m=2, t_k=16)
     want = fused_kron_ref(x, [f2, f1])
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Q-tiled fused forward + fused transposed / backward kernels
+# ---------------------------------------------------------------------------
+
+
+def _mk_chain(seed, m, ps, qs):
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(ps) + 1)
+    x = jax.random.normal(keys[0], (m, math.prod(ps)), jnp.float32)
+    factors_last_first = [
+        jax.random.normal(k, (p, q), jnp.float32)
+        for k, p, q in zip(keys[1:], ps, qs)
+    ]
+    return x, factors_last_first
+
+
+@pytest.mark.parametrize(
+    "m,ps,qs,t_m,t_k,t_qs",
+    [
+        (4, (4, 4), (4, 4), 2, 16, (2, 2)),
+        (4, (2, 2), (8, 8), 2, 4, (4, 2)),       # expanding chain, tiled Q
+        (2, (4, 4, 4), (4, 4, 4), 2, 64, (2, 4, 1)),
+        (4, (4, 8), (8, 4), 2, 32, (4, 2)),      # rectangular
+    ],
+)
+def test_fused_kernel_q_tiling_matches_ref(m, ps, qs, t_m, t_k, t_qs):
+    x, fls = _mk_chain(20, m, ps, qs)
+    got = fused_kron_pallas(x, *fls, t_m=t_m, t_k=t_k, t_qs=t_qs, interpret=True)
+    want = fused_kron_ref(x, list(reversed(fls)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_kernel_q_tiling_lifts_vmem_restriction():
+    """Problems where t_m*t_k*growth exceeds the budget become legal by
+    tiling Q (acceptance criterion for the Q-tile grid axis)."""
+    x, fls = _mk_chain(21, 8, (2, 2), (16, 16))
+    # full Q: growth = 256/4 = 64 -> 8*4*64 = 2048 elems > 1024 budget
+    with pytest.raises(ValueError):
+        fused_kron_pallas(x, *fls, t_m=8, t_k=4, interpret=True,
+                          vmem_budget_elems=1024)
+    got = fused_kron_pallas(x, *fls, t_m=8, t_k=4, t_qs=(4, 4), interpret=True,
+                            vmem_budget_elems=1024)
+    np.testing.assert_allclose(
+        got, fused_kron_ref(x, list(reversed(fls))), rtol=1e-5, atol=1e-5
+    )
+
+
+FUSED_T_CASES = [
+    (4, (4, 4), (4, 4), 2, 16, None),
+    (4, (4, 4), (4, 4), 2, 16, (2, 2)),      # accumulation over Q-tiles
+    (2, (4, 4, 4), (4, 4, 4), 2, 64, None),
+    (4, (4, 8), (8, 4), 2, 32, (2, 2)),
+    (8, (2, 2), (8, 8), 4, 4, (4, 2)),
+]
+
+
+@pytest.mark.parametrize("m,ps,qs,t_m,t_k,t_qs", FUSED_T_CASES)
+def test_fused_t_kernel_matches_ref(m, ps, qs, t_m, t_k, t_qs):
+    from repro.kernels.kron_fused_t import fused_kron_t_pallas
+    from repro.kernels.ref import fused_kron_t_ref
+
+    x, fls = _mk_chain(22, m, ps, qs)
+    y = fused_kron_ref(x, list(reversed(fls)))
+    dy = jax.random.normal(jax.random.PRNGKey(23), y.shape, jnp.float32)
+    got = fused_kron_t_pallas(dy, *fls, t_m=t_m, t_k=t_k, t_qs=t_qs, interpret=True)
+    # fused_kron_t_ref takes problem order (F^1 first == fls reversed)
+    want = fused_kron_t_ref(dy, list(reversed(fls)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_t_is_vjp_of_fused():
+    """fused_kron_t computes exactly the input cotangent of fused_kron."""
+    from repro.kernels.kron_fused_t import fused_kron_t_pallas
+
+    x, fls = _mk_chain(24, 4, (4, 4), (4, 4))
+    f_fwd = lambda x: fused_kron_ref(x, list(reversed(fls)))
+    y, vjp = jax.vjp(f_fwd, x)
+    dy = jax.random.normal(jax.random.PRNGKey(25), y.shape, jnp.float32)
+    (want,) = vjp(dy)
+    got = fused_kron_t_pallas(dy, *fls, t_m=2, t_k=16, interpret=True)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "m,ps,qs,t_m,t_k",
+    [
+        (4, (4, 4), (4, 4), 2, 16),
+        (2, (4, 4, 4), (4, 4, 4), 2, 64),
+        (4, (4, 8), (8, 4), 2, 32),
+    ],
+)
+def test_fused_bwd_kernel_matches_autodiff(m, ps, qs, t_m, t_k):
+    """One-kernel stage backward (dx + all factor grads) vs autodiff oracle."""
+    from repro.kernels.kron_fused_t import fused_kron_bwd_pallas
+
+    x, fls = _mk_chain(26, m, ps, qs)
+    y = fused_kron_ref(x, list(reversed(fls)))
+    dy = jax.random.normal(jax.random.PRNGKey(27), y.shape, jnp.float32)
+
+    def loss(x, fls):
+        return (fused_kron_ref(x, list(reversed(fls))) * dy).sum()
+
+    dx_want, dfs_want = jax.grad(loss, argnums=(0, 1))(x, fls)
+    dx, dfs = fused_kron_bwd_pallas(x, dy, *fls, t_m=t_m, t_k=t_k, interpret=True)
+    np.testing.assert_allclose(dx, dx_want, rtol=1e-4, atol=1e-4)
+    for got, want in zip(dfs, dfs_want):
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_ops_fused_t_dispatch(backend):
+    from repro.kernels.ref import fused_kron_t_ref
+
+    x, fls = _mk_chain(28, 8, (4, 4), (4, 4))
+    y = fused_kron_ref(x, list(reversed(fls)))
+    dy = jax.random.normal(jax.random.PRNGKey(29), y.shape, jnp.float32)
+    got = ops.fused_kron_t(dy, fls, backend=backend, t_m=2, t_k=16)
+    np.testing.assert_allclose(
+        got, fused_kron_t_ref(dy, list(reversed(fls))), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("m", [4, 32])  # 32 exercises the xla M-tiled scan
+def test_ops_fused_bwd_dispatch(backend, m):
+    x, fls = _mk_chain(30, m, (4, 4), (4, 4))
+    y = fused_kron_ref(x, list(reversed(fls)))
+    dy = jax.random.normal(jax.random.PRNGKey(31), y.shape, jnp.float32)
+
+    def loss(x, fls):
+        return (fused_kron_ref(x, list(reversed(fls))) * dy).sum()
+
+    dx_want, dfs_want = jax.grad(loss, argnums=(0, 1))(x, fls)
+    dx, dfs = ops.fused_kron_bwd(x, dy, fls, backend=backend, t_m=2, t_k=16)
+    np.testing.assert_allclose(dx, dx_want, rtol=1e-4, atol=1e-4)
+    for got, want in zip(dfs, dfs_want):
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -99,6 +99,8 @@ def test_hlo_cost_trip_weighting():
         "c = analyze(txt)\n"
         "assert c.dot_flops == 7 * 2 * 32**3, c.dot_flops\n"
         "raw = lowered.compile().cost_analysis()\n"
+        "if isinstance(raw, (list, tuple)):\n"
+        "    raw = raw[0]  # jax < 0.5 wraps the dict in a list\n"
         "assert raw['flops'] < 2 * 2 * 32**3, raw['flops']  # ~1 iter, not 7\n"
         "print('TRIP-OK')\n"
     )
