@@ -1,0 +1,159 @@
+"""Batched Kron-Matmul benchmark (beyond paper — serving/multi-kernel loads).
+
+Compares ``kron_matmul_batched`` (ONE launch for B independent problems)
+against the looped baseline a user would otherwise write — a Python loop of B
+per-sample ``kron_matmul`` dispatches — for both factor-sharing modes:
+
+  * shared factors (KronLinear under a serving batch): the batch collapses
+    into M, so the batched path is one dispatch with B-times-taller GEMMs;
+  * per-sample factors (the Jhurani arXiv 1304.7054 regime, e.g. multi-kernel
+    GP solves): the batched path runs the batch-grid kernels / scan-batched
+    XLA analogue.
+
+Problem: B=8, M=64, (16,16)^3 (the PR-2 acceptance shape).  Emits
+``BENCH_batched.json``; reproduced claim: batched >= 1.5x looped throughput.
+Methodology (block-interleaved min-of-N timing) as EXPERIMENTS.md §Batched.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autotune
+from repro.core.fastkron import kron_matmul, kron_matmul_batched
+from repro.core.kron import KronProblem
+
+from .util import csv_row
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_JSON = ROOT / "BENCH_batched.json"
+
+
+def _bench_pair(fn_a, fn_b, iters: int, rounds: int = 6) -> tuple[float, float]:
+    """Block-interleaved min-of-N timing (same estimator as fig_bwd: block
+    interleaving cancels shared-container drift, min is least-noise).  More,
+    smaller blocks than fig_bwd: this container's noisy-neighbor bursts last
+    whole seconds, so each side needs samples spread across several bursts."""
+    import time
+
+    for _ in range(2):
+        jax.block_until_ready(fn_a())
+        jax.block_until_ready(fn_b())
+
+    def block(fn, out):
+        for _ in range(max(1, iters // rounds)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            out.append(time.perf_counter() - t0)
+
+    ta, tb = [], []
+    for _ in range(rounds):
+        block(fn_a, ta)
+        block(fn_b, tb)
+    return min(ta), min(tb)
+
+
+def _make(b, m, ps, qs, *, per_sample, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(ps) + 1)
+    x = jax.random.normal(keys[0], (b, m, math.prod(ps)), jnp.float32)
+    shape = (lambda p, q: (b, p, q)) if per_sample else (lambda p, q: (p, q))
+    fs = tuple(
+        jax.random.normal(k, shape(p, q), jnp.float32)
+        for k, p, q in zip(keys[1:], ps, qs)
+    )
+    return x, fs
+
+
+def run(quick: bool = False):
+    b, m, ps, qs = 8, 64, (16,) * 3, (16,) * 3
+    iters = 12 if quick else 24
+    record = {
+        "problem": {"b": b, "m": m, "ps": list(ps), "qs": list(qs),
+                    "dtype": "float32"},
+        "backend": jax.default_backend(),
+    }
+
+    setups = {}
+    for mode in ("shared", "per_sample"):
+        per_sample = mode == "per_sample"
+        x, fs = _make(b, m, ps, qs, per_sample=per_sample)
+        # Looped baseline: ONE compile (same per-sample shape), then the full
+        # loop a batched consumer would otherwise run — slice each sample out,
+        # dispatch it, and reassemble the (B, M, out) batch.  The slice/stack
+        # is part of the baseline because the batched entry point's contract
+        # (batch in, batch out) replaces exactly that loop.
+        loop_fn = jax.jit(kron_matmul)
+
+        def looped(x=x, fs=fs, per_sample=per_sample):
+            return jnp.stack([
+                loop_fn(x[i], tuple(f[i] for f in fs) if per_sample else fs)
+                for i in range(b)
+            ])
+
+        batched_fn = jax.jit(
+            lambda x, fs, per_sample=per_sample: kron_matmul_batched(
+                x, fs, shared_factors=not per_sample
+            )
+        )
+
+        def batched(x=x, fs=fs, batched_fn=batched_fn):
+            return batched_fn(x, fs)
+
+        setups[mode] = (looped, batched)
+
+    # Global warm-up: compile + run EVERY path before timing ANY — the first
+    # timed pair in a fresh process otherwise absorbs allocator/codegen
+    # warm-up that has nothing to do with either algorithm.
+    for looped, batched in setups.values():
+        jax.block_until_ready(looped())
+        jax.block_until_ready(batched())
+
+    for mode, (looped, batched) in setups.items():
+        per_sample = mode == "per_sample"
+        t_loop, t_batch = _bench_pair(looped, batched, iters)
+        plan = autotune.make_batched_plan(
+            KronProblem(m, ps, qs), b, shared_factors=not per_sample,
+            enable_prekron=False,
+        )
+        record[mode] = {
+            "looped_s": t_loop,
+            "batched_s": t_batch,
+            "speedup": t_loop / t_batch,
+            "plan": plan.describe(),
+        }
+        yield csv_row(
+            "fig_batched",
+            mode=mode,
+            b=b,
+            m=m,
+            size="16^3",
+            looped_s=f"{t_loop:.4f}",
+            batched_s=f"{t_batch:.4f}",
+            speedup=f"{t_loop / t_batch:.2f}",
+            plan=plan.describe().replace(",", ";"),
+        )
+
+    # Headline batched-vs-looped number (acceptance: >= 1.5x at B>=8): the
+    # per-sample-factors mode is the launch-bound regime batching targets;
+    # report the best mode and name it.
+    best = max(("shared", "per_sample"), key=lambda k: record[k]["speedup"])
+    record["speedup"] = record[best]["speedup"]
+    record["headline_mode"] = best
+    with open(OUT_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+    yield csv_row(
+        "fig_batched",
+        speedup=f"{record['speedup']:.2f}",
+        headline_mode=best,
+        artifact=os.fspath(OUT_JSON),
+    )
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -186,6 +186,12 @@ class KronPlan:
     # Backward stages in EXECUTION order (last forward stage first); None
     # falls back to a derived mirror of ``stages`` at run time.
     bwd_stages: tuple[Stage, ...] | None = None
+    # Batch tile for the batched (per-sample-factors) execution path: how many
+    # samples one kernel block carries.  The batched kernels' VMEM legality is
+    # ``t_b * t_m * t_k * growth <= budget`` — make_batched_plan trades the
+    # M-tile against this axis.  1 == unbatched semantics (ignored by the
+    # single-problem path).
+    t_b: int = 1
 
     def describe(self) -> str:
         parts = []
@@ -195,7 +201,8 @@ class KronPlan:
             if st.t_qs is not None:
                 tag += f"/tq{list(st.t_qs)}"
             parts.append(tag)
-        return " -> ".join(parts)
+        head = f"[t_b={self.t_b}] " if self.t_b != 1 else ""
+        return head + " -> ".join(parts)
 
 
 def mirror_bwd_stages(
@@ -333,6 +340,126 @@ def make_plan(
 
 
 # ---------------------------------------------------------------------------
+# Batched plans: B independent problems (kron_matmul_batched)
+# ---------------------------------------------------------------------------
+
+
+def _batch_tiled(
+    base: KronPlan,
+    prob: KronProblem,
+    batch: int,
+    vmem_budget_elems: int,
+    dtype_bytes: int,
+) -> KronPlan:
+    """Batch-aware tiling for the per-sample batch-grid kernels.
+
+    A block of the batched kernel holds ``t_b`` sample chains, so the budget
+    constraint becomes ``t_b * t_m * t_k * growth <= budget``.  Small-M
+    batched problems amortize grid steps across samples, so the M-tile is
+    traded DOWN to buy batch tiles: while ``t_b`` is below the sublane width
+    (8 rows is what the TPU needs to fill a register row anyway), the largest
+    stage M-tile is reduced and ``t_b`` recomputed under the same budget.
+    """
+    ps = list(reversed(prob.ps))
+    qs = list(reversed(prob.qs))
+    stages = list(base.stages)
+
+    def block_elems(st: Stage) -> float:
+        sps = [ps[i] for i in st.factor_ids]
+        sqs = [qs[i] for i in st.factor_ids]
+        t_k = st.tiles.t_s * math.prod(sps)
+        return st.tiles.t_m * t_k * fused_growth(sps, sqs, st.t_qs)
+
+    def best_t_b() -> int:
+        worst = max(block_elems(st) for st in stages)
+        cap = max(1, int(vmem_budget_elems // max(worst, 1.0)))
+        return max(d for d in _divisors(batch) if d <= cap)
+
+    t_b = best_t_b()
+    while t_b < min(batch, SUBLANE):
+        reducible = [i for i, st in enumerate(stages) if st.tiles.t_m > 1]
+        if not reducible:
+            break
+        i = max(reducible, key=lambda i: stages[i].tiles.t_m)
+        st = stages[i]
+        new_tm = max(d for d in _divisors(prob.m) if d < st.tiles.t_m)
+        stages[i] = dataclasses.replace(
+            st, tiles=TileConfig(new_tm, st.tiles.t_s, st.tiles.t_q)
+        )
+        t_b = max(t_b, best_t_b())
+    fwd = tuple(stages)
+    return KronPlan(
+        fwd, mirror_bwd_stages(prob, fwd, dtype_bytes=dtype_bytes), t_b
+    )
+
+
+def make_batched_plan(
+    prob: KronProblem,
+    batch: int,
+    *,
+    shared_factors: bool = True,
+    dtype_bytes: int = 4,
+    enable_fusion: bool = True,
+    enable_prekron: bool = False,
+    prekron_max_p: int = 16,
+    prekron_max_dim: int = 256,
+    vmem_budget_elems: int = 2 * 1024 * 1024,
+    tune: str = "analytic",
+    backend: str = "auto",
+    cache_path: str | None = None,
+) -> KronPlan:
+    """Plan for ``batch`` independent copies of ``prob`` in one launch.
+
+    shared_factors=True (one factor set, batched X): the batch collapses into
+    M, so this is the single-problem planner on the ``(batch*M, Ps, Qs)``
+    problem — the M-tile is tuned for the collapsed row count.
+
+    shared_factors=False (per-sample factors): the single-problem plan is
+    re-tiled by ``_batch_tiled`` so every stage block carries ``t_b`` samples
+    under the same VMEM budget (pre-kronization is disabled — the batched
+    executor has no per-sample prekron stage).  ``tune="measure"`` wall-clock
+    ranks ``t_b`` variants and persists the winner keyed on B.
+    """
+    if batch <= 0:
+        raise ValueError(f"batch must be positive, got {batch}")
+    if shared_factors:
+        return make_plan(
+            KronProblem(batch * prob.m, prob.ps, prob.qs),
+            dtype_bytes=dtype_bytes,
+            enable_fusion=enable_fusion,
+            enable_prekron=enable_prekron,
+            prekron_max_p=prekron_max_p,
+            prekron_max_dim=prekron_max_dim,
+            vmem_budget_elems=vmem_budget_elems,
+            tune=tune,
+            backend=backend,
+            cache_path=cache_path,
+        )
+    if tune == "measure":
+        return _measured_batched_plan(
+            prob,
+            batch,
+            dtype_bytes=dtype_bytes,
+            enable_fusion=enable_fusion,
+            vmem_budget_elems=vmem_budget_elems,
+            backend=backend,
+            cache_path=cache_path,
+        )
+    if tune != "analytic":
+        raise ValueError(f"unknown tune mode {tune!r}")
+    base = make_plan(
+        prob,
+        dtype_bytes=dtype_bytes,
+        enable_fusion=enable_fusion,
+        enable_prekron=False,
+        vmem_budget_elems=vmem_budget_elems,
+        tune="analytic",
+        backend=backend,
+    )
+    return _batch_tiled(base, prob, batch, vmem_budget_elems, dtype_bytes)
+
+
+# ---------------------------------------------------------------------------
 # Measured tuning + on-disk plan cache
 # ---------------------------------------------------------------------------
 
@@ -354,16 +481,23 @@ def plan_cache_key(
     prekron_max_p: int = 16,
     prekron_max_dim: int = 256,
     vmem_budget_elems: int = 2 * 1024 * 1024,
+    batch: int = 0,
+    shared_factors: bool = True,
 ) -> str:
     """Cache key covers every plan-shaping input (defaults mirror make_plan):
-    a hit must satisfy the caller's constraints, not just the problem shape."""
+    a hit must satisfy the caller's constraints, not just the problem shape.
+    ``batch > 0`` marks a batched-plan entry (keyed on B and the factor-
+    sharing mode); 0 keeps the single-problem key format stable."""
     ps = ",".join(map(str, prob.ps))
     qs = ",".join(map(str, prob.qs))
-    return (
+    key = (
         f"m={prob.m};ps={ps};qs={qs};dtype={dtype_bytes};backend={backend}"
         f";fuse={int(enable_fusion)};prekron={int(enable_prekron)}"
         f";pmax={prekron_max_p};pdim={prekron_max_dim};vmem={vmem_budget_elems}"
     )
+    if batch > 0:
+        key += f";B={batch};shared={int(shared_factors)}"
+    return key
 
 
 def _stage_to_json(st: Stage) -> dict:
@@ -392,6 +526,7 @@ def plan_to_json(plan: KronPlan) -> dict:
             if plan.bwd_stages is not None
             else None
         ),
+        "t_b": plan.t_b,
     }
 
 
@@ -403,24 +538,40 @@ def plan_from_json(d: dict) -> KronPlan:
             if d.get("bwd_stages") is not None
             else None
         ),
+        int(d.get("t_b", 1)),
     )
 
 
 def load_plan_cache(path: str) -> dict:
+    """Best-effort load: a corrupt / truncated / wrong-schema file (e.g. a
+    concurrent writer died mid-rename on a non-atomic filesystem) degrades to
+    an empty cache, never an exception — the next save rewrites it whole."""
     try:
         with open(path) as f:
             data = json.load(f)
-        if data.get("version") != PLAN_CACHE_VERSION:
+        if not isinstance(data, dict) or data.get("version") != PLAN_CACHE_VERSION:
             return {}
-        return data.get("entries", {})
+        entries = data.get("entries", {})
+        if not isinstance(entries, dict):
+            return {}
+        return {
+            k: v
+            for k, v in entries.items()
+            if isinstance(v, dict) and isinstance(v.get("plan"), dict)
+        }
     except (OSError, ValueError):
         return {}
 
 
 def save_plan_cache(path: str, entries: dict) -> None:
-    """Atomic write (temp + rename) so concurrent tuners can't corrupt it."""
+    """Atomic write: temp file in the target directory + ``os.replace`` so a
+    reader never sees a partial file and concurrent benchmark/CI runs can't
+    poison each other.  On-disk entries written since our load are merged in
+    (ours win on key conflict) so parallel tuners lose at most a race, not
+    their work."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    payload = {"version": PLAN_CACHE_VERSION, "entries": entries}
+    merged = {**load_plan_cache(path), **entries}
+    payload = {"version": PLAN_CACHE_VERSION, "entries": merged}
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
     try:
         with os.fdopen(fd, "w") as f:
@@ -504,11 +655,79 @@ def _measured_plan(
     return best
 
 
+def _measured_batched_plan(
+    prob: KronProblem,
+    batch: int,
+    *,
+    dtype_bytes: int,
+    enable_fusion: bool,
+    vmem_budget_elems: int,
+    backend: str,
+    cache_path: str | None,
+) -> KronPlan:
+    """Wall-clock-rank t_b variants of the batched per-sample plan; the cache
+    key carries B and the factor-sharing mode."""
+    path = cache_path or default_cache_path()
+    key = plan_cache_key(
+        prob, dtype_bytes, backend,
+        enable_fusion=enable_fusion, enable_prekron=False,
+        vmem_budget_elems=vmem_budget_elems,
+        batch=batch, shared_factors=False,
+    )
+    entries = load_plan_cache(path)
+    hit = entries.get(key)
+    if hit is not None:
+        return plan_from_json(hit["plan"])
+
+    base = make_plan(
+        prob, dtype_bytes=dtype_bytes, enable_fusion=enable_fusion,
+        enable_prekron=False, vmem_budget_elems=vmem_budget_elems,
+        tune="analytic", backend=backend,
+    )
+    tiled = _batch_tiled(base, prob, batch, vmem_budget_elems, dtype_bytes)
+    cands = [tiled]
+    for t_b in (1, 2, 4, 8, 16):
+        if t_b > batch or batch % t_b or t_b == tiled.t_b:
+            continue
+        cands.append(dataclasses.replace(tiled, t_b=t_b))
+    # Deferred import: fastkron imports this module at load time.
+    from . import fastkron
+
+    dtype = {2: jnp.bfloat16, 4: jnp.float32, 8: jnp.float64}.get(dtype_bytes, jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(0), prob.n + 1)
+    x = jax.random.normal(keys[0], (batch, prob.m, prob.k)).astype(dtype)
+    factors = tuple(
+        jax.random.normal(kk, (batch, p, q)).astype(dtype)
+        for kk, p, q in zip(keys[1:], prob.ps, prob.qs)
+    )
+
+    def fn_of_plan(plan):
+        f = jax.jit(
+            lambda x, fs: fastkron.kron_matmul_batched(
+                x, fs, shared_factors=False, backend=backend, plan=plan
+            )
+        )
+        return lambda: f(x, factors)
+
+    try:
+        best, seconds = measure_best(fn_of_plan, cands, warmup=1, iters=3)
+    except RuntimeError:
+        return tiled
+    entries[key] = {
+        "plan": plan_to_json(best),
+        "seconds": seconds,
+        "measured_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+    save_plan_cache(path, entries)
+    return best
+
+
 __all__ = [
     "TileConfig",
     "Stage",
     "KronPlan",
     "make_plan",
+    "make_batched_plan",
     "mirror_bwd_stages",
     "tune_sliced",
     "candidate_tiles",

@@ -14,7 +14,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from .fastkron import kron_matmul
+from .fastkron import kron_matmul, kron_matmul_batched
 
 
 def balanced_factorization(d: int, n: int) -> tuple[int, ...]:
@@ -22,6 +22,8 @@ def balanced_factorization(d: int, n: int) -> tuple[int, ...]:
     possible (largest factors first).  Exact: prod(out) == d."""
     if n <= 0:
         raise ValueError("n must be >= 1")
+    if d <= 0:
+        raise ValueError(f"d must be a positive dimension, got {d}")
     # prime factorization
     primes: list[int] = []
     x = d
@@ -93,9 +95,35 @@ def kron_linear_init(
 def kron_linear_apply(
     params: dict, x: jax.Array, *, backend: str = "auto", plan="auto"
 ) -> jax.Array:
-    y = kron_matmul(x, params["factors"], backend=backend, plan=plan)
+    if x.ndim >= 3:
+        # Serving/training batches (B, ..., d_in): the batched entry point —
+        # shared factors collapse B into the row axis and the plan is keyed
+        # on the batch size, so one launch covers the whole batch.
+        y = kron_matmul_batched(
+            x, params["factors"], shared_factors=True, backend=backend, plan=plan
+        )
+    else:
+        y = kron_matmul(x, params["factors"], backend=backend, plan=plan)
     if "bias" in params:
         y = y + params["bias"]
+    return y
+
+
+def kron_linear_apply_batched(
+    params: dict, x: jax.Array, *, backend: str = "auto", plan="auto"
+) -> jax.Array:
+    """Per-sample KronLinear: one factor set per batch element (per-expert
+    Kronecker projections).  ``params["factors"][i]: (B, P_i, Q_i)``,
+    ``x: (B, ..., d_in)``; an optional bias is ``(d_out,)`` or ``(B, d_out)``.
+    """
+    y = kron_matmul_batched(
+        x, params["factors"], shared_factors=False, backend=backend, plan=plan
+    )
+    if "bias" in params:
+        bias = params["bias"]
+        if bias.ndim == 2:  # per-sample bias broadcasts over the lead dims
+            bias = bias.reshape(bias.shape[0], *([1] * (y.ndim - 2)), -1)
+        y = y + bias
     return y
 
 
@@ -111,6 +139,7 @@ __all__ = [
     "KronLinearSpec",
     "kron_linear_init",
     "kron_linear_apply",
+    "kron_linear_apply_batched",
     "kron_linear_materialize",
     "balanced_factorization",
 ]

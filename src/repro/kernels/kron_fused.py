@@ -179,3 +179,130 @@ def max_n_fused(t_k: int, p: int) -> int:
         t_k //= p
         n += 1
     return n
+
+
+# ---------------------------------------------------------------------------
+# Batched fused kernel: B independent problems, per-sample factors
+# ---------------------------------------------------------------------------
+
+
+def _fused_batched_kernel(
+    x_ref, *refs, ps: tuple[int, ...], qs: tuple[int, ...], acc_dtype
+):
+    f_refs, (y_ref,) = refs[:-1], refs[-1:]
+    t_b, t_m = x_ref.shape[0], x_ref.shape[1]
+    y = x_ref[...]
+    cols = x_ref.shape[2]
+    # Same chain as _fused_kernel, with a leading batch dim carried through
+    # every GEMM as a dot_general batch dimension: sample b's tile only ever
+    # contracts against sample b's factor slice.
+    for f_ref, p, q in zip(f_refs, ps, qs):
+        s = cols // p
+        x2 = y.reshape(t_b, t_m * s, p)
+        acc = jax.lax.dot_general(
+            x2, f_ref[...], (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=acc_dtype,
+        )  # (t_b, t_m*s, q)
+        y = jnp.swapaxes(acc.reshape(t_b, t_m, s, q), 2, 3).reshape(
+            t_b, t_m, q * s
+        )
+        cols = q * s
+    y_ref[...] = y.reshape(y_ref.shape).astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "t_b", "t_m", "t_k", "t_qs", "interpret", "acc_dtype", "vmem_budget_elems",
+    ),
+)
+def fused_kron_batched_pallas(
+    x: jax.Array,
+    *factors_last_first: jax.Array,
+    t_b: int = 1,
+    t_m: int = 8,
+    t_k: int | None = None,
+    t_qs: tuple[int, ...] | None = None,
+    interpret: bool = False,
+    acc_dtype=None,
+    vmem_budget_elems: int = VMEM_BUDGET_ELEMS,
+) -> jax.Array:
+    """Batch-grid fused chain: B independent Kron-Matmuls in one launch.
+
+    ``x: (B, M, K)``; each factor ``(B, P_i, Q_i)`` (per-sample factors, the
+    Jhurani arXiv 1304.7054 regime).  The grid gains a leading batch axis
+    tiled by ``t_b`` samples per block; VMEM now holds ``t_b`` tile chains,
+    so the legality check is ``t_b * t_m * t_k * growth <= budget`` — the
+    planner trades ``t_m`` against ``t_b`` under the same budget.
+    """
+    if acc_dtype is None:
+        acc_dtype = jnp.promote_types(x.dtype, jnp.float32)
+    b, m, k = x.shape
+    n = len(factors_last_first)
+    ps = tuple(int(f.shape[1]) for f in factors_last_first)
+    qs = tuple(int(f.shape[2]) for f in factors_last_first)
+    for f in factors_last_first:
+        if int(f.shape[0]) != b:
+            raise ValueError(f"factor batch {f.shape[0]} != x batch {b}")
+    pprod = math.prod(ps)
+    qprod = math.prod(qs)
+    if k % pprod:
+        raise ValueError(f"K={k} not divisible by prod(P)={pprod}")
+    t_b = min(t_b, b)
+    t_m = min(t_m, m)
+    t_k = min(t_k or k, k)
+    if t_qs is None:
+        t_qs = qs
+    t_qs = tuple(min(t, q) for t, q in zip(t_qs, qs))
+    if any(q % t for q, t in zip(qs, t_qs)):
+        raise ValueError(f"t_qs must divide factor Q dims: {t_qs} vs {qs}")
+    if t_k % pprod:
+        raise ValueError(f"T_K={t_k} must be a multiple of prod(P)={pprod}")
+    growth = fused_growth(ps, qs, t_qs)
+    if t_b * t_m * t_k * growth > vmem_budget_elems:
+        raise ValueError(
+            f"batched tile {t_b}x{t_m}x{t_k} (growth {growth:.2f}) exceeds "
+            f"VMEM budget; reduce t_b / t_m / t_k or tile Q via t_qs"
+        )
+    if b % t_b or m % t_m or k % t_k:
+        raise ValueError(
+            f"tiles must divide dims: {(b, m, k)} vs {(t_b, t_m, t_k)}"
+        )
+
+    s_out = k // pprod
+    ts_out = t_k // pprod
+    nq = tuple(q // t for q, t in zip(qs, t_qs))
+    strides = [1] * n
+    for i in range(1, n):
+        strides[i] = strides[i - 1] * nq[i - 1]
+    nq_tiles = math.prod(nq)
+
+    def q_digit(jq, i):
+        return (jq // strides[i]) % nq[i]
+
+    grid = (b // t_b, m // t_m, nq_tiles, k // t_k)
+    in_specs = [
+        pl.BlockSpec((t_b, t_m, t_k), lambda ib, im, jq, j: (ib, im, j))
+    ]
+    for i, f in enumerate(factors_last_first):
+        in_specs.append(
+            pl.BlockSpec(
+                (t_b, ps[i], t_qs[i]),
+                lambda ib, im, jq, j, i=i: (ib, 0, q_digit(jq, i)),
+            )
+        )
+    out_view = (b, m) + tuple(reversed(qs)) + (s_out,)
+    out_block = (t_b, t_m) + tuple(reversed(t_qs)) + (ts_out,)
+
+    def out_index(ib, im, jq, j):
+        return (ib, im) + tuple(q_digit(jq, i) for i in reversed(range(n))) + (j,)
+
+    out = pl.pallas_call(
+        functools.partial(_fused_batched_kernel, ps=ps, qs=t_qs, acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(out_block, out_index),
+        out_shape=jax.ShapeDtypeStruct(out_view, x.dtype),
+        interpret=interpret,
+    )(x, *factors_last_first)
+    return out.reshape(b, m, qprod * s_out)

@@ -123,13 +123,33 @@ def sliced_multiply_t(
 # ---------------------------------------------------------------------------
 
 
-def _xla_tile_rows(m: int, t_m: int) -> int | None:
+# CPU cache budget for the scan-fused XLA paths (the L2/L3 analogue of the
+# Pallas kernels' VMEM budget): chains whose whole working set fits are run
+# UNTILED — one set of full-size GEMMs beats a serializing scan when nothing
+# spills (measured: the B=8, M=64, (16,16)^3 batched chain is ~1.8x faster
+# untiled, while the M=256, (16,16)^4 fig_bwd chain at 64 MB still tiles).
+XLA_CACHE_BUDGET_BYTES = 16 * 1024 * 1024
+
+
+def _chain_max_cols(cols: int, pqs: Sequence[tuple[int, int]]) -> int:
+    """Max column count over the chain states starting from ``cols``."""
+    mx = cols
+    for p, q in pqs:
+        cols = cols // p * q
+        mx = max(mx, cols)
+    return mx
+
+
+def _xla_tile_rows(m: int, t_m: int, row_bytes: int | None = None) -> int | None:
     """Effective M-tile for the scan-fused XLA path, or None to run untiled.
 
-    Tiling pays off only when the tile chain fits cache and there are enough
-    tiles to amortize the scan; tiny analytic t_m values (tuned for the TPU
-    sublane) are clamped up to a useful CPU tile.
+    Tiling pays off only when the full chain would spill cache
+    (``row_bytes``: widest per-row working set) AND the tile chain fits with
+    enough tiles to amortize the scan; tiny analytic t_m values (tuned for
+    the TPU sublane) are clamped up to a useful CPU tile.
     """
+    if row_bytes is not None and m * row_bytes <= XLA_CACHE_BUDGET_BYTES:
+        return None
     t = min(m, max(t_m, 8))
     if t >= m or m % t or m // t < 2:
         return None
@@ -144,7 +164,10 @@ def _fused_xla(x: jax.Array, factors: tuple[jax.Array, ...], t_m: int) -> jax.Ar
         return y
 
     m, k = x.shape
-    t = _xla_tile_rows(m, t_m)
+    row_bytes = _chain_max_cols(
+        k, [(int(f.shape[0]), int(f.shape[1])) for f in factors]
+    ) * x.dtype.itemsize
+    t = _xla_tile_rows(m, t_m, row_bytes)
     if t is None:
         return chain(x)
     _, yt = jax.lax.scan(
@@ -179,7 +202,10 @@ def _fused_t_xla(dy: jax.Array, factors: tuple[jax.Array, ...], t_m: int) -> jax
         return g
 
     m, l = dy.shape
-    t = _xla_tile_rows(m, t_m)
+    row_bytes = _chain_max_cols(
+        l, [(int(f.shape[1]), int(f.shape[0])) for f in reversed(factors)]
+    ) * dy.dtype.itemsize
+    t = _xla_tile_rows(m, t_m, row_bytes)
     if t is None:
         return chain(dy)
     _, gt = jax.lax.scan(
@@ -244,7 +270,13 @@ def _fused_bwd_xla(
 ):
     acc = acc_dtype_for(dy.dtype)
     m, k = x.shape
-    t = _xla_tile_rows(m, t_m)
+    # Backward live set per row: every forward chain state is held (the
+    # rematerialized us) plus the gradient at its widest — a sum, not a max.
+    live = cols = k
+    for f in factors:
+        cols = cols // int(f.shape[0]) * int(f.shape[1])
+        live += cols
+    t = _xla_tile_rows(m, t_m, live * x.dtype.itemsize)
     if t is None:
         dfs, dx = _fused_bwd_tile(x, dy, factors, acc)
         return dx, tuple(dfs)
@@ -285,6 +317,234 @@ def fused_kron_bwd(
     )
 
 
+# ---------------------------------------------------------------------------
+# Batched chains: B independent problems with per-sample factors.  Pallas
+# batch-grid kernels on TPU; on XLA a lax.scan over batch tiles whose body
+# runs the whole per-tile chain with batch-dimension GEMMs (one dispatch for
+# the entire batch — the launch-amortization the batched subsystem is for).
+# ---------------------------------------------------------------------------
+
+
+def _batch_tile(b: int, t_b: int, sample_bytes: int | None = None) -> int | None:
+    """Effective batch tile for the scan-batched XLA path, or None untiled.
+
+    ``sample_bytes``: one sample's chain working set — when the whole batch
+    fits the cache budget, run untiled (same rule as ``_xla_tile_rows``).
+    """
+    if sample_bytes is not None and b * sample_bytes <= XLA_CACHE_BUDGET_BYTES:
+        return None
+    t = min(b, max(t_b, 1))
+    if t >= b or b % t or b // t < 2:
+        return None
+    return t
+
+
+def _sample_chain_bytes(x: jax.Array, factors, transposed: bool = False) -> int:
+    m = int(x.shape[1])
+    cols = int(x.shape[2])
+    if transposed:
+        pqs = [(int(f.shape[2]), int(f.shape[1])) for f in reversed(factors)]
+    else:
+        pqs = [(int(f.shape[1]), int(f.shape[2])) for f in factors]
+    return m * _chain_max_cols(cols, pqs) * x.dtype.itemsize
+
+
+def _sliced_body_b(x: jax.Array, f: jax.Array) -> jax.Array:
+    """Batched sliced multiply: (B, M, S*P) x (B, P, Q) -> (B, M, Q*S)."""
+    b, m, k = x.shape
+    p, q = f.shape[1], f.shape[2]
+    s = k // p
+    acc = jax.lax.dot_general(
+        x.reshape(b, m * s, p), f, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=acc_dtype_for(x.dtype),
+    )
+    return (
+        jnp.swapaxes(acc.reshape(b, m, s, q), 2, 3)
+        .reshape(b, m, q * s)
+        .astype(x.dtype)
+    )
+
+
+def _sliced_t_body_b(dy: jax.Array, f: jax.Array) -> jax.Array:
+    """Batched transposed sliced multiply: (B, M, Q*S) x (B, P, Q) -> (B, M, S*P)."""
+    b, m, l = dy.shape
+    p, q = f.shape[1], f.shape[2]
+    s = l // q
+    g2 = jnp.swapaxes(dy.reshape(b, m, q, s), 2, 3).reshape(b, m * s, q)
+    acc = jax.lax.dot_general(
+        g2, f, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=acc_dtype_for(dy.dtype),
+    )
+    return acc.reshape(b, m, s * p).astype(dy.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("t_b",))
+def _fused_batched_xla(
+    x: jax.Array, factors: tuple[jax.Array, ...], t_b: int
+) -> jax.Array:
+    def chain(yt, fts):
+        for f in fts:
+            yt = _sliced_body_b(yt, f)
+        return yt
+
+    b = x.shape[0]
+    t = _batch_tile(b, t_b, _sample_chain_bytes(x, factors))
+    if t is None:
+        return chain(x, factors)
+    xs = (
+        x.reshape(b // t, t, *x.shape[1:]),
+        tuple(f.reshape(b // t, t, *f.shape[1:]) for f in factors),
+    )
+    _, yt = jax.lax.scan(lambda _, xf: (None, chain(xf[0], xf[1])), None, xs)
+    return yt.reshape(b, x.shape[1], -1)
+
+
+def fused_kron_batched(
+    x: jax.Array,
+    factors_last_first: Sequence[jax.Array],
+    *,
+    backend: Backend = "auto",
+    t_b: int = 1,
+    t_m: int = 8,
+    t_k: int | None = None,
+    t_qs: tuple[int, ...] | None = None,
+) -> jax.Array:
+    """Batched fused chain: x (B, M, K), per-sample factors (B, P_i, Q_i)."""
+    b = resolve_backend(backend)
+    if b == "xla":
+        return _fused_batched_xla(x, tuple(factors_last_first), t_b)
+    return kron_fused.fused_kron_batched_pallas(
+        x, *factors_last_first, t_b=t_b, t_m=t_m, t_k=t_k, t_qs=t_qs,
+        interpret=_interpret(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("t_b",))
+def _fused_t_batched_xla(
+    dy: jax.Array, factors: tuple[jax.Array, ...], t_b: int
+) -> jax.Array:
+    def chain(gt, fts):
+        for f in reversed(fts):
+            gt = _sliced_t_body_b(gt, f)
+        return gt
+
+    b = dy.shape[0]
+    t = _batch_tile(b, t_b, _sample_chain_bytes(dy, factors, transposed=True))
+    if t is None:
+        return chain(dy, factors)
+    xs = (
+        dy.reshape(b // t, t, *dy.shape[1:]),
+        tuple(f.reshape(b // t, t, *f.shape[1:]) for f in factors),
+    )
+    _, gt = jax.lax.scan(lambda _, gf: (None, chain(gf[0], gf[1])), None, xs)
+    return gt.reshape(b, dy.shape[1], -1)
+
+
+def fused_kron_t_batched(
+    dy: jax.Array,
+    factors_last_first: Sequence[jax.Array],
+    *,
+    backend: Backend = "auto",
+    t_b: int = 1,
+    t_m: int = 8,
+    t_k: int | None = None,
+    t_qs: tuple[int, ...] | None = None,
+) -> jax.Array:
+    """Batched transposed fused chain (input cotangent of fused_kron_batched)."""
+    b = resolve_backend(backend)
+    if b == "xla":
+        return _fused_t_batched_xla(dy, tuple(factors_last_first), t_b)
+    return kron_fused_t.fused_kron_t_batched_pallas(
+        dy, *factors_last_first, t_b=t_b, t_m=t_m, t_k=t_k, t_qs=t_qs,
+        interpret=_interpret(),
+    )
+
+
+def _fused_bwd_tile_b(us_first, g, factors, acc):
+    """Batched backward of one chain tile (cf. _fused_bwd_tile): per-sample
+    factor grads, so the batch dim rides every GEMM instead of being summed."""
+    t_b, t_m = g.shape[0], g.shape[1]
+    us = [us_first]
+    y = us_first
+    for f in factors[:-1]:
+        y = _sliced_body_b(y, f)
+        us.append(y)
+    dfs = [None] * len(factors)
+    cols = g.shape[2]
+    for idx in reversed(range(len(factors))):
+        f = factors[idx]
+        p, q = int(f.shape[1]), int(f.shape[2])
+        s = cols // q
+        g2 = jnp.swapaxes(g.reshape(t_b, t_m, q, s), 2, 3).reshape(
+            t_b, t_m * s, q
+        )
+        u2 = us[idx].reshape(t_b, t_m * s, p)
+        dfs[idx] = jax.lax.dot_general(
+            u2.astype(acc), g2.astype(acc), (((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=acc,
+        )  # (t_b, p, q)
+        g = jax.lax.dot_general(
+            g2, f, (((2,), (2,)), ((0,), (0,))), preferred_element_type=acc
+        ).reshape(t_b, t_m, s * p).astype(g.dtype)
+        cols = s * p
+    return dfs, g
+
+
+@functools.partial(jax.jit, static_argnames=("t_b",))
+def _fused_bwd_batched_xla(
+    x: jax.Array, dy: jax.Array, factors: tuple[jax.Array, ...], t_b: int
+):
+    acc = acc_dtype_for(dy.dtype)
+    b, m, k = x.shape
+    live = cols = k
+    for f in factors:
+        cols = cols // int(f.shape[1]) * int(f.shape[2])
+        live += cols
+    t = _batch_tile(b, t_b, m * live * x.dtype.itemsize)
+    if t is None:
+        dfs, dx = _fused_bwd_tile_b(x, dy, factors, acc)
+        return dx, tuple(dfs)
+
+    def body(_, xs):
+        xt, dyt, fts = xs
+        dfs, g = _fused_bwd_tile_b(xt, dyt, fts, acc)
+        return None, (g, tuple(dfs))
+
+    xs = (
+        x.reshape(b // t, t, m, k),
+        dy.reshape(b // t, t, m, -1),
+        tuple(f.reshape(b // t, t, *f.shape[1:]) for f in factors),
+    )
+    _, (dxt, dfts) = jax.lax.scan(body, None, xs)
+    return dxt.reshape(b, m, k), tuple(
+        d.reshape(b, *d.shape[2:]) for d in dfts
+    )
+
+
+def fused_kron_bwd_batched(
+    x: jax.Array,
+    dy: jax.Array,
+    factors_last_first: Sequence[jax.Array],
+    *,
+    backend: Backend = "auto",
+    t_b: int = 1,
+    t_m: int = 8,
+    t_k: int | None = None,
+) -> tuple[jax.Array, tuple[jax.Array, ...]]:
+    """Batched full stage backward: per-sample (dx, factor grads).
+
+    x (B, M, K), dy (B, M, prod(Q)*S), factors (B, P_i, Q_i); dfs returned in
+    ``factors_last_first`` order, each (B, P_i, Q_i), accumulated in f32.
+    """
+    b = resolve_backend(backend)
+    if b == "xla":
+        return _fused_bwd_batched_xla(x, dy, tuple(factors_last_first), t_b)
+    return kron_fused_t.fused_kron_bwd_batched_pallas(
+        x, dy, *factors_last_first, t_b=t_b, t_m=t_m, t_k=t_k,
+        interpret=_interpret(),
+    )
+
+
 # Re-export the oracles so tests can import one module.
 sliced_multiply_ref = _ref.sliced_multiply_ref
 fused_kron_ref = _ref.fused_kron_ref
@@ -297,6 +557,9 @@ __all__ = [
     "fused_kron",
     "fused_kron_t",
     "fused_kron_bwd",
+    "fused_kron_batched",
+    "fused_kron_t_batched",
+    "fused_kron_bwd_batched",
     "resolve_backend",
     "acc_dtype_for",
     "sliced_multiply_ref",

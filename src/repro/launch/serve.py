@@ -34,15 +34,21 @@ def main() -> None:
     ap.add_argument("--want-model-parallel", type=int, default=16)
     ap.add_argument("--kv-quant", action="store_true",
                     help="int8 KV cache (halves serving memory)")
+    ap.add_argument("--kron-ffn", action="store_true",
+                    help="Kron-compressed FFN projections: prefill's (B, T, d) "
+                         "activations run the batched Kron-Matmul path "
+                         "(kron_matmul_batched, shared factors) — one launch "
+                         "per projection for the whole serving batch")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduce_cfg(cfg, dtype="float32")
-    if args.kv_quant:
+    if args.kv_quant or args.kron_ffn:
         from dataclasses import replace
 
-        cfg = replace(cfg, kv_quant=True)
+        cfg = replace(cfg, kv_quant=args.kv_quant or cfg.kv_quant,
+                      kron_ffn=args.kron_ffn or cfg.kron_ffn)
     mesh = elastic_mesh(jax.device_count(), want_model=args.want_model_parallel)
     max_len = args.prompt_len + args.gen
 

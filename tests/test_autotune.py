@@ -135,6 +135,45 @@ def test_measured_plan_cache_hit_skips_measurement(tmp_path):
     assert plan2 == plan1
 
 
+@pytest.mark.parametrize(
+    "garbage",
+    [
+        "not json at all {{{",
+        '{"version": 1, "entries"',          # truncated mid-write
+        '{"version": 99, "entries": {}}',    # wrong schema version
+        '[1, 2, 3]',                         # valid JSON, wrong shape
+        '{"version": 1, "entries": [1]}',    # entries not a dict
+        '{"version": 1, "entries": {"k": {"seconds": 1}}}',  # entry sans plan
+        "",                                  # empty file
+    ],
+)
+def test_plan_cache_recovers_from_corrupt_file(tmp_path, garbage):
+    """A corrupt/truncated cache (e.g. a concurrent writer died) degrades to
+    an empty cache on load, and the next measured plan rewrites it whole."""
+    cache = tmp_path / "plans.json"
+    cache.write_text(garbage)
+    assert load_plan_cache(str(cache)) == {}
+    prob = KronProblem(8, (4, 4), (4, 4))
+    plan = make_plan(prob, tune="measure", backend="xla", cache_path=str(cache))
+    assert plan.stages
+    entries = load_plan_cache(str(cache))
+    key = plan_cache_key(prob, 4, "xla")
+    assert key in entries  # cache healthy again
+
+
+def test_plan_cache_save_merges_concurrent_entries(tmp_path):
+    """Two writers that loaded the same snapshot don't clobber each other:
+    save merges the on-disk entries written in between."""
+    from repro.core.autotune import save_plan_cache
+
+    cache = str(tmp_path / "plans.json")
+    save_plan_cache(cache, {"a": {"plan": {"stages": []}, "seconds": 1}})
+    # second writer, unaware of 'a', saves only 'b'
+    save_plan_cache(cache, {"b": {"plan": {"stages": []}, "seconds": 2}})
+    entries = load_plan_cache(cache)
+    assert set(entries) == {"a", "b"}
+
+
 def test_measure_best_ranks_by_wallclock():
     """measure_best picks the candidate whose closure is actually fastest."""
     x = jnp.zeros((256, 256))

@@ -20,6 +20,32 @@ def test_balanced_factorization_known():
     assert balanced_factorization(7, 1) == (7,)
 
 
+def test_balanced_factorization_edge_cases():
+    import math
+
+    # d=1: every bucket stays 1
+    assert balanced_factorization(1, 1) == (1,)
+    assert balanced_factorization(1, 3) == (1, 1, 1)
+    # prime d: one bucket gets it all
+    assert balanced_factorization(13, 2) == (13, 1)
+    assert balanced_factorization(97, 4) == (97, 1, 1, 1)
+    # n greater than the number of prime factors: pad with 1s, stay exact
+    assert balanced_factorization(6, 4) == (3, 2, 1, 1)
+    for d, n in [(2048, 5), (360, 4), (97, 3), (1, 2)]:
+        out = balanced_factorization(d, n)
+        assert len(out) == n and math.prod(out) == d
+        assert out == tuple(sorted(out, reverse=True))
+
+
+def test_balanced_factorization_rejects_bad_dims():
+    with pytest.raises(ValueError):
+        balanced_factorization(0, 2)
+    with pytest.raises(ValueError):
+        balanced_factorization(-8, 2)
+    with pytest.raises(ValueError):
+        balanced_factorization(8, 0)
+
+
 @pytest.mark.parametrize("use_bias", [False, True])
 def test_forward_matches_dense(use_bias):
     spec = KronLinearSpec.balanced(64, 48, n_factors=2, use_bias=use_bias)
@@ -69,3 +95,33 @@ def test_leading_dims():
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 16))
     y = kron_linear_apply(params, x)
     assert y.shape == (2, 3, 16)
+    # the (B, T, d) route goes through the batched entry point and must match
+    # the per-sample application exactly
+    for i in range(2):
+        np.testing.assert_allclose(
+            y[i], kron_linear_apply(params, x[i]), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_kron_linear_apply_batched_per_sample_factors():
+    """Per-expert KronLinear: one factor set per batch element."""
+    from repro.core.layers import kron_linear_apply_batched
+
+    b = 3
+    spec = KronLinearSpec.balanced(16, 16, n_factors=2, use_bias=True)
+    per = [
+        kron_linear_init(jax.random.PRNGKey(i), spec) for i in range(b)
+    ]
+    params = {
+        "factors": tuple(
+            jnp.stack([p["factors"][i] for p in per])
+            for i in range(len(spec.ps))
+        ),
+        "bias": jnp.stack([p["bias"] + i for i, p in enumerate(per)]),
+    }
+    x = jax.random.normal(jax.random.PRNGKey(9), (b, 4, 16))
+    y = kron_linear_apply_batched(params, x)
+    assert y.shape == (b, 4, 16)
+    for i in range(b):
+        want = x[i] @ kron_linear_materialize(per[i]) + params["bias"][i]
+        np.testing.assert_allclose(y[i], want, rtol=1e-5, atol=1e-5)
