@@ -9,8 +9,18 @@ from .kron import (  # noqa: F401
     sliced_multiply,
     pair_factors,
 )
-from .fastkron import kron_matmul, kron_matmul_unfused  # noqa: F401
-from .autotune import KronPlan, Stage, TileConfig, make_plan  # noqa: F401
+from .fastkron import (  # noqa: F401
+    kron_matmul,
+    kron_matmul_batched,
+    kron_matmul_unfused,
+)
+from .autotune import (  # noqa: F401
+    KronPlan,
+    Stage,
+    TileConfig,
+    make_plan,
+    make_batched_plan,
+)
 from .layers import (  # noqa: F401
     KronLinearSpec,
     kron_linear_init,

@@ -22,7 +22,14 @@ extensions:
     when P is too small to feed the MXU's 128-deep contraction;
   * a BACKWARD plan (``KronPlan.bwd_stages``): the mirrored stages executed
     by the VJP — per-stage transposed chains + factor-gradient contractions —
-    with tiles tuned for the transposed shapes.
+    with tiles tuned for the transposed shapes;
+  * a BATCH tile (``KronPlan.t_b``, ``make_batched_plan``): samples per
+    block for the per-sample-factor batch-grid kernels, traded against the
+    M-tile — and, in distributed mode (``g_k > 1``), against the per-round
+    relocation payload — under the same VMEM budget.
+
+Plan fields and how the planner picks them: docs/architecture.md#kronplan;
+cache location/format: docs/api.md#plan-cache.
 """
 from __future__ import annotations
 
@@ -344,12 +351,42 @@ def make_plan(
 # ---------------------------------------------------------------------------
 
 
+def _dist_round_payload_elems(prob: KronProblem, g_k: int) -> int:
+    """Worst-round per-sample relocation slab for the batched DISTRIBUTED
+    path: one device's all_to_all staging buffer holds ``M_loc * C`` elements
+    per sample at the round's output width ``C`` (the ``(G_K-1)/G_K`` send
+    fraction still occupies the buffer — received chunks land in place).
+    ``prob`` is the LOCAL problem (``m = M_loc``); columns start at
+    ``K / G_K``.  Returns 0 when the mesh has no model axis or the round
+    schedule is infeasible (the caller then plans compute-only)."""
+    if g_k <= 1:
+        return 0
+    from .distributed import plan_rounds
+
+    ps = list(reversed(prob.ps))
+    qs = list(reversed(prob.qs))
+    k_loc = prob.k // g_k
+    try:
+        rounds = plan_rounds(k_loc, ps, qs, g_k)
+    except ValueError:
+        return 0
+    worst = 0
+    c = k_loc
+    i = 0
+    for r in rounds:
+        c = c // math.prod(ps[i : i + r]) * math.prod(qs[i : i + r])
+        worst = max(worst, prob.m * c)
+        i += r
+    return worst
+
+
 def _batch_tiled(
     base: KronPlan,
     prob: KronProblem,
     batch: int,
     vmem_budget_elems: int,
     dtype_bytes: int,
+    extra_per_sample_elems: int = 0,
 ) -> KronPlan:
     """Batch-aware tiling for the per-sample batch-grid kernels.
 
@@ -359,6 +396,12 @@ def _batch_tiled(
     traded DOWN to buy batch tiles: while ``t_b`` is below the sublane width
     (8 rows is what the TPU needs to fill a register row anyway), the largest
     stage M-tile is reduced and ``t_b`` recomputed under the same budget.
+
+    ``extra_per_sample_elems`` (distributed mode): per-sample elements that
+    share the budget with the compute block — the per-round relocation slab —
+    so the effective constraint is ``t_b * (block + extra) <= budget``.  This
+    is the t_b-vs-payload trade: a bigger batch tile buys launch amortization
+    but inflates the round's resident communication slab.
     """
     ps = list(reversed(prob.ps))
     qs = list(reversed(prob.qs))
@@ -371,7 +414,7 @@ def _batch_tiled(
         return st.tiles.t_m * t_k * fused_growth(sps, sqs, st.t_qs)
 
     def best_t_b() -> int:
-        worst = max(block_elems(st) for st in stages)
+        worst = max(block_elems(st) for st in stages) + extra_per_sample_elems
         cap = max(1, int(vmem_budget_elems // max(worst, 1.0)))
         return max(d for d in _divisors(batch) if d <= cap)
 
@@ -407,6 +450,7 @@ def make_batched_plan(
     tune: str = "analytic",
     backend: str = "auto",
     cache_path: str | None = None,
+    g_k: int = 1,
 ) -> KronPlan:
     """Plan for ``batch`` independent copies of ``prob`` in one launch.
 
@@ -419,9 +463,42 @@ def make_batched_plan(
     under the same VMEM budget (pre-kronization is disabled — the batched
     executor has no per-sample prekron stage).  ``tune="measure"`` wall-clock
     ranks ``t_b`` variants and persists the winner keyed on B.
+
+    ``g_k > 1`` selects DISTRIBUTED mode (``kron_matmul_batched_distributed``
+    on a mesh with a ``G_K``-way model axis): ``prob`` is the per-device
+    LOCAL problem (``m = M_loc``), and the worst-round relocation slab
+    (``_dist_round_payload_elems``) shares the VMEM budget with the compute
+    blocks, so ``t_b`` is traded against the per-round payload:
+    ``t_b * (block + payload) <= budget``.  Distributed plans are analytic
+    only — a single-host wall clock cannot rank collective rounds, so
+    ``tune="measure"`` falls back to the analytic distributed plan and
+    nothing is written to the plan cache.  Distributed SHARED-factor plans
+    do not exist: the shared path collapses B into the sharded row axis and
+    needs no batched plan, so ``g_k > 1`` with ``shared_factors=True``
+    raises rather than silently planning a single-device problem.
     """
     if batch <= 0:
         raise ValueError(f"batch must be positive, got {batch}")
+    if g_k > 1 and shared_factors:
+        raise ValueError(
+            "g_k > 1 (distributed mode) requires shared_factors=False: the "
+            "shared-factors distributed path collapses the batch into the "
+            "data-sharded row axis and takes no batched plan"
+        )
+    if g_k > 1 and not shared_factors:
+        base = make_plan(
+            prob,
+            dtype_bytes=dtype_bytes,
+            enable_fusion=enable_fusion,
+            enable_prekron=False,
+            vmem_budget_elems=vmem_budget_elems,
+            tune="analytic",
+            backend=backend,
+        )
+        return _batch_tiled(
+            base, prob, batch, vmem_budget_elems, dtype_bytes,
+            extra_per_sample_elems=_dist_round_payload_elems(prob, g_k),
+        )
     if shared_factors:
         return make_plan(
             KronProblem(batch * prob.m, prob.ps, prob.qs),
@@ -487,7 +564,9 @@ def plan_cache_key(
     """Cache key covers every plan-shaping input (defaults mirror make_plan):
     a hit must satisfy the caller's constraints, not just the problem shape.
     ``batch > 0`` marks a batched-plan entry (keyed on B and the factor-
-    sharing mode); 0 keeps the single-problem key format stable."""
+    sharing mode); 0 keeps the single-problem key format stable.
+    Distributed batched plans (``make_batched_plan(g_k > 1)``) are analytic-
+    only and never cached, so the key carries no g_k field."""
     ps = ",".join(map(str, prob.ps))
     qs = ",".join(map(str, prob.qs))
     key = (

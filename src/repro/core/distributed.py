@@ -18,6 +18,20 @@ Communication per device per round: ``M_loc * C_loc * (G_K-1)/G_K`` elements
 with ``ceil(N/L)`` rounds — vs ``N`` rounds for the per-iteration baseline
 (CTF / DISTAL), implemented here as ``kron_matmul_distributed_periter`` for
 the Figure-11 comparison.
+
+Batched rounds (beyond paper, PR 3): ``kron_matmul_batched_distributed``
+carries a whole batch of B independent Kron-Matmul problems through ONE
+collective round per stage.  Shared factors collapse B into the data-sharded
+M axis and reuse the single-problem round schedule unchanged; per-sample
+factors run a batched ``_dist_body`` whose relocation all-to-all moves a
+``(B, M_local, C_local)`` slab per stage — one collective for the batch where
+a per-problem loop would issue B.  The payload per device per round becomes
+``B * M_loc * C_loc * (G_K-1)/G_K`` (``comm_elems_per_device(batch=B)``); the
+LATENCY per round is paid once instead of B times, which is the whole win in
+the small-problem regime (see EXPERIMENTS.md §Distributed-Batched).  Local
+multiplies route through the PR-2 batch-grid kernels (``ops.fused_kron_*``
+``_batched``) under a plan from ``autotune.make_batched_plan(g_k=...)`` whose
+``t_b`` is traded against the per-round relocation slab.
 """
 from __future__ import annotations
 
@@ -95,9 +109,16 @@ def plan_rounds(
 
 def comm_elems_per_device(
     m_loc: int, k_loc: int, ps: Sequence[int], qs: Sequence[int], g_k: int,
-    rounds: Sequence[int] | None = None,
+    rounds: Sequence[int] | None = None, *, batch: int = 1,
 ) -> int:
-    """Analytic all_to_all payload (elements sent per device, all rounds)."""
+    """Analytic all_to_all payload (elements sent per device, all rounds).
+
+    ``batch``: number of independent problems riding the SAME collective
+    round (``kron_matmul_batched_distributed``) — each round's slab is
+    ``batch * M_loc * C * (G_K-1)/G_K`` elements.  The round COUNT does not
+    change with ``batch``: that is the latency amortization the batched path
+    exists for (a per-problem loop pays ``batch`` times the rounds instead).
+    """
     ps, qs = list(ps), list(qs)
     if rounds is None:
         rounds = plan_rounds(k_loc, ps, qs, g_k)
@@ -108,7 +129,7 @@ def comm_elems_per_device(
         pprod = math.prod(ps[i : i + r])
         qprod = math.prod(qs[i : i + r])
         c = (c // pprod) * qprod
-        total += m_loc * c * (g_k - 1) // g_k
+        total += batch * m_loc * c * (g_k - 1) // g_k
         i += r
     return total
 
@@ -119,15 +140,10 @@ def comm_elems_per_device(
 
 
 def _relocate(y: jax.Array, q_prod: int, g_k: int, model_axis: str) -> jax.Array:
-    """One all_to_all relocation (see module docstring)."""
-    m_loc, c = y.shape
-    u = c // q_prod
-    chunk = q_prod // g_k
-    y4 = y.reshape(m_loc, g_k, chunk, u)
-    y4 = jax.lax.all_to_all(y4, model_axis, split_axis=1, concat_axis=1)
-    # axis 1 is now the sender index g_k; target local col = (q_lo*G_K+g_k)*U+s
-    y4 = jnp.swapaxes(y4, 1, 2)
-    return y4.reshape(m_loc, c)
+    """One all_to_all relocation (see module docstring).  The index
+    arithmetic lives in ``_relocate_batched``; the single-problem case is
+    the batch-of-one view (the extra reshape is a layout no-op under jit)."""
+    return _relocate_batched(y[None], q_prod, g_k, model_axis)[0]
 
 
 def _local_multiply(y: jax.Array, f: jax.Array, backend: str) -> jax.Array:
@@ -156,6 +172,94 @@ def _dist_body(
             qprod *= int(f.shape[1])
         if g_k > 1:
             y = _relocate(y, qprod, g_k, model_axis)
+        i += r
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Batched shard_map body: B problems per collective round
+# ---------------------------------------------------------------------------
+
+
+def _relocate_batched(y: jax.Array, q_prod: int, g_k: int, model_axis: str) -> jax.Array:
+    """One all_to_all relocation for the WHOLE batch (the canonical
+    implementation — ``_relocate`` is the batch-of-one view).
+
+    The collective moves one ``(B, M_loc, C)`` slab per round instead of B
+    separate ``(M_loc, C)`` payloads — same bytes, 1/B the latency."""
+    b, m_loc, c = y.shape
+    u = c // q_prod
+    chunk = q_prod // g_k
+    y5 = y.reshape(b, m_loc, g_k, chunk, u)
+    y5 = jax.lax.all_to_all(y5, model_axis, split_axis=2, concat_axis=2)
+    # axis 2 is now the sender index g_k; target local col = (q_lo*G_K+g_k)*U+s
+    y5 = jnp.swapaxes(y5, 2, 3)
+    return y5.reshape(b, m_loc, c)
+
+
+def _round_tiles_batched(
+    m: int, k: int, ps: Sequence[int], qs: Sequence[int], t_b: int
+) -> tuple[int, int, int]:
+    """(t_b, t_m, t_k) for one batched round chain that provably fits the
+    batch-grid kernels' VMEM legality (``t_b * t_m * t_k * growth <= budget``).
+    The round grouping follows the COMM schedule, not the compute plan's
+    stages, so tiles are re-fitted here; prefers the planner's ``t_b`` and
+    trades it down only if even (t_m=1, t_s=1) cannot hold it."""
+    from ..kernels.kron_fused import VMEM_BUDGET_ELEMS, fused_growth
+
+    pprod = math.prod(ps)
+    s = k // pprod
+    growth = fused_growth(list(ps), list(qs), None)
+    for tb in sorted({d for d in range(1, t_b + 1) if t_b % d == 0}, reverse=True):
+        t_m = min(8, m)
+        while m % t_m:
+            t_m -= 1
+        while t_m >= 1:
+            fits = [
+                d for d in range(1, s + 1)
+                if s % d == 0 and tb * t_m * d * pprod * growth <= VMEM_BUDGET_ELEMS
+            ]
+            if fits:
+                return tb, t_m, max(fits) * pprod
+            t_m = max((d for d in range(1, t_m) if m % d == 0), default=0)
+    return 1, 1, pprod  # degenerate problems; XLA path ignores tiles anyway
+
+
+def _local_multiply_batched(
+    y: jax.Array, fs: Sequence[jax.Array], t_b: int, backend: str
+) -> jax.Array:
+    """One round's local multiplies as a single batch-grid fused chain."""
+    ps = [int(f.shape[1]) for f in fs]
+    qs = [int(f.shape[2]) for f in fs]
+    tb, t_m, t_k = _round_tiles_batched(int(y.shape[1]), int(y.shape[2]), ps, qs, t_b)
+    return ops.fused_kron_batched(y, fs, backend=backend, t_b=tb, t_m=t_m, t_k=t_k)
+
+
+def _dist_body_batched(
+    x_loc: jax.Array,
+    factors_rev: tuple[jax.Array, ...],
+    *,
+    g_k: int,
+    model_axis: str,
+    backend: str,
+    per_iteration: bool,
+    t_b: int,
+) -> jax.Array:
+    """Per-sample-factors batched distributed body: the single-problem round
+    schedule, with each round's compute one batch-grid kernel chain and each
+    round's relocation ONE all_to_all carrying the whole batch."""
+    ps = [int(f.shape[1]) for f in factors_rev]
+    qs = [int(f.shape[2]) for f in factors_rev]
+    k_loc = int(x_loc.shape[2])
+    rounds = plan_rounds(k_loc, ps, qs, g_k, minimal=per_iteration)
+    y = x_loc
+    i = 0
+    for r in rounds:
+        fs = factors_rev[i : i + r]
+        y = _local_multiply_batched(y, fs, t_b, backend)
+        if g_k > 1:
+            qprod = math.prod(int(f.shape[2]) for f in fs)
+            y = _relocate_batched(y, qprod, g_k, model_axis)
         i += r
     return y
 
@@ -201,14 +305,118 @@ def kron_matmul_distributed(
     return fn(x, factors)
 
 
+def _mesh_size(mesh: Mesh, axis: str | tuple[str, ...]) -> int:
+    if isinstance(axis, tuple):
+        return math.prod(mesh.shape[a] for a in axis)
+    return mesh.shape[axis]
+
+
+def kron_matmul_batched_distributed(
+    x: jax.Array,
+    factors: Sequence[jax.Array],
+    mesh: Mesh,
+    *,
+    shared_factors: bool,
+    data_axis: str | tuple[str, ...] = "data",
+    model_axis: str = "model",
+    backend: str = "auto",
+    per_iteration: bool = False,
+    plan="auto",
+) -> jax.Array:
+    """``B`` independent distributed Kron-Matmuls with ONE collective round
+    per stage for the whole batch.
+
+    ``x``: (B, M, K) sharded ``P(None, data_axis, model_axis)`` — the batch
+    axis is replicated over the mesh, rows and columns sharded exactly as in
+    ``kron_matmul_distributed``.  Returns (B, M, K') with the same sharding.
+
+    shared_factors=True: one 2-D factor set ``F^i: (P_i, Q_i)``.  B collapses
+    into the data-sharded M axis (both are row indices of one contiguous
+    array, and the row axis is embarrassingly parallel), so the batch reuses
+    the single-problem round schedule verbatim: same rounds, same payload
+    fraction, B-times-taller local GEMMs.  Requires ``G_M | B*M``.
+
+    shared_factors=False: per-sample factors ``F^i: (B, P_i, Q_i)``
+    (replicated — factors are small, paper §5).  Runs ``_dist_body_batched``:
+    each round's local multiplies are one batch-grid kernel chain
+    (``ops.fused_kron_batched``) and each round's relocation is ONE
+    all_to_all moving the ``(B·M_local, C_local)`` slab — where a per-problem
+    loop would issue B collectives per round.  ``plan``: ``"auto"`` builds one
+    with ``autotune.make_batched_plan(..., g_k=G_K)`` (its batch tile ``t_b``
+    is traded against the per-round relocation payload under the VMEM
+    budget); ``None`` runs untiled (``t_b=1``); or pass an explicit
+    ``KronPlan``.
+
+    ``per_iteration=True`` keeps the CTF/DISTAL-style baseline round schedule
+    (relocate after every factor) for comparisons; the batch still rides each
+    collective.
+    """
+    factors = tuple(factors)
+    if x.ndim != 3:
+        raise ValueError(f"x must be (B, M, K), got shape {x.shape}")
+    b, m, k = (int(d) for d in x.shape)
+    g_k = mesh.shape[model_axis]
+    if shared_factors:
+        if any(f.ndim != 2 for f in factors):
+            raise ValueError("shared_factors=True expects 2-D (P_i, Q_i) factors")
+        y = kron_matmul_distributed(
+            x.reshape(b * m, k), factors, mesh,
+            data_axis=data_axis, model_axis=model_axis, backend=backend,
+            per_iteration=per_iteration,
+        )
+        return y.reshape(b, m, -1)
+    if any(f.ndim != 3 for f in factors):
+        raise ValueError("shared_factors=False expects 3-D (B, P_i, Q_i) factors")
+    for f in factors:
+        if int(f.shape[0]) != b:
+            raise ValueError(f"factor batch {f.shape[0]} != x batch {b}")
+    if plan == "auto":
+        from . import autotune
+        from .kron import KronProblem
+
+        g_m = _mesh_size(mesh, data_axis)
+        ps = tuple(int(f.shape[1]) for f in factors)
+        qs = tuple(int(f.shape[2]) for f in factors)
+        plan = autotune.make_batched_plan(
+            KronProblem(max(1, m // g_m), ps, qs), b,
+            shared_factors=False, dtype_bytes=x.dtype.itemsize,
+            backend=backend, g_k=g_k,
+        )
+    body = partial(
+        _dist_body_batched,
+        g_k=g_k,
+        model_axis=model_axis,
+        backend=backend,
+        per_iteration=per_iteration,
+        t_b=1 if plan is None else plan.t_b,
+    )
+    spec_x = P(None, data_axis, model_axis)
+    fn = _shard_map(
+        lambda x_loc, fs: body(x_loc, tuple(reversed(fs))),
+        mesh=mesh,
+        in_specs=(spec_x, P()),
+        out_specs=spec_x,
+    )
+    return fn(x, factors)
+
+
 def sharded_input(x, mesh, data_axis="data", model_axis="model"):
     """Place (M, K) onto the grid the distributed algorithm expects."""
     return jax.device_put(x, NamedSharding(mesh, P(data_axis, model_axis)))
 
 
+def sharded_input_batched(x, mesh, data_axis="data", model_axis="model"):
+    """Place (B, M, K) onto the grid ``kron_matmul_batched_distributed``
+    expects: batch replicated, rows over ``data_axis``, cols over
+    ``model_axis``."""
+    return jax.device_put(x, NamedSharding(mesh, P(None, data_axis, model_axis)))
+
+
 __all__ = [
     "kron_matmul_distributed",
+    "kron_matmul_batched_distributed",
     "plan_rounds",
     "comm_elems_per_device",
     "sharded_input",
+    "sharded_input_batched",
 ]

@@ -5,6 +5,10 @@ for ``x: (..., prod P_i)`` and ``F^i: (P_i, Q_i)`` without materializing the
 Kronecker matrix, using the FastKron sliced-multiply algorithm (paper §3)
 with an execution plan (fusion grouping C3 + tile sizes C5 + beyond-paper
 pre-kronization) chosen by ``core.autotune.make_plan``.
+``kron_matmul_batched`` runs B independent problems in one launch; the
+multi-device entry points (``kron_matmul_distributed`` and its batched
+sibling ``kron_matmul_batched_distributed``) live in ``core.distributed``.
+User-facing reference: docs/api.md; layer map: docs/architecture.md.
 
 Differentiation: the VJP of a Kron-Matmul is itself Kron-shaped —
 ``dX = dY @ (F^1 (x) ... (x) F^N)^T`` — so the backward pass reuses the same

@@ -7,6 +7,7 @@ Used by the model zoo when a config sets ``kron_ffn``/``kron_proj``.
 """
 from __future__ import annotations
 
+import contextlib
 import math
 from dataclasses import dataclass
 from typing import Sequence
@@ -15,6 +16,70 @@ import jax
 import jax.numpy as jnp
 
 from .fastkron import kron_matmul, kron_matmul_batched
+
+# Active distributed-KronLinear scopes (innermost last).  Entered via
+# ``kron_distributed``; while active, batched KronLinear applies route
+# through ``kron_matmul_batched_distributed`` on the scope's mesh.
+_DIST_SCOPES: list[tuple] = []
+
+
+@contextlib.contextmanager
+def kron_distributed(mesh, *, data_axis="data", model_axis="model"):
+    """Route batched KronLinear applies through the distributed Kron-Matmul.
+
+    Inside the scope, ``kron_linear_apply`` on ``(B, T, d)`` activations uses
+    ``kron_matmul_batched_distributed`` (shared factors: B·T collapses into
+    the data-sharded row axis, paper §5 round schedule) on ``mesh`` instead
+    of the single-device batched launch.  Shapes the mesh cannot host (row
+    count not divisible by the data axis, or no legal relocation round) fall
+    back to the local path — the scope is an optimization, never an error.
+    This is what ``launch/serve.py --kron-ffn --distributed`` wraps the
+    serving loop in.
+
+    The routing decision is made at TRACE time: enter the scope before the
+    first call of a jitted function (as serve.py does).  A function traced
+    outside the scope keeps its local path on later same-shape calls inside
+    it (jit cache hit), and vice versa — the scope does not participate in
+    the jit cache key.
+    """
+    _DIST_SCOPES.append((mesh, data_axis, model_axis))
+    try:
+        yield
+    finally:
+        _DIST_SCOPES.pop()
+
+
+def _apply_batched_maybe_distributed(factors, x, backend, plan):
+    if _DIST_SCOPES and x.ndim == 3:
+        from .distributed import (
+            _mesh_size, kron_matmul_batched_distributed, plan_rounds,
+        )
+
+        mesh, data_axis, model_axis = _DIST_SCOPES[-1]
+        b, m, k = (int(d) for d in x.shape)
+        g_m = _mesh_size(mesh, data_axis)
+        g_k = mesh.shape[model_axis]
+        if (b * m) % g_m == 0 and k % g_k == 0:
+
+            # Pre-flight ONLY the round-schedule feasibility — any other
+            # error from the distributed path stays loud.
+            try:
+                plan_rounds(
+                    k // g_k,
+                    [int(f.shape[0]) for f in reversed(factors)],
+                    [int(f.shape[1]) for f in reversed(factors)],
+                    g_k,
+                )
+            except ValueError:
+                pass  # no legal round schedule for this (K, G_K) — run local
+            else:
+                return kron_matmul_batched_distributed(
+                    x, factors, mesh, shared_factors=True,
+                    data_axis=data_axis, model_axis=model_axis, backend=backend,
+                )
+    return kron_matmul_batched(
+        x, factors, shared_factors=True, backend=backend, plan=plan
+    )
 
 
 def balanced_factorization(d: int, n: int) -> tuple[int, ...]:
@@ -98,10 +163,10 @@ def kron_linear_apply(
     if x.ndim >= 3:
         # Serving/training batches (B, ..., d_in): the batched entry point —
         # shared factors collapse B into the row axis and the plan is keyed
-        # on the batch size, so one launch covers the whole batch.
-        y = kron_matmul_batched(
-            x, params["factors"], shared_factors=True, backend=backend, plan=plan
-        )
+        # on the batch size, so one launch covers the whole batch.  Inside a
+        # ``kron_distributed`` scope, 3-D activations additionally route
+        # through the distributed batched path on the scope's mesh.
+        y = _apply_batched_maybe_distributed(params["factors"], x, backend, plan)
     else:
         y = kron_matmul(x, params["factors"], backend=backend, plan=plan)
     if "bias" in params:
@@ -141,5 +206,6 @@ __all__ = [
     "kron_linear_apply",
     "kron_linear_apply_batched",
     "kron_linear_materialize",
+    "kron_distributed",
     "balanced_factorization",
 ]

@@ -70,8 +70,19 @@ class BatchedKronKernel:
     def dim(self) -> int:
         return math.prod(int(f.shape[1]) for f in self.factors)
 
-    def matmul(self, v: jax.Array) -> jax.Array:
-        """v: (B, M, prod P) -> per-sample v_b @ K_b."""
+    def matmul(self, v: jax.Array, *, mesh=None) -> jax.Array:
+        """v: (B, M, prod P) -> per-sample v_b @ K_b.
+
+        ``mesh``: an optional ``(data, model)`` jax Mesh — the MVM then runs
+        ``kron_matmul_batched_distributed`` (v sharded rows-over-data /
+        cols-over-model, ONE collective round per stage for all B kernels)
+        instead of the single-device batched launch."""
+        if mesh is not None:
+            from ..core.distributed import kron_matmul_batched_distributed
+
+            return kron_matmul_batched_distributed(
+                v, self.factors, mesh, shared_factors=False
+            )
         return kron_matmul_batched(v, self.factors, shared_factors=False)
 
     @classmethod
@@ -160,13 +171,19 @@ def gp_train_epoch_batched(
     *,
     noise: float = 0.1,
     cg_iters: int = 10,
+    mesh=None,
 ) -> tuple[jax.Array, jax.Array]:
     """Multi-kernel epoch: solve ``(K_b + noise*I)^-1 V_b`` for all B kernels
     at once.  ``v: (B, M, dim)``; CG runs on the whole stack (its reductions
-    are per-row), so each iteration is one batched Kron-Matmul launch."""
+    are per-row), so each iteration is one batched Kron-Matmul launch.
+
+    ``mesh``: optional ``(data, model)`` Mesh — every CG iteration's MVM then
+    runs the distributed batched path (paper §5 round schedule, one
+    collective per stage for the whole kernel stack; the CG axpy/reduction
+    arithmetic stays element-wise and sharding-transparent)."""
 
     def matvec(rows):
-        return kernel.matmul(rows) + noise * rows
+        return kernel.matmul(rows, mesh=mesh) + noise * rows
 
     return conjugate_gradient(matvec, v, iters=cg_iters)
 

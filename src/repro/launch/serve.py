@@ -39,7 +39,16 @@ def main() -> None:
                          "activations run the batched Kron-Matmul path "
                          "(kron_matmul_batched, shared factors) — one launch "
                          "per projection for the whole serving batch")
+    ap.add_argument("--distributed", action="store_true",
+                    help="with --kron-ffn: route the batched Kron-FFN prefill "
+                         "through kron_matmul_batched_distributed on the "
+                         "serving mesh (one collective round per projection "
+                         "stage for the whole batch; shapes the mesh cannot "
+                         "host fall back to the local batched path)")
     args = ap.parse_args()
+    if args.distributed and not args.kron_ffn:
+        ap.error("--distributed requires --kron-ffn (it distributes the "
+                 "batched Kron-FFN prefill)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -52,7 +61,14 @@ def main() -> None:
     mesh = elastic_mesh(jax.device_count(), want_model=args.want_model_parallel)
     max_len = args.prompt_len + args.gen
 
-    with mesh:
+    import contextlib
+
+    from ..core.layers import kron_distributed
+
+    dist_scope = (
+        kron_distributed(mesh) if args.distributed else contextlib.nullcontext()
+    )
+    with mesh, dist_scope:
         from ..models import model as M
 
         params = M.init_params(cfg, jax.random.PRNGKey(0))

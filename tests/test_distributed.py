@@ -14,13 +14,12 @@ import pytest
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
-@pytest.mark.slow
-def test_distributed_driver_all_checks():
+def _run_driver(name: str) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = str(ROOT / "src")
     proc = subprocess.run(
-        [sys.executable, str(ROOT / "tests" / "distributed_driver.py")],
+        [sys.executable, str(ROOT / "tests" / name)],
         env=env,
         capture_output=True,
         text=True,
@@ -28,3 +27,20 @@ def test_distributed_driver_all_checks():
     )
     assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
     assert "ALL-OK" in proc.stdout
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_distributed_driver_all_checks():
+    _run_driver("distributed_driver.py")
+
+
+@pytest.mark.slow
+def test_distributed_batched_driver_all_checks():
+    """Batched distributed rounds (PR 3): shared + per-sample correctness
+    (fwd + grads) vs the looped per-problem reference, one collective per
+    round for the whole batch, batch-aware comm accounting, and the gp /
+    layers consumers — all on a forced 8-device (2, 4) host mesh."""
+    out = _run_driver("distributed_batched_driver.py")
+    assert "OK collective-count" in out
+    assert "OK comm-accounting" in out

@@ -1,0 +1,149 @@
+#!/usr/bin/env python
+"""Docs lint: every ```python snippet in README.md / docs/ must EXECUTE, and
+every internal markdown link must resolve.
+
+    python tools/check_docs.py [files...]
+
+Run by CI (see .github/workflows/ci.yml).  Rules:
+
+  * Fenced blocks whose info string is exactly ``python`` are executed in a
+    fresh subprocess with ``PYTHONPATH=src`` from the repo root, on the CPU
+    backend with 8 forced host devices (so distributed snippets exercise a
+    real multi-device mesh, same as tests/test_distributed.py).
+  * Blocks marked ``python no-run`` (or any other info string: ``bash``,
+    ``text``, ``json``, ...) are skipped — use ``no-run`` for illustrative
+    fragments that need context the snippet doesn't set up.
+  * Links ``[text](target)`` where target is not http(s)/mailto/anchor must
+    point at an existing file (anchors after ``#`` are stripped; paths
+    resolve relative to the containing document).
+
+Exit status: 0 iff every snippet ran green and every internal link resolves.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import subprocess
+import sys
+import tempfile
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+FENCE_RE = re.compile(r"^```(\S*)[ \t]*(.*)$")
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+SNIPPET_ENV = {
+    "PYTHONPATH": str(ROOT / "src"),
+    "JAX_PLATFORMS": "cpu",
+    "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+}
+SNIPPET_TIMEOUT_S = 600
+
+
+def doc_files(argv: list[str]) -> list[pathlib.Path]:
+    if argv:
+        return [pathlib.Path(a).resolve() for a in argv]
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").glob("**/*.md"))
+    return [f for f in files if f.exists()]
+
+
+def extract_snippets(text: str) -> list[tuple[int, str, str]]:
+    """(start_line, info_string, body) for every fenced block."""
+    out = []
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE_RE.match(lines[i])
+        if m and lines[i].startswith("```") and m.group(1):
+            info = (m.group(1) + " " + m.group(2)).strip()
+            body: list[str] = []
+            j = i + 1
+            while j < len(lines) and not lines[j].startswith("```"):
+                body.append(lines[j])
+                j += 1
+            out.append((i + 1, info, "\n".join(body)))
+            i = j + 1
+        else:
+            i += 1
+    return out
+
+
+def run_snippet(doc: pathlib.Path, line: int, code: str) -> str | None:
+    """Returns an error string, or None on success."""
+    with tempfile.NamedTemporaryFile(
+        "w", suffix=".py", prefix="docsnippet_", delete=False
+    ) as f:
+        f.write(code + "\n")
+        path = f.name
+    try:
+        proc = subprocess.run(
+            [sys.executable, path],
+            env={**os.environ, **SNIPPET_ENV},
+            cwd=ROOT,
+            capture_output=True,
+            text=True,
+            timeout=SNIPPET_TIMEOUT_S,
+        )
+    except subprocess.TimeoutExpired:
+        return f"{doc.relative_to(ROOT)}:{line}: snippet timed out"
+    finally:
+        os.unlink(path)
+    if proc.returncode != 0:
+        tail = (proc.stderr or proc.stdout).strip().splitlines()[-12:]
+        return (
+            f"{doc.relative_to(ROOT)}:{line}: snippet failed "
+            f"(exit {proc.returncode})\n    " + "\n    ".join(tail)
+        )
+    return None
+
+
+def check_links(doc: pathlib.Path, text: str) -> list[str]:
+    errors = []
+    in_fence = False
+    for n, raw in enumerate(text.splitlines(), 1):
+        if raw.startswith("```"):
+            in_fence = not in_fence
+        if in_fence:
+            continue
+        for target in LINK_RE.findall(raw):
+            if target.startswith(EXTERNAL) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            cand = (doc.parent / rel).resolve()
+            if not cand.exists():
+                errors.append(
+                    f"{doc.relative_to(ROOT)}:{n}: broken link -> {target}"
+                )
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    errors: list[str] = []
+    n_snippets = 0
+    for doc in doc_files(argv):
+        text = doc.read_text()
+        errors += check_links(doc, text)
+        for line, info, body in extract_snippets(text):
+            if info != "python":
+                continue
+            n_snippets += 1
+            print(f"[docs-lint] run {doc.relative_to(ROOT)}:{line} ...",
+                  flush=True)
+            err = run_snippet(doc, line, body)
+            if err:
+                errors.append(err)
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        print(f"[docs-lint] FAILED ({len(errors)} problem(s))", file=sys.stderr)
+        return 1
+    print(f"[docs-lint] OK: {n_snippets} snippet(s) ran, links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
