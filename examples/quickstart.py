@@ -7,11 +7,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    KronOp,
     KronProblem,
-    kron_matmul,
     kron_matmul_naive,
     kron_matmul_shuffle,
-    make_plan,
 )
 from repro.core.layers import (
     KronLinearSpec,
@@ -24,34 +23,47 @@ def main() -> None:
     key = jax.random.PRNGKey(0)
 
     # --- 1. Kron-Matmul without materializing the Kronecker matrix --------
-    # Y = X (F1 (x) F2 (x) F3),  X: (M, 8*8*8), Fi: (8, 8)
+    # Y = X (F1 (x) F2 (x) F3),  X: (M, 8*8*8), Fi: (8, 8).  The KronOp
+    # handle resolves its execution plan ONCE at construction; every call
+    # after that is plan lookup-free.
     k1, k2 = jax.random.split(key)
     x = jax.random.normal(k1, (32, 512))
-    factors = [
+    factors = tuple(
         jax.random.normal(jax.random.fold_in(k2, i), (8, 8)) for i in range(3)
-    ]
-    y = kron_matmul(x, factors)
-    print(f"kron_matmul: {x.shape} x (8x8)^3 -> {y.shape}")
+    )
+    op = KronOp((8, 8, 8), (8, 8, 8), m=32)
+    y = op(x, factors)
+    print(f"KronOp: {x.shape} x (8x8)^3 -> {y.shape}")
+    print(f"resolved handle: {op.describe()}")
 
     # the 512x512 Kronecker matrix is never built; verify vs the oracle:
-    y_ref = kron_matmul_naive(x, factors)
-    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-5)
+    y_ref = kron_matmul_naive(x, list(factors))
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
     print("matches the materialized oracle")
 
-    # --- 2. Execution plans (fusion + tile autotuning) --------------------
+    # --- 2. Size/cost queries (the handle API's query surface) ------------
     prob = KronProblem(32, (8, 8, 8), (8, 8, 8))
-    plan = make_plan(prob)
-    print(f"autotuned plan: {plan.describe()}")
+    print(f"out_shape: {op.out_shape(x.shape)}, cost: {op.cost()}")
     print(f"algorithm FLOPs: {prob.flops/1e6:.1f} MFLOP "
           f"(naive would be {2*32*512*512/1e6:.1f})")
 
     # --- 3. It differentiates (the VJP is itself Kron-shaped) -------------
-    grads = jax.grad(
-        lambda fs: jnp.sum(kron_matmul(x, fs) ** 2)
-    )(tuple(factors))
+    grads = jax.grad(lambda fs: jnp.sum(op(x, fs) ** 2))(factors)
     print(f"factor grads: {[tuple(g.shape) for g in grads]}")
 
-    # --- 4. KronLinear: compressed projections for models -----------------
+    # --- 4. Batched / vmap: one launch for B independent problems ---------
+    opb = op.with_batch(4, shared_factors=False)
+    xb = jax.random.normal(k1, (4, 8, 512))
+    fb = tuple(
+        jax.random.normal(jax.random.fold_in(k2, 10 + i), (4, 8, 8))
+        for i in range(3)
+    )
+    yb = opb(xb, fb)
+    yv = jax.vmap(lambda xi, fi: op(xi, fi))(xb, fb)  # same batch-grid path
+    np.testing.assert_allclose(yb, yv, rtol=1e-4, atol=1e-4)
+    print(f"batched op == vmap(op): {yb.shape}")
+
+    # --- 5. KronLinear: compressed projections for models -----------------
     spec = KronLinearSpec.balanced(512, 512, n_factors=2)
     params = kron_linear_init(key, spec)
     out = kron_linear_apply(params, x)
@@ -60,9 +72,9 @@ def main() -> None:
           f"(dense: {dense_params}, {dense_params/spec.n_params:.0f}x smaller), "
           f"out {out.shape}")
 
-    # --- 5. Faithful baselines are importable too --------------------------
-    y_shuffle = kron_matmul_shuffle(x, factors)
-    np.testing.assert_allclose(y, y_shuffle, rtol=1e-4, atol=1e-5)
+    # --- 6. Faithful baselines are importable too --------------------------
+    y_shuffle = kron_matmul_shuffle(x, list(factors))
+    np.testing.assert_allclose(y, y_shuffle, rtol=1e-4, atol=1e-4)
     print("shuffle-algorithm baseline agrees — see benchmarks/ for speedups")
 
 

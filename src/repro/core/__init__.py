@@ -1,4 +1,8 @@
-"""Core: the paper's contribution — FastKron Kron-Matmul in JAX."""
+"""Core: the paper's contribution — FastKron Kron-Matmul in JAX.
+
+The execution surface is the handle-based ``KronOp`` (``core.engine``); the
+functional ``kron_matmul*`` entry points remain as compatibility shims.
+"""
 from .kron import (  # noqa: F401
     KronProblem,
     kron_matrix,
@@ -8,6 +12,11 @@ from .kron import (  # noqa: F401
     kron_matmul_fastkron,
     sliced_multiply,
     pair_factors,
+)
+from .engine import (  # noqa: F401
+    KronOp,
+    KronCost,
+    kron_op_for,
 )
 from .fastkron import (  # noqa: F401
     kron_matmul,
@@ -23,8 +32,42 @@ from .autotune import (  # noqa: F401
 )
 from .layers import (  # noqa: F401
     KronLinearSpec,
+    KronLinear,
     kron_linear_init,
     kron_linear_apply,
     kron_linear_materialize,
     balanced_factorization,
 )
+
+__all__ = [
+    # engine (the primary surface)
+    "KronOp",
+    "KronCost",
+    "kron_op_for",
+    # compatibility shims
+    "kron_matmul",
+    "kron_matmul_batched",
+    "kron_matmul_unfused",
+    # plans
+    "KronPlan",
+    "Stage",
+    "TileConfig",
+    "make_plan",
+    "make_batched_plan",
+    # problem description + reference algorithms
+    "KronProblem",
+    "kron_matrix",
+    "kron_matmul_naive",
+    "kron_matmul_shuffle",
+    "kron_matmul_ftmmt",
+    "kron_matmul_fastkron",
+    "sliced_multiply",
+    "pair_factors",
+    # layers
+    "KronLinearSpec",
+    "KronLinear",
+    "kron_linear_init",
+    "kron_linear_apply",
+    "kron_linear_materialize",
+    "balanced_factorization",
+]

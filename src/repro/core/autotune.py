@@ -460,9 +460,13 @@ def make_batched_plan(
 
     shared_factors=False (per-sample factors): the single-problem plan is
     re-tiled by ``_batch_tiled`` so every stage block carries ``t_b`` samples
-    under the same VMEM budget (pre-kronization is disabled — the batched
-    executor has no per-sample prekron stage).  ``tune="measure"`` wall-clock
-    ranks ``t_b`` variants and persists the winner keyed on B.
+    under the same VMEM budget.  ``enable_prekron=True`` lets the planner
+    emit pre-kronization stages here too — the batched executor runs them as
+    a vmapped ``jnp.kron`` + one batched sliced multiply (engine
+    ``_stage_forward_batched``); callers enable it where the analytic model
+    favors it (TPU MXU, same gate as the single-problem path).
+    ``tune="measure"`` wall-clock ranks ``t_b`` variants and persists the
+    winner keyed on B.
 
     ``g_k > 1`` selects DISTRIBUTED mode (``kron_matmul_batched_distributed``
     on a mesh with a ``G_K``-way model axis): ``prob`` is the per-device
@@ -518,6 +522,9 @@ def make_batched_plan(
             batch,
             dtype_bytes=dtype_bytes,
             enable_fusion=enable_fusion,
+            enable_prekron=enable_prekron,
+            prekron_max_p=prekron_max_p,
+            prekron_max_dim=prekron_max_dim,
             vmem_budget_elems=vmem_budget_elems,
             backend=backend,
             cache_path=cache_path,
@@ -528,7 +535,9 @@ def make_batched_plan(
         prob,
         dtype_bytes=dtype_bytes,
         enable_fusion=enable_fusion,
-        enable_prekron=False,
+        enable_prekron=enable_prekron,
+        prekron_max_p=prekron_max_p,
+        prekron_max_dim=prekron_max_dim,
         vmem_budget_elems=vmem_budget_elems,
         tune="analytic",
         backend=backend,
@@ -697,8 +706,8 @@ def _measured_plan(
                 tuple(retile(s) for s in (base.bwd_stages or ())) or None,
             )
         )
-    # Deferred import: fastkron imports this module at load time.
-    from . import fastkron
+    # Deferred import: engine imports this module at load time.
+    from . import engine
 
     dtype = {2: jnp.bfloat16, 4: jnp.float32, 8: jnp.float64}.get(dtype_bytes, jnp.float32)
     keys = jax.random.split(jax.random.PRNGKey(0), prob.n + 1)
@@ -709,11 +718,10 @@ def _measured_plan(
     )
 
     def fn_of_plan(plan):
+        op = engine.KronOp(prob.ps, prob.qs, backend=backend, plan=plan)
         f = jax.jit(
             jax.grad(
-                lambda x, fs: fastkron.kron_matmul(
-                    x, fs, backend=backend, plan=plan
-                ).sum().astype(jnp.float32),
+                lambda x, fs: op(x, fs).sum().astype(jnp.float32),
                 argnums=(0, 1),
             )
         )
@@ -740,6 +748,9 @@ def _measured_batched_plan(
     *,
     dtype_bytes: int,
     enable_fusion: bool,
+    enable_prekron: bool,
+    prekron_max_p: int,
+    prekron_max_dim: int,
     vmem_budget_elems: int,
     backend: str,
     cache_path: str | None,
@@ -749,7 +760,8 @@ def _measured_batched_plan(
     path = cache_path or default_cache_path()
     key = plan_cache_key(
         prob, dtype_bytes, backend,
-        enable_fusion=enable_fusion, enable_prekron=False,
+        enable_fusion=enable_fusion, enable_prekron=enable_prekron,
+        prekron_max_p=prekron_max_p, prekron_max_dim=prekron_max_dim,
         vmem_budget_elems=vmem_budget_elems,
         batch=batch, shared_factors=False,
     )
@@ -760,7 +772,8 @@ def _measured_batched_plan(
 
     base = make_plan(
         prob, dtype_bytes=dtype_bytes, enable_fusion=enable_fusion,
-        enable_prekron=False, vmem_budget_elems=vmem_budget_elems,
+        enable_prekron=enable_prekron, prekron_max_p=prekron_max_p,
+        prekron_max_dim=prekron_max_dim, vmem_budget_elems=vmem_budget_elems,
         tune="analytic", backend=backend,
     )
     tiled = _batch_tiled(base, prob, batch, vmem_budget_elems, dtype_bytes)
@@ -769,8 +782,8 @@ def _measured_batched_plan(
         if t_b > batch or batch % t_b or t_b == tiled.t_b:
             continue
         cands.append(dataclasses.replace(tiled, t_b=t_b))
-    # Deferred import: fastkron imports this module at load time.
-    from . import fastkron
+    # Deferred import: engine imports this module at load time.
+    from . import engine
 
     dtype = {2: jnp.bfloat16, 4: jnp.float32, 8: jnp.float64}.get(dtype_bytes, jnp.float32)
     keys = jax.random.split(jax.random.PRNGKey(0), prob.n + 1)
@@ -781,11 +794,11 @@ def _measured_batched_plan(
     )
 
     def fn_of_plan(plan):
-        f = jax.jit(
-            lambda x, fs: fastkron.kron_matmul_batched(
-                x, fs, shared_factors=False, backend=backend, plan=plan
-            )
+        op = engine.KronOp(
+            prob.ps, prob.qs, batch=batch, shared_factors=False,
+            backend=backend, plan=plan,
         )
+        f = jax.jit(lambda x, fs: op(x, fs))
         return lambda: f(x, factors)
 
     try:

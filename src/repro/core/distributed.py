@@ -265,11 +265,11 @@ def _dist_body_batched(
 
 
 # ---------------------------------------------------------------------------
-# Public API
+# Mesh runners (the engine's distributed execution layer) + legacy shims
 # ---------------------------------------------------------------------------
 
 
-def kron_matmul_distributed(
+def run_distributed_rounds(
     x: jax.Array,
     factors: Sequence[jax.Array],
     mesh: Mesh,
@@ -279,7 +279,8 @@ def kron_matmul_distributed(
     backend: str = "auto",
     per_iteration: bool = False,
 ) -> jax.Array:
-    """Distributed ``x @ (F^1 (x) ... (x) F^N)`` on a (data, model) mesh.
+    """Distributed ``x @ (F^1 (x) ... (x) F^N)`` on a (data, model) mesh —
+    the single-problem round schedule the ``KronOp`` mesh path executes.
 
     ``x``: (M, K) sharded P(data_axis, model_axis); factors replicated
     (paper §5: factors are small and live on every GPU).  Returns (M, K')
@@ -311,6 +312,80 @@ def _mesh_size(mesh: Mesh, axis: str | tuple[str, ...]) -> int:
     return mesh.shape[axis]
 
 
+def run_batched_distributed_rounds(
+    x: jax.Array,
+    factors: Sequence[jax.Array],
+    mesh: Mesh,
+    *,
+    t_b: int = 1,
+    data_axis: str | tuple[str, ...] = "data",
+    model_axis: str = "model",
+    backend: str = "auto",
+    per_iteration: bool = False,
+) -> jax.Array:
+    """Per-sample-factors batched distributed rounds — the ``KronOp`` mesh
+    path for ``shared_factors=False`` (the shared mode collapses B into the
+    sharded row axis and runs ``run_distributed_rounds``).
+
+    ``x``: (B, M, K) sharded ``P(None, data_axis, model_axis)``; per-sample
+    factors ``F^i: (B, P_i, Q_i)`` replicated.  Each round's local multiplies
+    are one batch-grid kernel chain (``ops.fused_kron_batched``, ``t_b``
+    samples per block) and each round's relocation is ONE all_to_all moving
+    the ``(B·M_local, C_local)`` slab — where a per-problem loop would issue
+    B collectives per round.  The plan (and its ``t_b``) is resolved by the
+    op via ``autotune.make_batched_plan(g_k=...)``.
+    """
+    factors = tuple(factors)
+    if x.ndim != 3:
+        raise ValueError(f"x must be (B, M, K), got shape {x.shape}")
+    if any(f.ndim != 3 for f in factors):
+        raise ValueError("expects 3-D (B, P_i, Q_i) per-sample factors")
+    b = int(x.shape[0])
+    for f in factors:
+        if int(f.shape[0]) != b:
+            raise ValueError(f"factor batch {f.shape[0]} != x batch {b}")
+    body = partial(
+        _dist_body_batched,
+        g_k=mesh.shape[model_axis],
+        model_axis=model_axis,
+        backend=backend,
+        per_iteration=per_iteration,
+        t_b=t_b,
+    )
+    spec_x = P(None, data_axis, model_axis)
+    fn = _shard_map(
+        lambda x_loc, fs: body(x_loc, tuple(reversed(fs))),
+        mesh=mesh,
+        in_specs=(spec_x, P()),
+        out_specs=spec_x,
+    )
+    return fn(x, factors)
+
+
+def kron_matmul_distributed(
+    x: jax.Array,
+    factors: Sequence[jax.Array],
+    mesh: Mesh,
+    *,
+    data_axis: str | tuple[str, ...] = "data",
+    model_axis: str = "model",
+    backend: str = "auto",
+    per_iteration: bool = False,
+) -> jax.Array:
+    """DEPRECATED shim over ``KronOp(ps, qs, mesh=mesh)``: distributed
+    Kron-Matmul on a (data, model) mesh (see ``run_distributed_rounds``)."""
+    from . import engine
+
+    engine.warn_deprecated("kron_matmul_distributed", "KronOp(ps, qs, mesh=mesh)")
+    factors = tuple(factors)
+    ps, qs = engine.signature_of(factors, shared_factors=True)
+    op = engine.kron_op_for(
+        ps, qs, mesh=mesh, data_axis=data_axis, model_axis=model_axis,
+        backend=backend, per_iteration=per_iteration,
+    )
+    return op(x, factors)
+
+
 def kron_matmul_batched_distributed(
     x: jax.Array,
     factors: Sequence[jax.Array],
@@ -323,81 +398,33 @@ def kron_matmul_batched_distributed(
     per_iteration: bool = False,
     plan="auto",
 ) -> jax.Array:
-    """``B`` independent distributed Kron-Matmuls with ONE collective round
-    per stage for the whole batch.
+    """DEPRECATED shim over ``KronOp(ps, qs, batch=B, shared_factors=...,
+    mesh=mesh)``: ``B`` independent distributed Kron-Matmuls with ONE
+    collective round per stage for the whole batch.
 
-    ``x``: (B, M, K) sharded ``P(None, data_axis, model_axis)`` — the batch
-    axis is replicated over the mesh, rows and columns sharded exactly as in
-    ``kron_matmul_distributed``.  Returns (B, M, K') with the same sharding.
-
-    shared_factors=True: one 2-D factor set ``F^i: (P_i, Q_i)``.  B collapses
-    into the data-sharded M axis (both are row indices of one contiguous
-    array, and the row axis is embarrassingly parallel), so the batch reuses
-    the single-problem round schedule verbatim: same rounds, same payload
-    fraction, B-times-taller local GEMMs.  Requires ``G_M | B*M``.
-
-    shared_factors=False: per-sample factors ``F^i: (B, P_i, Q_i)``
-    (replicated — factors are small, paper §5).  Runs ``_dist_body_batched``:
-    each round's local multiplies are one batch-grid kernel chain
-    (``ops.fused_kron_batched``) and each round's relocation is ONE
-    all_to_all moving the ``(B·M_local, C_local)`` slab — where a per-problem
-    loop would issue B collectives per round.  ``plan``: ``"auto"`` builds one
-    with ``autotune.make_batched_plan(..., g_k=G_K)`` (its batch tile ``t_b``
-    is traded against the per-round relocation payload under the VMEM
-    budget); ``None`` runs untiled (``t_b=1``); or pass an explicit
-    ``KronPlan``.
-
-    ``per_iteration=True`` keeps the CTF/DISTAL-style baseline round schedule
-    (relocate after every factor) for comparisons; the batch still rides each
-    collective.
+    ``x``: (B, M, K) sharded ``P(None, data_axis, model_axis)``
+    (``sharded_input_batched``).  shared_factors=True collapses B into the
+    data-sharded M axis (requires ``G_M | B*M``); shared_factors=False runs
+    the batch-grid kernels inside ``run_batched_distributed_rounds`` under a
+    plan from ``autotune.make_batched_plan(g_k=G_K)`` (``plan=None``: untiled
+    ``t_b=1``; or pass an explicit ``KronPlan``).
     """
+    from . import engine
+
+    engine.warn_deprecated(
+        "kron_matmul_batched_distributed",
+        "KronOp(ps, qs, batch=B, shared_factors=..., mesh=mesh)",
+    )
     factors = tuple(factors)
     if x.ndim != 3:
         raise ValueError(f"x must be (B, M, K), got shape {x.shape}")
-    b, m, k = (int(d) for d in x.shape)
-    g_k = mesh.shape[model_axis]
-    if shared_factors:
-        if any(f.ndim != 2 for f in factors):
-            raise ValueError("shared_factors=True expects 2-D (P_i, Q_i) factors")
-        y = kron_matmul_distributed(
-            x.reshape(b * m, k), factors, mesh,
-            data_axis=data_axis, model_axis=model_axis, backend=backend,
-            per_iteration=per_iteration,
-        )
-        return y.reshape(b, m, -1)
-    if any(f.ndim != 3 for f in factors):
-        raise ValueError("shared_factors=False expects 3-D (B, P_i, Q_i) factors")
-    for f in factors:
-        if int(f.shape[0]) != b:
-            raise ValueError(f"factor batch {f.shape[0]} != x batch {b}")
-    if plan == "auto":
-        from . import autotune
-        from .kron import KronProblem
-
-        g_m = _mesh_size(mesh, data_axis)
-        ps = tuple(int(f.shape[1]) for f in factors)
-        qs = tuple(int(f.shape[2]) for f in factors)
-        plan = autotune.make_batched_plan(
-            KronProblem(max(1, m // g_m), ps, qs), b,
-            shared_factors=False, dtype_bytes=x.dtype.itemsize,
-            backend=backend, g_k=g_k,
-        )
-    body = partial(
-        _dist_body_batched,
-        g_k=g_k,
-        model_axis=model_axis,
-        backend=backend,
-        per_iteration=per_iteration,
-        t_b=1 if plan is None else plan.t_b,
+    ps, qs = engine.signature_of(factors, shared_factors=shared_factors)
+    op = engine.kron_op_for(
+        ps, qs, batch=int(x.shape[0]), shared_factors=shared_factors,
+        mesh=mesh, data_axis=data_axis, model_axis=model_axis,
+        backend=backend, per_iteration=per_iteration, plan=plan,
     )
-    spec_x = P(None, data_axis, model_axis)
-    fn = _shard_map(
-        lambda x_loc, fs: body(x_loc, tuple(reversed(fs))),
-        mesh=mesh,
-        in_specs=(spec_x, P()),
-        out_specs=spec_x,
-    )
-    return fn(x, factors)
+    return op(x, factors)
 
 
 def sharded_input(x, mesh, data_axis="data", model_axis="model"):
@@ -415,6 +442,8 @@ def sharded_input_batched(x, mesh, data_axis="data", model_axis="model"):
 __all__ = [
     "kron_matmul_distributed",
     "kron_matmul_batched_distributed",
+    "run_distributed_rounds",
+    "run_batched_distributed_rounds",
     "plan_rounds",
     "comm_elems_per_device",
     "sharded_input",

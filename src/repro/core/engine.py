@@ -1,0 +1,1190 @@
+"""KronOp: the unified, handle-based Kron-Matmul execution engine.
+
+The FastKron paper ships its library as a handle API (init -> size query ->
+tuned execute) because Kron-Matmul performance lives in a *plan* that should
+be resolved once and reused across calls.  ``KronOp`` is that handle for this
+repro: constructed once from the problem signature, it resolves its
+``KronPlan`` (and, on a mesh, the communication round schedule) up front and
+owns the custom-VJP closures, so repeated calls never re-enter plan memo
+lookups.  The four legacy entry points (``kron_matmul``,
+``kron_matmul_batched``, ``kron_matmul_distributed``,
+``kron_matmul_batched_distributed``) are thin deprecation shims over this
+one dispatch spine — two orthogonal axes, (local | mesh) x (single |
+batched), instead of four parallel code paths.
+
+    op = KronOp((16, 16), (16, 16))          # plan resolved here
+    y = op(x, factors)                       # planned fwd + plan-driven VJP
+    op_b = op.with_batch(8, shared_factors=False)
+    op_d = op.with_mesh(mesh)                # round schedule resolved here
+
+Execution is expressed through two JAX primitives, ``kron_matmul_p`` and
+``kron_matmul_batched_p``, whose **custom batching rules** are what make
+``jax.vmap`` a first-class consumer: ``vmap`` over ``x`` alone collapses the
+batch into the row axis (shared factors are a pure row-parallel problem),
+while ``vmap`` over ``(x, factors)`` re-binds the batched primitive so the
+PR-2 batch-grid kernels run instead of the generic per-op batching fallback
+(the ROADMAP's "vmap lowering" item; pinned by jaxpr/HLO inspection in
+``tests/test_batched.py``).  Nested ``vmap`` folds outer batch axes into the
+existing batch axis.
+
+The batched executor here also carries the per-sample **pre-kronization**
+stage (vmapped ``jnp.kron`` + one batched sliced multiply), so
+``make_batched_plan(shared_factors=False, enable_prekron=True)`` plans are
+executable end to end — forward and backward.
+
+Plan memoization is bounded: ops own their resolved plans/functions, and the
+shim path shares small ``lru_cache``s (``kron_op_for``) instead of the old
+unbounded ``maxsize=None`` memos.  Layer map: docs/architecture.md; public
+surface: docs/api.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import warnings
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.extend.core import Primitive
+from jax.interpreters import batching, mlir
+
+from ..kernels import ops
+from . import autotune
+from .autotune import KronPlan, Stage, TileConfig
+from .kron import KronProblem
+
+
+# ---------------------------------------------------------------------------
+# Stage execution (single-problem forward)
+# ---------------------------------------------------------------------------
+
+
+def _prekron_factor(stage_factors: Sequence[jax.Array]) -> jax.Array:
+    # stage_factors are in APPLICATION order (rev[i], rev[i+1], ...);
+    # the explicit Kronecker product must be formed in PROBLEM order,
+    # i.e. kron(rev[i+1], rev[i]):  x @ (A (x) B) applies B first.
+    f = stage_factors[-1]
+    for g in reversed(stage_factors[:-1]):
+        f = jnp.kron(f, g)
+    return f
+
+
+def _stage_forward(
+    y: jax.Array, stage_factors: Sequence[jax.Array], stage: Stage, backend: str
+) -> jax.Array:
+    if stage.prekron:
+        f = _prekron_factor(stage_factors)
+        return ops.sliced_multiply(y, f, backend=backend, tiles=stage.tiles.as_tuple)
+    if len(stage_factors) == 1:
+        return ops.sliced_multiply(
+            y, stage_factors[0], backend=backend, tiles=stage.tiles.as_tuple
+        )
+    pprod = math.prod(int(f.shape[0]) for f in stage_factors)
+    t_k = stage.tiles.t_s * pprod
+    return ops.fused_kron(
+        y, stage_factors, backend=backend, t_m=stage.tiles.t_m, t_k=t_k,
+        t_qs=stage.t_qs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# VJP building blocks (single-problem)
+# ---------------------------------------------------------------------------
+
+
+def _sliced_vjp_input(g: jax.Array, f: jax.Array, backend: str = "xla") -> jax.Array:
+    """du for y = sliced(u, f):  du[m, s*P+p] = sum_q g[m, q*S+s] f[p, q].
+
+    This is the TRANSPOSED sliced multiply — itself Kron-shaped, with its
+    own Pallas kernel (kernels/kron_sliced_t.py) on TPU."""
+    return ops.sliced_multiply_t(g, f, backend=backend)
+
+
+def _sliced_vjp_factor(u: jax.Array, g: jax.Array, p: int, q: int) -> jax.Array:
+    """df[p,q] = sum_{m,s} u[m, s*P+p] g[m, q*S+s]."""
+    m, k = u.shape
+    s = k // p
+    acc = jnp.promote_types(g.dtype, jnp.float32)
+    u3 = u.reshape(m, s, p)
+    g3 = g.reshape(m, q, s)
+    return jnp.einsum("msp,mqs->pq", u3.astype(acc), g3.astype(acc))
+
+
+def _prekron_vjp(dK: jax.Array, stage_factors: Sequence[jax.Array]) -> tuple:
+    """Split the cotangent of kron(rev[i+1], ..., rev[i]) back into per-factor
+    cotangents, in ``stage_factors`` (application) order."""
+    if len(stage_factors) == 1:
+        return (dK,)
+    a = stage_factors[0]
+    b = _prekron_factor(stage_factors[1:])
+    pa, qa = int(a.shape[0]), int(a.shape[1])
+    pb, qb = int(b.shape[0]), int(b.shape[1])
+    acc = jnp.promote_types(dK.dtype, jnp.float32)
+    dk4 = dK.reshape(pb, pa, qb, qa).astype(acc)
+    da = jnp.einsum("bpcq,bc->pq", dk4, b.astype(acc))
+    db = jnp.einsum("bpcq,pq->bc", dk4, a.astype(acc))
+    return (da,) + _prekron_vjp(db, stage_factors[1:])
+
+
+# ---------------------------------------------------------------------------
+# Planned backward (single-problem)
+# ---------------------------------------------------------------------------
+
+
+def _default_bwd_stages(plan: KronPlan) -> tuple[Stage, ...]:
+    return plan.bwd_stages or tuple(reversed(plan.stages))
+
+
+def _stage_bwd_per_factor(u, g, stage_factors, backend):
+    """Stage backward as per-factor planned ops — the fallback when the
+    one-kernel fused backward cannot hold the stage's growth in VMEM (e.g.
+    Q-tiled stages: the forward tiles Q, but the backward needs every
+    factor-gradient pair).  Still stage-local and dispatch-routed."""
+    inputs = [u]
+    for f in stage_factors[:-1]:
+        inputs.append(ops.sliced_multiply(inputs[-1], f, backend=backend))
+    dfs = [None] * len(stage_factors)
+    for idx in reversed(range(len(stage_factors))):
+        f = stage_factors[idx]
+        p, q = int(f.shape[0]), int(f.shape[1])
+        dfs[idx] = _sliced_vjp_factor(inputs[idx], g, p, q)
+        g = ops.sliced_multiply_t(g, f, backend=backend)
+    return g, tuple(dfs)
+
+
+def _planned_bwd(plan: KronPlan, backend: str, x, factors, g, f_pert: bool):
+    """Execute the backward plan: returns (dx, dfs_by_rev_id or None)."""
+    rev = tuple(reversed(factors))
+    stage_factors = [tuple(rev[i] for i in st.factor_ids) for st in plan.stages]
+    # Stage inputs rematerialized with the FORWARD plan (fused stages, not an
+    # unfused per-factor loop); under jit XLA CSEs these against the primal
+    # forward chain, so the remat is effectively free at stage granularity.
+    stage_inputs = []
+    y = x
+    for idx, (st, sf) in enumerate(zip(plan.stages, stage_factors)):
+        stage_inputs.append(y)
+        if idx + 1 < len(plan.stages):
+            y = _stage_forward(y, sf, st, backend)
+    bwd_sts = _default_bwd_stages(plan)
+    dfs_by_id: dict[int, jax.Array] = {}
+    for rev_idx in range(len(plan.stages) - 1, -1, -1):
+        st = plan.stages[rev_idx]
+        bst = bwd_sts[len(plan.stages) - 1 - rev_idx]
+        sf = stage_factors[rev_idx]
+        u = stage_inputs[rev_idx]
+        pprod = math.prod(int(f.shape[0]) for f in sf)
+        t_k = st.tiles.t_s * pprod
+        if st.prekron:
+            fk = _prekron_factor(sf)
+            if f_pert:
+                try:
+                    g, (dk,) = ops.fused_kron_bwd(
+                        u, g, (fk,), backend=backend, t_m=bst.tiles.t_m
+                    )
+                except ValueError:
+                    g, (dk,) = _stage_bwd_per_factor(u, g, (fk,), backend)
+                for fid, d in zip(st.factor_ids, _prekron_vjp(dk, sf)):
+                    dfs_by_id[fid] = d
+            else:
+                g = ops.sliced_multiply_t(
+                    g, fk, backend=backend, tiles=bst.tiles.as_tuple
+                )
+        elif f_pert:
+            try:
+                g, dfs = ops.fused_kron_bwd(
+                    u, g, sf, backend=backend, t_m=bst.tiles.t_m, t_k=t_k
+                )
+            except ValueError:
+                # Fused backward tile exceeds VMEM (Q-tiled forward stages
+                # have no Q relief on the gradient-pair side) — run the
+                # stage per factor, still through planned dispatch.
+                g, dfs = _stage_bwd_per_factor(u, g, sf, backend)
+            for fid, d in zip(st.factor_ids, dfs):
+                dfs_by_id[fid] = d
+        elif len(sf) == 1:
+            g = ops.sliced_multiply_t(
+                g, sf[0], backend=backend, tiles=bst.tiles.as_tuple
+            )
+        else:
+            g = ops.fused_kron_t(
+                g, sf, backend=backend, t_m=bst.tiles.t_m, t_k=t_k, t_qs=st.t_qs
+            )
+    return g, (dfs_by_id if f_pert else None)
+
+
+# ---------------------------------------------------------------------------
+# Batched stage execution + backward (per-sample factors)
+# ---------------------------------------------------------------------------
+
+
+def _prekron_factor_b(stage_factors: Sequence[jax.Array]) -> jax.Array:
+    """Per-sample explicit Kronecker product of a stage's (B, P, Q) factors —
+    the batched pre-kronization stage (ROADMAP item): one vmapped ``jnp.kron``
+    chain, consumed by a single batched sliced multiply."""
+    f = stage_factors[-1]
+    for g in reversed(stage_factors[:-1]):
+        f = jax.vmap(jnp.kron)(f, g)
+    return f
+
+
+def _prekron_vjp_b(dK: jax.Array, stage_factors: Sequence[jax.Array]) -> tuple:
+    """Per-sample cotangent split of the batched explicit Kronecker product."""
+    return jax.vmap(lambda dk, fs: _prekron_vjp(dk, fs))(dK, tuple(stage_factors))
+
+
+def _stage_forward_batched(
+    y: jax.Array, stage_factors: Sequence[jax.Array], stage: Stage, backend: str,
+    t_b: int,
+) -> jax.Array:
+    if stage.prekron:
+        fk = _prekron_factor_b(stage_factors)
+        t_k = stage.tiles.t_s * int(fk.shape[1])
+        return ops.fused_kron_batched(
+            y, (fk,), backend=backend, t_b=t_b, t_m=stage.tiles.t_m, t_k=t_k
+        )
+    # Single-factor stages run through the same batched fused dispatcher (a
+    # chain of length 1) — one uniform batch-grid entry point per stage.
+    pprod = math.prod(int(f.shape[1]) for f in stage_factors)
+    t_k = stage.tiles.t_s * pprod
+    return ops.fused_kron_batched(
+        y, stage_factors, backend=backend, t_b=t_b, t_m=stage.tiles.t_m,
+        t_k=t_k, t_qs=stage.t_qs,
+    )
+
+
+def _sliced_vjp_factor_b(u: jax.Array, g: jax.Array, p: int, q: int) -> jax.Array:
+    """Per-sample factor grad: df[b,p,q] = sum_{m,s} u[b,m,s*P+p] g[b,m,q*S+s]."""
+    b, m, k = u.shape
+    s = k // p
+    acc = jnp.promote_types(g.dtype, jnp.float32)
+    u4 = u.reshape(b, m, s, p)
+    g4 = g.reshape(b, m, q, s)
+    return jnp.einsum("bmsp,bmqs->bpq", u4.astype(acc), g4.astype(acc))
+
+
+def _conservative_batched_tiles(m: int, k: int, p: int, q: int) -> tuple[int, int]:
+    """(t_m, t_k) for a single-factor batched call at t_b=1 that provably fits
+    the kernel's VMEM budget — the fallback path must never itself raise."""
+    from ..kernels.kron_fused import VMEM_BUDGET_ELEMS
+
+    t_m = min(8, m)
+    while m % t_m:
+        t_m -= 1
+    growth = max(1.0, q / p)
+    s = k // p
+    t_s = max(
+        d for d in range(1, s + 1)
+        if s % d == 0 and t_m * d * p * growth <= VMEM_BUDGET_ELEMS
+    )
+    return t_m, t_s * p
+
+
+def _sliced_batched(y, f, backend):
+    """One batched sliced multiply through the fused dispatcher, tiled so the
+    Pallas kernel always fits VMEM."""
+    t_m, t_k = _conservative_batched_tiles(
+        int(y.shape[1]), int(y.shape[2]), int(f.shape[1]), int(f.shape[2])
+    )
+    return ops.fused_kron_batched(y, (f,), backend=backend, t_b=1, t_m=t_m, t_k=t_k)
+
+
+def _sliced_t_batched(g, f, backend):
+    p, q = int(f.shape[1]), int(f.shape[2])
+    # transposed call: the input has Q-sized slices, dX has P-sized ones.
+    t_m, t_k = _conservative_batched_tiles(
+        int(g.shape[1]), int(g.shape[2]) // q * p, p, q
+    )
+    return ops.fused_kron_t_batched(g, (f,), backend=backend, t_b=1, t_m=t_m, t_k=t_k)
+
+
+def _stage_bwd_per_factor_batched(u, g, stage_factors, backend):
+    """Batched analogue of _stage_bwd_per_factor: the fallback when the
+    one-kernel batched stage backward cannot hold the stage in VMEM.  Runs at
+    t_b=1 with conservatively-fitted tiles so it cannot overflow in turn."""
+    inputs = [u]
+    for f in stage_factors[:-1]:
+        inputs.append(_sliced_batched(inputs[-1], f, backend))
+    dfs = [None] * len(stage_factors)
+    for idx in reversed(range(len(stage_factors))):
+        f = stage_factors[idx]
+        p, q = int(f.shape[1]), int(f.shape[2])
+        dfs[idx] = _sliced_vjp_factor_b(inputs[idx], g, p, q)
+        g = _sliced_t_batched(g, f, backend)
+    return g, tuple(dfs)
+
+
+def _planned_bwd_batched(plan: KronPlan, backend: str, x, factors, g, f_pert: bool):
+    """Batched backward plan: (dx (B,M,K), per-sample dfs_by_rev_id or None).
+
+    Mirrors _planned_bwd including the pre-kronization branch: a prekron
+    stage's cotangent is computed against the per-sample explicit product
+    and split back into per-factor cotangents with a vmapped ``_prekron_vjp``.
+    """
+    rev = tuple(reversed(factors))
+    stage_factors = [tuple(rev[i] for i in st.factor_ids) for st in plan.stages]
+    stage_inputs = []
+    y = x
+    for idx, (st, sf) in enumerate(zip(plan.stages, stage_factors)):
+        stage_inputs.append(y)
+        if idx + 1 < len(plan.stages):
+            y = _stage_forward_batched(y, sf, st, backend, plan.t_b)
+    bwd_sts = _default_bwd_stages(plan)
+    dfs_by_id: dict[int, jax.Array] = {}
+    for rev_idx in range(len(plan.stages) - 1, -1, -1):
+        st = plan.stages[rev_idx]
+        bst = bwd_sts[len(plan.stages) - 1 - rev_idx]
+        sf = stage_factors[rev_idx]
+        u = stage_inputs[rev_idx]
+        pprod = math.prod(int(f.shape[1]) for f in sf)
+        t_k = st.tiles.t_s * pprod
+        if st.prekron:
+            fk = _prekron_factor_b(sf)
+            if f_pert:
+                try:
+                    g, (dk,) = ops.fused_kron_bwd_batched(
+                        u, g, (fk,), backend=backend, t_b=plan.t_b,
+                        t_m=bst.tiles.t_m, t_k=t_k,
+                    )
+                except ValueError:
+                    g, (dk,) = _stage_bwd_per_factor_batched(u, g, (fk,), backend)
+                for fid, d in zip(st.factor_ids, _prekron_vjp_b(dk, sf)):
+                    dfs_by_id[fid] = d
+            else:
+                try:
+                    g = ops.fused_kron_t_batched(
+                        g, (fk,), backend=backend, t_b=plan.t_b,
+                        t_m=bst.tiles.t_m, t_k=t_k,
+                    )
+                except ValueError:
+                    g = _sliced_t_batched(g, fk, backend)
+        elif f_pert:
+            try:
+                g, dfs = ops.fused_kron_bwd_batched(
+                    u, g, sf, backend=backend, t_b=plan.t_b,
+                    t_m=bst.tiles.t_m, t_k=t_k,
+                )
+            except ValueError:
+                g, dfs = _stage_bwd_per_factor_batched(u, g, sf, backend)
+            for fid, d in zip(st.factor_ids, dfs):
+                dfs_by_id[fid] = d
+        else:
+            try:
+                g = ops.fused_kron_t_batched(
+                    g, sf, backend=backend, t_b=plan.t_b, t_m=bst.tiles.t_m,
+                    t_k=t_k, t_qs=st.t_qs,
+                )
+            except ValueError:
+                # The planner validated t_b against FORWARD block sizes; the
+                # mirrored bwd t_m can overflow on the transposed shapes —
+                # walk the stage per factor with fitted tiles instead.
+                for f in reversed(sf):
+                    g = _sliced_t_batched(g, f, backend)
+    return g, (dfs_by_id if f_pert else None)
+
+
+def _unfused_batched_plan(n: int, m: int) -> KronPlan:
+    """plan=None semantics for the per-sample path: one batched sliced
+    multiply per factor (the paper-faithful loop, batch-dispatched)."""
+    t_m = min(m, 8)
+    while m % t_m:
+        t_m -= 1
+    return KronPlan(
+        tuple(Stage((i,), False, TileConfig(t_m, 1, 1)) for i in range(n))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Plan resolution (bounded memoization replacing the old unbounded memos)
+# ---------------------------------------------------------------------------
+
+_PLAN_MEMO_SIZE = 128
+
+
+def _auto_prekron() -> bool:
+    # pre-kronization trades FLOPs for MXU contraction depth — a win on the
+    # 128x128 systolic array, measured a LOSS on CPU AVX (EXPERIMENTS.md
+    # §Perf); auto-plans enable it only on TPU.  Applies to both the single
+    # path and (now that the batched executor has a per-sample explicit-kron
+    # stage) the per-sample batched path.
+    return jax.default_backend() == "tpu"
+
+
+@functools.lru_cache(maxsize=_PLAN_MEMO_SIZE)
+def _resolve_plan(
+    m: int,
+    ps: tuple[int, ...],
+    qs: tuple[int, ...],
+    dtype_bytes: int,
+    backend: str,
+    enable_prekron: bool,
+    tune: str,
+    cache_path: str | None,
+) -> KronPlan:
+    return autotune.make_plan(
+        KronProblem(m, ps, qs),
+        dtype_bytes=dtype_bytes,
+        enable_prekron=enable_prekron,
+        tune=tune,
+        backend=backend,
+        cache_path=cache_path,
+    )
+
+
+@functools.lru_cache(maxsize=_PLAN_MEMO_SIZE)
+def _resolve_batched_plan(
+    batch: int,
+    m: int,
+    ps: tuple[int, ...],
+    qs: tuple[int, ...],
+    dtype_bytes: int,
+    backend: str,
+    enable_prekron: bool,
+    tune: str,
+    cache_path: str | None,
+    g_k: int,
+) -> KronPlan:
+    return autotune.make_batched_plan(
+        KronProblem(m, ps, qs),
+        batch,
+        shared_factors=False,
+        dtype_bytes=dtype_bytes,
+        enable_prekron=enable_prekron,
+        tune=tune,
+        backend=backend,
+        cache_path=cache_path,
+        g_k=g_k,
+    )
+
+
+class _PlanCtx(NamedTuple):
+    """Static re-planning context carried on the primitives so batching rules
+    can resolve the right plan for the transformed problem."""
+
+    auto: bool  # plan came from the planner (re-plan on reshape) vs explicit
+    tune: str
+    cache_path: str | None
+    prekron: bool
+
+
+# ---------------------------------------------------------------------------
+# The primitives: kron_matmul_p / kron_matmul_batched_p
+# ---------------------------------------------------------------------------
+
+kron_matmul_p = Primitive("kron_matmul")
+kron_matmul_batched_p = Primitive("kron_matmul_batched")
+
+
+def _kron_impl(x, *factors, plan, backend, pctx):
+    rev = tuple(reversed(factors))
+    y = x
+    if plan is None:
+        # Paper-faithful unfused loop (the C1 baseline): application order is
+        # last factor first (Algorithm 1).
+        for f in rev:
+            y = ops.sliced_multiply(y, f, backend=backend)
+        return y
+    for stage in plan.stages:
+        y = _stage_forward(y, [rev[i] for i in stage.factor_ids], stage, backend)
+    return y
+
+
+def _kron_abstract(x, *factors, plan, backend, pctx):
+    k_out = math.prod(int(f.shape[1]) for f in factors)
+    return jax.core.ShapedArray((x.shape[0], k_out), x.dtype)
+
+
+def _kron_batched_impl(x, *factors, plan, backend, pctx):
+    rev = tuple(reversed(factors))
+    y = x
+    for stage in plan.stages:
+        y = _stage_forward_batched(
+            y, tuple(rev[i] for i in stage.factor_ids), stage, backend, plan.t_b
+        )
+    return y
+
+
+def _kron_batched_abstract(x, *factors, plan, backend, pctx):
+    k_out = math.prod(int(f.shape[2]) for f in factors)
+    return jax.core.ShapedArray((x.shape[0], x.shape[1], k_out), x.dtype)
+
+
+kron_matmul_p.def_impl(_kron_impl)
+kron_matmul_p.def_abstract_eval(_kron_abstract)
+mlir.register_lowering(
+    kron_matmul_p, mlir.lower_fun(_kron_impl, multiple_results=False)
+)
+kron_matmul_batched_p.def_impl(_kron_batched_impl)
+kron_matmul_batched_p.def_abstract_eval(_kron_batched_abstract)
+mlir.register_lowering(
+    kron_matmul_batched_p, mlir.lower_fun(_kron_batched_impl, multiple_results=False)
+)
+
+
+def _front(a, d, size):
+    """Move the mapped axis to the front, or broadcast an unmapped operand."""
+    if d is batching.not_mapped:
+        return jnp.broadcast_to(a[None], (size, *a.shape))
+    return jnp.moveaxis(a, d, 0)
+
+
+def _axis_size(args, dims) -> int:
+    for a, d in zip(args, dims):
+        if d is not batching.not_mapped:
+            return int(a.shape[d])
+    raise ValueError("no mapped operand")  # unreachable under vmap
+
+
+def _kron_batch_rule(args, dims, *, plan, backend, pctx):
+    """vmap(kron_matmul): the ROADMAP's custom batching rule.
+
+    * only ``x`` mapped (shared factors): the batch is a pure row-parallel
+      axis, so it COLLAPSES into M and the single-problem planned path runs
+      on the (B*M, K) rows — re-planned for the collapsed row count when the
+      plan was auto-resolved.
+    * any factor mapped (per-sample factors): route to the batch-grid
+      kernels via ``kron_matmul_batched_p`` under a batched plan, instead of
+      the generic per-op batching fallback.
+    """
+    b = _axis_size(args, dims)
+    x, factors = args[0], args[1:]
+    xd, fds = dims[0], tuple(dims[1:])
+    ps = tuple(int(f.shape[-2]) for f in factors)
+    qs = tuple(int(f.shape[-1]) for f in factors)
+    if all(d is batching.not_mapped for d in fds):
+        xb = _front(x, xd, b)
+        m = int(xb.shape[1])
+        p2 = plan
+        if pctx.auto and plan is not None:
+            p2 = _resolve_plan(
+                b * m, ps, qs, x.dtype.itemsize, backend, pctx.prekron,
+                pctx.tune, pctx.cache_path,
+            )
+        y = kron_matmul_p.bind(
+            xb.reshape(b * m, -1), *factors, plan=p2, backend=backend, pctx=pctx
+        )
+        return y.reshape(b, m, -1), 0
+    xb = _front(x, xd, b)
+    fbs = tuple(_front(f, d, b) for f, d in zip(factors, fds))
+    m = int(xb.shape[1])
+    if plan is None:
+        p2 = _unfused_batched_plan(len(factors), m)
+    elif pctx.auto:
+        p2 = _resolve_batched_plan(
+            b, m, ps, qs, x.dtype.itemsize, backend, _auto_prekron(),
+            pctx.tune, pctx.cache_path, 1,
+        )
+    else:
+        p2 = plan
+    y = kron_matmul_batched_p.bind(xb, *fbs, plan=p2, backend=backend, pctx=pctx)
+    return y, 0
+
+
+def _kron_batched_batch_rule(args, dims, *, plan, backend, pctx):
+    """Nested vmap: fold the new batch axis into the existing one (C problems
+    of B samples == one batch of C*B samples) and re-bind."""
+    c = _axis_size(args, dims)
+    x, factors = args[0], args[1:]
+    xb = _front(x, dims[0], c)  # (C, B, M, K)
+    fbs = tuple(_front(f, d, c) for f, d in zip(factors, dims[1:]))
+    b = int(xb.shape[1])
+    m = int(xb.shape[2])
+    ps = tuple(int(f.shape[-2]) for f in fbs)
+    qs = tuple(int(f.shape[-1]) for f in fbs)
+    if pctx.auto:
+        p2 = _resolve_batched_plan(
+            c * b, m, ps, qs, x.dtype.itemsize, backend, _auto_prekron(),
+            pctx.tune, pctx.cache_path, 1,
+        )
+    else:
+        p2 = plan
+    y = kron_matmul_batched_p.bind(
+        xb.reshape(c * b, m, -1),
+        *(f.reshape(c * b, *f.shape[2:]) for f in fbs),
+        plan=p2, backend=backend, pctx=pctx,
+    )
+    return y.reshape(c, b, m, -1), 0
+
+
+batching.primitive_batchers[kron_matmul_p] = _kron_batch_rule
+batching.primitive_batchers[kron_matmul_batched_p] = _kron_batched_batch_rule
+
+
+# ---------------------------------------------------------------------------
+# Custom-VJP closures (op-owned; shared through small bounded caches)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=256)
+def _single_fn(plan: KronPlan | None, backend: str, pctx: _PlanCtx):
+    """Custom-vjp function of (x (M, K), factors_tuple)."""
+
+    def fwd_only(x, factors):
+        return kron_matmul_p.bind(x, *factors, plan=plan, backend=backend, pctx=pctx)
+
+    @jax.custom_vjp
+    def kron_fn(x, factors):
+        return fwd_only(x, factors)
+
+    def kron_fwd(x_p, factors_p):
+        x = x_p.value
+        factors = tuple(f.value for f in factors_p)
+        # Residuals: just (x, factors) plus static perturbation flags.  The
+        # per-factor intermediates are recomputed in bwd (rematerialization):
+        # storing them would cost ~N*M*K extra memory, while recompute adds
+        # <= 1x forward FLOPs and is CSE'd against the primal under jit.
+        f_pert = any(bool(f.perturbed) for f in factors_p)
+        return fwd_only(x, factors), (x, factors, f_pert)
+
+    def kron_bwd(res, g):
+        x, factors, f_pert = res
+        if isinstance(g, jax.custom_derivatives.SymbolicZero):
+            return jnp.zeros_like(x), tuple(jnp.zeros_like(f) for f in factors)
+        rev = tuple(reversed(factors))
+        if plan is None:
+            # Paper-faithful unfused loop (the C1 baseline's backward): one
+            # transposed sliced multiply + factor contraction per factor.
+            inputs = []
+            y = x
+            for i, f in enumerate(rev):
+                inputs.append(y)
+                if i + 1 < len(rev):
+                    y = ops.sliced_multiply(y, f, backend="xla")
+            dfs_rev = []
+            for i in reversed(range(len(rev))):  # last applied stage first
+                f = rev[i]
+                p, q = int(f.shape[0]), int(f.shape[1])
+                u = inputs[i]
+                dfs_rev.append(_sliced_vjp_factor(u, g, p, q).astype(f.dtype))
+                g = _sliced_vjp_input(g, f, backend=backend)
+            dfactors = tuple(dfs_rev)  # appended rev[n-1]..rev[0] == F^1..F^N
+            return g, dfactors
+        dx, dfs_by_id = _planned_bwd(plan, backend, x, factors, g, f_pert)
+        nf = len(factors)
+        if dfs_by_id is None:
+            dfactors = tuple(jnp.zeros_like(f) for f in factors)
+        else:
+            dfactors = tuple(
+                dfs_by_id[nf - 1 - j].astype(factors[j].dtype) for j in range(nf)
+            )
+        return dx.astype(x.dtype), dfactors
+
+    kron_fn.defvjp(kron_fwd, kron_bwd, symbolic_zeros=True)
+    return kron_fn
+
+
+@functools.lru_cache(maxsize=256)
+def _batched_fn(plan: KronPlan, backend: str, pctx: _PlanCtx):
+    """Custom-vjp function of (x (B, M, K), factors each (B, P_i, Q_i))."""
+
+    def fwd_only(x, factors):
+        return kron_matmul_batched_p.bind(
+            x, *factors, plan=plan, backend=backend, pctx=pctx
+        )
+
+    @jax.custom_vjp
+    def kron_fn(x, factors):
+        return fwd_only(x, factors)
+
+    def kron_fwd(x_p, factors_p):
+        x = x_p.value
+        factors = tuple(f.value for f in factors_p)
+        f_pert = any(bool(f.perturbed) for f in factors_p)
+        return fwd_only(x, factors), (x, factors, f_pert)
+
+    def kron_bwd(res, g):
+        x, factors, f_pert = res
+        if isinstance(g, jax.custom_derivatives.SymbolicZero):
+            return jnp.zeros_like(x), tuple(jnp.zeros_like(f) for f in factors)
+        dx, dfs_by_id = _planned_bwd_batched(plan, backend, x, factors, g, f_pert)
+        nf = len(factors)
+        if dfs_by_id is None:
+            dfactors = tuple(jnp.zeros_like(f) for f in factors)
+        else:
+            dfactors = tuple(
+                dfs_by_id[nf - 1 - j].astype(factors[j].dtype) for j in range(nf)
+            )
+        return dx.astype(x.dtype), dfactors
+
+    kron_fn.defvjp(kron_fwd, kron_bwd, symbolic_zeros=True)
+    return kron_fn
+
+
+# ---------------------------------------------------------------------------
+# KronOp
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KronCost:
+    """Analytic per-call cost of a KronOp (``KronOp.cost()``)."""
+
+    flops: int
+    comm_elems_per_device: int  # all_to_all payload; 0 for local ops
+    rounds: int  # collective rounds; 0 for local ops
+
+
+_OP_STATE_SIZE = 8  # per-op (rows, dtype) -> plan/fn entries kept
+
+
+def signature_of(
+    factors: Sequence[jax.Array], shared_factors: bool
+) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """(ps, qs) of a factor list, validating the ndim for the sharing mode."""
+    factors = tuple(factors)
+    if not factors:
+        raise ValueError("need at least one factor")
+    if shared_factors:
+        if any(f.ndim != 2 for f in factors):
+            raise ValueError("shared_factors=True expects 2-D (P_i, Q_i) factors")
+        return (
+            tuple(int(f.shape[0]) for f in factors),
+            tuple(int(f.shape[1]) for f in factors),
+        )
+    if any(f.ndim != 3 for f in factors):
+        raise ValueError("shared_factors=False expects 3-D (B, P_i, Q_i) factors")
+    return (
+        tuple(int(f.shape[1]) for f in factors),
+        tuple(int(f.shape[2]) for f in factors),
+    )
+
+
+class KronOp:
+    """A Kron-Matmul problem resolved into an executable operator.
+
+    ``KronOp(ps, qs)`` describes ``x @ (F^1 (x) ... (x) F^N)`` with factor
+    shapes ``F^i: (P_i, Q_i)``; calling the op executes it with the plan
+    (and, on a mesh, the round schedule) resolved ONCE and owned by the op —
+    repeated calls never re-enter plan memo lookups, and two ops with the
+    same signature share one plan object through a bounded module cache.
+
+    Parameters
+    ----------
+    ps, qs : factor row/column dims, problem order.
+    m : optional row count the plan is resolved for at construction.  When
+        omitted, plans resolve lazily on first call per distinct row count
+        (kept in a small op-owned table) and ``.plan`` defaults to the
+        paper's M=16 CG-block row count.
+    batch : B for the batched execution modes; None = single-problem.
+    shared_factors : with ``batch``: one 2-D factor set for every sample
+        (B collapses into the row axis) vs per-sample 3-D ``(B, P_i, Q_i)``
+        factors (the batch-grid kernels).
+    mesh : a ``(data, model)`` jax Mesh — execution becomes the paper §5
+        distributed rounds; the round schedule is validated at construction
+        (raises ``ValueError`` when no legal relocation schedule exists).
+    backend / plan / tune / cache_path : as in the legacy entry points;
+        ``plan`` may be ``"auto"``, ``None`` (paper-faithful unfused loop),
+        or an explicit ``KronPlan``.
+
+    The dispatch spine is two orthogonal axes — (local | mesh) x (single |
+    batched) — and every legacy ``kron_matmul*`` entry point is a shim over
+    it.  ``vmap`` over a KronOp-backed call routes through the custom
+    batching rules on the op's primitives (see module docstring).
+    """
+
+    def __init__(
+        self,
+        ps: Sequence[int],
+        qs: Sequence[int],
+        *,
+        m: int | None = None,
+        batch: int | None = None,
+        shared_factors: bool = True,
+        mesh=None,
+        data_axis: str | tuple[str, ...] = "data",
+        model_axis: str = "model",
+        per_iteration: bool = False,
+        backend: str = "auto",
+        plan: KronPlan | str | None = "auto",
+        tune: str = "analytic",
+        cache_path: str | None = None,
+        dtype_bytes: int = 4,
+    ):
+        self.ps = tuple(int(p) for p in ps)
+        self.qs = tuple(int(q) for q in qs)
+        if len(self.ps) != len(self.qs) or not self.ps:
+            raise ValueError(f"ps/qs must be equal-length and non-empty: {ps}, {qs}")
+        if any(d <= 0 for d in self.ps + self.qs):
+            raise ValueError(f"factor dims must be positive: {ps}, {qs}")
+        if batch is not None and batch <= 0:
+            raise ValueError(f"batch must be positive, got {batch}")
+        if isinstance(plan, str) and plan != "auto":
+            raise ValueError(f"plan must be 'auto', None, or a KronPlan: {plan!r}")
+        self.n = len(self.ps)
+        self.k = math.prod(self.ps)
+        self.k_out = math.prod(self.qs)
+        self.batch = batch
+        self.shared_factors = bool(shared_factors)
+        self.backend = backend
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.model_axis = model_axis
+        self.per_iteration = bool(per_iteration)
+        self._m = m
+        self._dtype_bytes = dtype_bytes
+        self._plan_arg = plan
+        self._ctx = _PlanCtx(plan == "auto", tune, cache_path, _auto_prekron())
+        if mesh is not None:
+            from .distributed import _mesh_size, plan_rounds
+
+            self.g_m = _mesh_size(mesh, data_axis)
+            self.g_k = int(mesh.shape[model_axis])
+            if self.k % self.g_k:
+                raise ValueError(
+                    f"K={self.k} not divisible by model axis G_K={self.g_k}"
+                )
+            # Round schedule resolved (and validated) at construction.
+            self.rounds = tuple(
+                plan_rounds(
+                    self.k // self.g_k,
+                    tuple(reversed(self.ps)),
+                    tuple(reversed(self.qs)),
+                    self.g_k,
+                    minimal=self.per_iteration,
+                )
+            )
+        else:
+            self.g_m = self.g_k = 1
+            self.rounds = None
+        # Op-owned resolved state: (rows-or-(b,m), dtype_bytes) -> plan / fn.
+        self._plans: dict = {}
+        self._fns: dict = {}
+        if m is not None and mesh is None:
+            if batch is not None and not self.shared_factors:
+                self._ensure_batched(batch, m, dtype_bytes)
+            else:
+                rows = m if batch is None else batch * m
+                self._ensure_single(rows, dtype_bytes)
+
+    # -- plan / fn resolution (op-owned, bounded) ---------------------------
+
+    def _remember(self, cache: dict, key, value):
+        cache[key] = value
+        while len(cache) > _OP_STATE_SIZE:
+            cache.pop(next(iter(cache)))
+        return value
+
+    def _single_plan(self, rows: int, dtype_bytes: int) -> KronPlan | None:
+        if self._plan_arg == "auto":
+            return _resolve_plan(
+                rows, self.ps, self.qs, dtype_bytes, self.backend,
+                self._ctx.prekron, self._ctx.tune, self._ctx.cache_path,
+            )
+        return self._plan_arg
+
+    def _batched_plan(self, b: int, m: int, dtype_bytes: int) -> KronPlan:
+        if self._plan_arg == "auto":
+            return _resolve_batched_plan(
+                b, m, self.ps, self.qs, dtype_bytes, self.backend,
+                self._ctx.prekron, self._ctx.tune, self._ctx.cache_path,
+                self.g_k,
+            )
+        if self._plan_arg is None:
+            return _unfused_batched_plan(self.n, m)
+        return self._plan_arg
+
+    def _ensure_single(self, rows: int, dtype_bytes: int):
+        key = ("single", rows, dtype_bytes)
+        fn = self._fns.get(key)
+        if fn is None:
+            plan = self._single_plan(rows, dtype_bytes)
+            self._remember(self._plans, key, plan)
+            fn = self._remember(
+                self._fns, key, _single_fn(plan, self.backend, self._ctx)
+            )
+        return fn
+
+    def _ensure_batched(self, b: int, m: int, dtype_bytes: int):
+        key = ("batched", b, m, dtype_bytes)
+        fn = self._fns.get(key)
+        if fn is None:
+            plan = self._batched_plan(b, m, dtype_bytes)
+            self._remember(self._plans, key, plan)
+            fn = self._remember(
+                self._fns, key, _batched_fn(plan, self.backend, self._ctx)
+            )
+        return fn
+
+    def _default_rows(self) -> int:
+        # The paper's M=16 CG-block row count when no row hint exists.
+        return self._m if self._m is not None else 16
+
+    @property
+    def plan(self) -> KronPlan | None:
+        """The op's resolved KronPlan (last resolved; resolves for the
+        construction-time ``m`` or the M=16 default when none seen yet).
+
+        Mesh ops on the single/shared path return None: that path executes
+        the ROUND schedule (``self.rounds``), not a stage plan — resolving
+        one here would report (and under tune="measure", measure) a plan
+        that never runs.  Per-sample mesh ops do use a batched plan (its
+        ``t_b`` tiles the round kernels), so they resolve normally."""
+        if self.mesh is not None and (self.batch is None or self.shared_factors):
+            return None
+        if self._plans:
+            return next(reversed(self._plans.values()))
+        m = self._default_rows()
+        if self.batch is not None and not self.shared_factors:
+            return self._batched_plan(self.batch, m, self._dtype_bytes)
+        rows = m if self.batch is None else self.batch * m
+        return self._single_plan(rows, self._dtype_bytes)
+
+    # -- derivations --------------------------------------------------------
+
+    def _derive(self, **changes) -> "KronOp":
+        kw = dict(
+            m=self._m, batch=self.batch, shared_factors=self.shared_factors,
+            mesh=self.mesh, data_axis=self.data_axis,
+            model_axis=self.model_axis, per_iteration=self.per_iteration,
+            backend=self.backend, plan=self._plan_arg, tune=self._ctx.tune,
+            cache_path=self._ctx.cache_path, dtype_bytes=self._dtype_bytes,
+        )
+        kw.update(changes)
+        return KronOp(self.ps, self.qs, **kw)
+
+    def with_mesh(
+        self, mesh, *, data_axis="data", model_axis="model",
+        per_iteration: bool = False,
+    ) -> "KronOp":
+        """The same problem executed as distributed rounds on ``mesh``."""
+        return self._derive(
+            mesh=mesh, data_axis=data_axis, model_axis=model_axis,
+            per_iteration=per_iteration,
+        )
+
+    def with_batch(
+        self, batch: int | None, *, shared_factors: bool | None = None
+    ) -> "KronOp":
+        """The same problem over ``batch`` independent samples.
+
+        The row-count hint is dropped in the derivation: a single op's ``m``
+        is TOTAL rows while a batched op's ``m`` is rows PER SAMPLE, so
+        carrying it over would eagerly resolve a plan for the wrong shape.
+        The derived op resolves lazily on its first call instead."""
+        if shared_factors is None:
+            shared_factors = self.shared_factors
+        return self._derive(batch=batch, shared_factors=shared_factors, m=None)
+
+    # -- size / cost queries -------------------------------------------------
+
+    def out_shape(self, x_shape: Sequence[int]) -> tuple[int, ...]:
+        """Output shape for an input of shape ``x_shape`` (the handle API's
+        size query: allocate outputs without tracing)."""
+        x_shape = tuple(int(d) for d in x_shape)
+        if not x_shape or x_shape[-1] != self.k:
+            raise ValueError(
+                f"x last dim {x_shape[-1] if x_shape else None} != "
+                f"prod(P)={self.k} for {self.ps}"
+            )
+        if self.batch is not None:
+            if len(x_shape) < 2 or x_shape[0] != self.batch:
+                raise ValueError(
+                    f"batched op expects (B={self.batch}, ..., K), got {x_shape}"
+                )
+        return (*x_shape[:-1], self.k_out)
+
+    def cost(self, m: int | None = None) -> KronCost:
+        """Analytic cost of one call: sliced-multiply FLOPs plus, on a mesh,
+        the all_to_all payload (elements per device, all rounds)."""
+        m = m if m is not None else self._default_rows()
+        b = self.batch or 1
+        if self.batch is not None and not self.shared_factors:
+            flops = b * KronProblem(m, self.ps, self.qs).flops
+        else:
+            flops = KronProblem(b * m, self.ps, self.qs).flops
+        if self.mesh is None:
+            return KronCost(flops, 0, 0)
+        from .distributed import comm_elems_per_device
+
+        rows = b * m if self.shared_factors else m
+        m_loc = max(1, rows // self.g_m)
+        comm = comm_elems_per_device(
+            m_loc,
+            self.k // self.g_k,
+            tuple(reversed(self.ps)),
+            tuple(reversed(self.qs)),
+            self.g_k,
+            rounds=self.rounds,
+            batch=1 if self.shared_factors else b,
+        )
+        return KronCost(flops, comm, len(self.rounds))
+
+    def describe(self) -> str:
+        mode = "batched" if self.batch is not None else "single"
+        shared = "" if self.batch is None else (
+            ", shared" if self.shared_factors else ", per-sample"
+        )
+        where = (
+            f"mesh({self.g_m}x{self.g_k})" if self.mesh is not None else "local"
+        )
+        plan = self.plan
+        if plan is not None:
+            pdesc = plan.describe()
+        elif self.rounds is not None:
+            pdesc = f"rounds{list(self.rounds)}"  # mesh path: the schedule IS the plan
+        else:
+            pdesc = "unfused"
+        return (
+            f"KronOp(ps={list(self.ps)}, qs={list(self.qs)}, {mode}"
+            f"{shared}, {where}, backend={self.backend}) :: {pdesc}"
+        )
+
+    def __repr__(self) -> str:
+        return self.describe()
+
+    # -- execution -----------------------------------------------------------
+
+    def _check_factors(self, factors: tuple[jax.Array, ...]):
+        shared = self.batch is None or self.shared_factors
+        ps, qs = signature_of(factors, shared)
+        if (ps, qs) != (self.ps, self.qs):
+            raise ValueError(
+                f"factor shapes {ps}x{qs} do not match op signature "
+                f"{self.ps}x{self.qs}"
+            )
+        if not shared:
+            for f in factors:
+                if int(f.shape[0]) != self.batch:
+                    raise ValueError(
+                        f"factor batch {f.shape[0]} != x batch {self.batch}"
+                    )
+
+    def __call__(self, x: jax.Array, factors: Sequence[jax.Array]) -> jax.Array:
+        factors = tuple(factors)
+        self._check_factors(factors)
+        if self.batch is None:
+            if x.shape[-1] != self.k:
+                raise ValueError(
+                    f"x last dim {x.shape[-1]} != prod(P)={self.k} for {self.ps}"
+                )
+            if self.mesh is not None:
+                return self._run_mesh_single(x, factors)
+            lead = x.shape[:-1]
+            m = math.prod(lead) if lead else 1
+            fn = self._ensure_single(m, x.dtype.itemsize)
+            y = fn(x.reshape(m, self.k), factors)
+            return y.reshape(*lead, self.k_out)
+        # batched modes
+        if x.ndim < 2:
+            raise ValueError(
+                f"x needs a leading batch axis: (B, ..., K), got {x.shape}"
+            )
+        if int(x.shape[0]) != self.batch:
+            raise ValueError(f"x batch {x.shape[0]} != op batch {self.batch}")
+        if x.shape[-1] != self.k:
+            raise ValueError(
+                f"x last dim {x.shape[-1]} != prod(P)={self.k} for {self.ps}"
+            )
+        b = self.batch
+        lead = x.shape[1:-1]
+        m = math.prod(lead) if lead else 1
+        if self.shared_factors:
+            # Collapse B into M and run the single-problem spine: both are
+            # pure row indices of the same contiguous array.
+            if self.mesh is not None:
+                y = self._run_mesh_single(x.reshape(b * m, self.k), factors)
+            else:
+                fn = self._ensure_single(b * m, x.dtype.itemsize)
+                y = fn(x.reshape(b * m, self.k), factors)
+            return y.reshape(b, *lead, self.k_out)
+        if self.mesh is not None:
+            if x.ndim != 3:
+                raise ValueError(f"x must be (B, M, K), got shape {x.shape}")
+            return self._run_mesh_batched(x, factors)
+        fn = self._ensure_batched(b, m, x.dtype.itemsize)
+        y = fn(x.reshape(b, m, self.k), factors)
+        return y.reshape(b, *lead, self.k_out)
+
+    def _run_mesh_single(self, x, factors):
+        from . import distributed
+
+        if x.ndim != 2:
+            raise ValueError(f"distributed op expects x (M, K), got {x.shape}")
+        return distributed.run_distributed_rounds(
+            x, factors, self.mesh,
+            data_axis=self.data_axis, model_axis=self.model_axis,
+            backend=self.backend, per_iteration=self.per_iteration,
+        )
+
+    def _run_mesh_batched(self, x, factors):
+        from . import distributed
+
+        b, m = int(x.shape[0]), int(x.shape[1])
+        key = ("mesh-batched", b, m, x.dtype.itemsize)
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = self._remember(
+                self._plans, key,
+                self._batched_plan(b, max(1, m // self.g_m), x.dtype.itemsize),
+            )
+        return distributed.run_batched_distributed_rounds(
+            x, factors, self.mesh, t_b=plan.t_b,
+            data_axis=self.data_axis, model_axis=self.model_axis,
+            backend=self.backend, per_iteration=self.per_iteration,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Bounded op factory (the shim path) + deprecation bookkeeping
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=64)
+def kron_op_for(
+    ps: tuple[int, ...],
+    qs: tuple[int, ...],
+    *,
+    m: int | None = None,
+    batch: int | None = None,
+    shared_factors: bool = True,
+    mesh=None,
+    data_axis="data",
+    model_axis: str = "model",
+    per_iteration: bool = False,
+    backend: str = "auto",
+    plan: KronPlan | str | None = "auto",
+    tune: str = "analytic",
+    cache_path: str | None = None,
+    dtype_bytes: int = 4,
+) -> KronOp:
+    """Shared, bounded ``KronOp`` factory: same signature -> same op object.
+
+    This is the cache behind the legacy ``kron_matmul*`` shims and the
+    consumers that key ops on runtime shapes (layers, GP kernels, serving).
+    Plans themselves are additionally shared through the engine's bounded
+    plan memo, so even two DISTINCT ops with one signature hold one plan.
+    """
+    return KronOp(
+        ps, qs, m=m, batch=batch, shared_factors=shared_factors, mesh=mesh,
+        data_axis=data_axis, model_axis=model_axis,
+        per_iteration=per_iteration, backend=backend, plan=plan, tune=tune,
+        cache_path=cache_path, dtype_bytes=dtype_bytes,
+    )
+
+
+_DEPRECATION_WARNED: set[str] = set()
+
+
+def warn_deprecated(name: str, hint: str) -> None:
+    """Emit ONE DeprecationWarning per process per legacy entry point."""
+    if name in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(name)
+    warnings.warn(
+        f"{name} is deprecated: construct a repro.core.KronOp once "
+        f"({hint}) and call it; the shim re-dispatches through a bounded "
+        "op cache on every call.",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+__all__ = [
+    "KronOp",
+    "KronCost",
+    "kron_op_for",
+    "signature_of",
+    "kron_matmul_p",
+    "kron_matmul_batched_p",
+]

@@ -1,289 +1,31 @@
-"""Public FastKron API: planned, differentiable Kron-Matmul.
+"""Compatibility shims: the legacy functional Kron-Matmul entry points.
 
-``kron_matmul(x, factors)`` computes ``x @ (F^1 (x) F^2 (x) ... (x) F^N)``
-for ``x: (..., prod P_i)`` and ``F^i: (P_i, Q_i)`` without materializing the
-Kronecker matrix, using the FastKron sliced-multiply algorithm (paper §3)
-with an execution plan (fusion grouping C3 + tile sizes C5 + beyond-paper
-pre-kronization) chosen by ``core.autotune.make_plan``.
-``kron_matmul_batched`` runs B independent problems in one launch; the
-multi-device entry points (``kron_matmul_distributed`` and its batched
-sibling ``kron_matmul_batched_distributed``) live in ``core.distributed``.
-User-facing reference: docs/api.md; layer map: docs/architecture.md.
+The execution engine lives in ``core.engine`` as the handle-based ``KronOp``
+(resolve the plan once, call many times).  ``kron_matmul`` and
+``kron_matmul_batched`` remain as thin shims that look an op up in the
+bounded ``engine.kron_op_for`` cache and call it — one dispatch spine, no
+duplicated stage loops here.  Each shim emits a single ``DeprecationWarning``
+per process pointing at ``KronOp``; new code should hold an op:
 
-Differentiation: the VJP of a Kron-Matmul is itself Kron-shaped —
-``dX = dY @ (F^1 (x) ... (x) F^N)^T`` — so the backward pass reuses the same
-sliced-multiply machinery with per-stage transposed contractions, rather than
-relying on autodiff tracing through ``pallas_call``.  When a plan is active
-the backward is PLAN-DRIVEN end to end: stage inputs are rematerialized with
-the forward plan's fused stages (CSE'd against the forward pass under jit),
-the input cotangent runs through the fused transposed kernels
-(``ops.fused_kron_t`` / ``ops.fused_kron_bwd``), and factor gradients are
-computed inside the same fused stage backward — no unfused per-factor XLA
-loop.  ``symbolic_zeros`` perturbation flags skip factor-gradient work
-entirely when only ``dx`` is needed (inference-style ``jax.grad`` over x).
+    from repro.core import KronOp
+    op = KronOp(ps, qs)                  # plan resolved here
+    y = op(x, factors)                   # planned fwd + plan-driven VJP
+
+Numerics, differentiation (plan-driven custom VJP with ``symbolic_zeros``),
+and the batched factor-sharing modes are exactly the op path's — the shims
+add nothing but the cache lookup.  The distributed shims live in
+``core.distributed``.  User-facing reference: docs/api.md ("compatibility
+shims"); layer map: docs/architecture.md.
 """
 from __future__ import annotations
 
-import functools
-import math
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 
-from ..kernels import ops
-from . import autotune
-from .autotune import KronPlan, Stage, TileConfig
-from .kron import KronProblem
-
-
-# ---------------------------------------------------------------------------
-# Stage execution (forward)
-# ---------------------------------------------------------------------------
-
-
-def _prekron_factor(stage_factors: Sequence[jax.Array]) -> jax.Array:
-    # stage_factors are in APPLICATION order (rev[i], rev[i+1], ...);
-    # the explicit Kronecker product must be formed in PROBLEM order,
-    # i.e. kron(rev[i+1], rev[i]):  x @ (A (x) B) applies B first.
-    f = stage_factors[-1]
-    for g in reversed(stage_factors[:-1]):
-        f = jnp.kron(f, g)
-    return f
-
-
-def _stage_forward(
-    y: jax.Array, stage_factors: Sequence[jax.Array], stage: Stage, backend: str
-) -> jax.Array:
-    if stage.prekron:
-        f = _prekron_factor(stage_factors)
-        return ops.sliced_multiply(y, f, backend=backend, tiles=stage.tiles.as_tuple)
-    if len(stage_factors) == 1:
-        return ops.sliced_multiply(
-            y, stage_factors[0], backend=backend, tiles=stage.tiles.as_tuple
-        )
-    pprod = math.prod(int(f.shape[0]) for f in stage_factors)
-    t_k = stage.tiles.t_s * pprod
-    return ops.fused_kron(
-        y, stage_factors, backend=backend, t_m=stage.tiles.t_m, t_k=t_k,
-        t_qs=stage.t_qs,
-    )
-
-
-# ---------------------------------------------------------------------------
-# VJP building blocks
-# ---------------------------------------------------------------------------
-
-
-def _sliced_vjp_input(g: jax.Array, f: jax.Array, backend: str = "xla") -> jax.Array:
-    """du for y = sliced(u, f):  du[m, s*P+p] = sum_q g[m, q*S+s] f[p, q].
-
-    This is the TRANSPOSED sliced multiply — itself Kron-shaped, with its
-    own Pallas kernel (kernels/kron_sliced_t.py) on TPU."""
-    return ops.sliced_multiply_t(g, f, backend=backend)
-
-
-def _sliced_vjp_factor(u: jax.Array, g: jax.Array, p: int, q: int) -> jax.Array:
-    """df[p,q] = sum_{m,s} u[m, s*P+p] g[m, q*S+s]."""
-    m, k = u.shape
-    s = k // p
-    acc = jnp.promote_types(g.dtype, jnp.float32)
-    u3 = u.reshape(m, s, p)
-    g3 = g.reshape(m, q, s)
-    return jnp.einsum("msp,mqs->pq", u3.astype(acc), g3.astype(acc))
-
-
-def _prekron_vjp(dK: jax.Array, stage_factors: Sequence[jax.Array]) -> tuple:
-    """Split the cotangent of kron(rev[i+1], ..., rev[i]) back into per-factor
-    cotangents, in ``stage_factors`` (application) order."""
-    if len(stage_factors) == 1:
-        return (dK,)
-    a = stage_factors[0]
-    b = _prekron_factor(stage_factors[1:])
-    pa, qa = int(a.shape[0]), int(a.shape[1])
-    pb, qb = int(b.shape[0]), int(b.shape[1])
-    acc = jnp.promote_types(dK.dtype, jnp.float32)
-    dk4 = dK.reshape(pb, pa, qb, qa).astype(acc)
-    da = jnp.einsum("bpcq,bc->pq", dk4, b.astype(acc))
-    db = jnp.einsum("bpcq,pq->bc", dk4, a.astype(acc))
-    return (da,) + _prekron_vjp(db, stage_factors[1:])
-
-
-# ---------------------------------------------------------------------------
-# Planned, differentiable core
-# ---------------------------------------------------------------------------
-
-
-def _default_bwd_stages(plan: KronPlan) -> tuple[Stage, ...]:
-    return plan.bwd_stages or tuple(reversed(plan.stages))
-
-
-def _stage_bwd_per_factor(u, g, stage_factors, backend):
-    """Stage backward as per-factor planned ops — the fallback when the
-    one-kernel fused backward cannot hold the stage's growth in VMEM (e.g.
-    Q-tiled stages: the forward tiles Q, but the backward needs every
-    factor-gradient pair).  Still stage-local and dispatch-routed."""
-    inputs = [u]
-    for f in stage_factors[:-1]:
-        inputs.append(ops.sliced_multiply(inputs[-1], f, backend=backend))
-    dfs = [None] * len(stage_factors)
-    for idx in reversed(range(len(stage_factors))):
-        f = stage_factors[idx]
-        p, q = int(f.shape[0]), int(f.shape[1])
-        dfs[idx] = _sliced_vjp_factor(inputs[idx], g, p, q)
-        g = ops.sliced_multiply_t(g, f, backend=backend)
-    return g, tuple(dfs)
-
-
-def _planned_bwd(plan: KronPlan, backend: str, x, factors, g, f_pert: bool):
-    """Execute the backward plan: returns (dx, dfs_by_rev_id or None)."""
-    rev = tuple(reversed(factors))
-    stage_factors = [tuple(rev[i] for i in st.factor_ids) for st in plan.stages]
-    # Stage inputs rematerialized with the FORWARD plan (fused stages, not an
-    # unfused per-factor loop); under jit XLA CSEs these against the primal
-    # forward chain, so the remat is effectively free at stage granularity.
-    stage_inputs = []
-    y = x
-    for idx, (st, sf) in enumerate(zip(plan.stages, stage_factors)):
-        stage_inputs.append(y)
-        if idx + 1 < len(plan.stages):
-            y = _stage_forward(y, sf, st, backend)
-    bwd_sts = _default_bwd_stages(plan)
-    dfs_by_id: dict[int, jax.Array] = {}
-    for rev_idx in range(len(plan.stages) - 1, -1, -1):
-        st = plan.stages[rev_idx]
-        bst = bwd_sts[len(plan.stages) - 1 - rev_idx]
-        sf = stage_factors[rev_idx]
-        u = stage_inputs[rev_idx]
-        pprod = math.prod(int(f.shape[0]) for f in sf)
-        t_k = st.tiles.t_s * pprod
-        if st.prekron:
-            fk = _prekron_factor(sf)
-            if f_pert:
-                try:
-                    g, (dk,) = ops.fused_kron_bwd(
-                        u, g, (fk,), backend=backend, t_m=bst.tiles.t_m
-                    )
-                except ValueError:
-                    g, (dk,) = _stage_bwd_per_factor(u, g, (fk,), backend)
-                for fid, d in zip(st.factor_ids, _prekron_vjp(dk, sf)):
-                    dfs_by_id[fid] = d
-            else:
-                g = ops.sliced_multiply_t(
-                    g, fk, backend=backend, tiles=bst.tiles.as_tuple
-                )
-        elif f_pert:
-            try:
-                g, dfs = ops.fused_kron_bwd(
-                    u, g, sf, backend=backend, t_m=bst.tiles.t_m, t_k=t_k
-                )
-            except ValueError:
-                # Fused backward tile exceeds VMEM (Q-tiled forward stages
-                # have no Q relief on the gradient-pair side) — run the
-                # stage per factor, still through planned dispatch.
-                g, dfs = _stage_bwd_per_factor(u, g, sf, backend)
-            for fid, d in zip(st.factor_ids, dfs):
-                dfs_by_id[fid] = d
-        elif len(sf) == 1:
-            g = ops.sliced_multiply_t(
-                g, sf[0], backend=backend, tiles=bst.tiles.as_tuple
-            )
-        else:
-            g = ops.fused_kron_t(
-                g, sf, backend=backend, t_m=bst.tiles.t_m, t_k=t_k, t_qs=st.t_qs
-            )
-    return g, (dfs_by_id if f_pert else None)
-
-
-@functools.lru_cache(maxsize=None)
-def _build_kron_fn(n: int, backend: str, plan: KronPlan | None):
-    """Returns a custom-vjp function of (x, factors_tuple) for N factors."""
-
-    def fwd_only(x, factors):
-        # Application order: last factor first (Algorithm 1).
-        rev = tuple(reversed(factors))
-        y = x
-        if plan is None:
-            for f in rev:
-                y = ops.sliced_multiply(y, f, backend=backend)
-            return y
-        for stage in plan.stages:
-            y = _stage_forward(y, [rev[i] for i in stage.factor_ids], stage, backend)
-        return y
-
-    @jax.custom_vjp
-    def kron_fn(x, factors):
-        return fwd_only(x, factors)
-
-    def kron_fwd(x_p, factors_p):
-        x = x_p.value
-        factors = tuple(f.value for f in factors_p)
-        # Residuals: just (x, factors) plus static perturbation flags.  The
-        # per-factor intermediates are recomputed in bwd (rematerialization):
-        # storing them would cost ~N*M*K extra memory, while recompute adds
-        # <= 1x forward FLOPs and is CSE'd against the primal under jit.
-        f_pert = any(bool(f.perturbed) for f in factors_p)
-        return fwd_only(x, factors), (x, factors, f_pert)
-
-    def kron_bwd(res, g):
-        x, factors, f_pert = res
-        if isinstance(g, jax.custom_derivatives.SymbolicZero):
-            return jnp.zeros_like(x), tuple(jnp.zeros_like(f) for f in factors)
-        rev = tuple(reversed(factors))
-        if plan is None:
-            # Paper-faithful unfused loop (the C1 baseline's backward): one
-            # transposed sliced multiply + factor contraction per factor.
-            inputs = []
-            y = x
-            for i, f in enumerate(rev):
-                inputs.append(y)
-                if i + 1 < len(rev):
-                    y = ops.sliced_multiply(y, f, backend="xla")
-            dfs_rev = []
-            for i in reversed(range(len(rev))):  # last applied stage first
-                f = rev[i]
-                p, q = int(f.shape[0]), int(f.shape[1])
-                u = inputs[i]
-                dfs_rev.append(_sliced_vjp_factor(u, g, p, q).astype(f.dtype))
-                g = _sliced_vjp_input(g, f, backend=backend)
-            dfactors = tuple(dfs_rev)  # appended rev[n-1]..rev[0] == F^1..F^N
-            return g, dfactors
-        dx, dfs_by_id = _planned_bwd(plan, backend, x, factors, g, f_pert)
-        nf = len(factors)
-        if dfs_by_id is None:
-            dfactors = tuple(jnp.zeros_like(f) for f in factors)
-        else:
-            dfactors = tuple(
-                dfs_by_id[nf - 1 - j].astype(factors[j].dtype) for j in range(nf)
-            )
-        return dx.astype(x.dtype), dfactors
-
-    kron_fn.defvjp(kron_fwd, kron_bwd, symbolic_zeros=True)
-    return kron_fn
-
-
-@functools.lru_cache(maxsize=None)
-def _plan_for(
-    m: int,
-    ps: tuple[int, ...],
-    qs: tuple[int, ...],
-    dtype_bytes: int,
-    backend: str,
-    enable_prekron: bool,
-    tune: str,
-    cache_path: str | None,
-) -> KronPlan:
-    """Memoized make_plan: repeated kron_matmul calls skip Python planning
-    overhead entirely (and, in tune="measure" mode, re-measurement — the
-    on-disk cache covers new processes)."""
-    return autotune.make_plan(
-        KronProblem(m, ps, qs),
-        dtype_bytes=dtype_bytes,
-        enable_prekron=enable_prekron,
-        tune=tune,
-        backend=backend,
-        cache_path=cache_path,
-    )
+from . import engine
+from .autotune import KronPlan, Stage, TileConfig  # noqa: F401  (re-export)
+from .engine import KronOp, kron_op_for, signature_of
 
 
 def kron_matmul(
@@ -297,35 +39,19 @@ def kron_matmul(
 ) -> jax.Array:
     """``x @ (F^1 (x) ... (x) F^N)`` for ``x: (..., prod P_i)``.
 
+    DEPRECATED shim over ``KronOp(ps, qs, backend=..., plan=..., ...)``.
     plan: ``"auto"`` builds one with autotune.make_plan; ``None`` runs the
     paper-faithful unfused per-factor path; or pass an explicit KronPlan.
     tune: ``"analytic"`` (model-ranked tiles) or ``"measure"`` (wall-clock
     ranked via autotune.measure_best, persisted in the on-disk plan cache).
     """
+    engine.warn_deprecated("kron_matmul", "KronOp(ps, qs)")
     factors = tuple(factors)
-    ps = tuple(int(f.shape[0]) for f in factors)
-    qs = tuple(int(f.shape[1]) for f in factors)
-    k = math.prod(ps)
-    if x.shape[-1] != k:
-        raise ValueError(f"x last dim {x.shape[-1]} != prod(P)={k} for {ps}")
-    lead = x.shape[:-1]
-    m = math.prod(lead) if lead else 1
-    prob = KronProblem(m, ps, qs)
-    if plan == "auto":
-        # pre-kronization trades FLOPs for MXU contraction depth — a win on
-        # the 128x128 systolic array, measured a LOSS on CPU AVX (see
-        # EXPERIMENTS.md §Perf); auto-plans enable it only on TPU.
-        plan = _plan_for(
-            m, ps, qs,
-            x.dtype.itemsize,
-            backend,
-            jax.default_backend() == "tpu",
-            tune,
-            cache_path,
-        )
-    fn = _build_kron_fn(len(factors), backend, plan)
-    y = fn(x.reshape(m, k), factors)
-    return y.reshape(*lead, prob.k_out)
+    ps, qs = signature_of(factors, shared_factors=True)
+    op = kron_op_for(
+        ps, qs, backend=backend, plan=plan, tune=tune, cache_path=cache_path
+    )
+    return op(x, factors)
 
 
 def kron_matmul_unfused(
@@ -333,213 +59,6 @@ def kron_matmul_unfused(
 ) -> jax.Array:
     """Paper-faithful Algorithm 1 without fusion/pairing (the C1 baseline)."""
     return kron_matmul(x, factors, backend=backend, plan=None)
-
-
-# ---------------------------------------------------------------------------
-# Batched Kron-Matmul: B independent problems in one launch
-# ---------------------------------------------------------------------------
-
-
-def _stage_forward_batched(
-    y: jax.Array, stage_factors: Sequence[jax.Array], stage: Stage, backend: str,
-    t_b: int,
-) -> jax.Array:
-    # Single-factor stages run through the same batched fused dispatcher (a
-    # chain of length 1) — one uniform batch-grid entry point per stage.
-    pprod = math.prod(int(f.shape[1]) for f in stage_factors)
-    t_k = stage.tiles.t_s * pprod
-    return ops.fused_kron_batched(
-        y, stage_factors, backend=backend, t_b=t_b, t_m=stage.tiles.t_m,
-        t_k=t_k, t_qs=stage.t_qs,
-    )
-
-
-def _sliced_vjp_factor_b(u: jax.Array, g: jax.Array, p: int, q: int) -> jax.Array:
-    """Per-sample factor grad: df[b,p,q] = sum_{m,s} u[b,m,s*P+p] g[b,m,q*S+s]."""
-    b, m, k = u.shape
-    s = k // p
-    acc = jnp.promote_types(g.dtype, jnp.float32)
-    u4 = u.reshape(b, m, s, p)
-    g4 = g.reshape(b, m, q, s)
-    return jnp.einsum("bmsp,bmqs->bpq", u4.astype(acc), g4.astype(acc))
-
-
-def _conservative_batched_tiles(m: int, k: int, p: int, q: int) -> tuple[int, int]:
-    """(t_m, t_k) for a single-factor batched call at t_b=1 that provably fits
-    the kernel's VMEM budget — the fallback path must never itself raise."""
-    from ..kernels.kron_fused import VMEM_BUDGET_ELEMS
-
-    t_m = min(8, m)
-    while m % t_m:
-        t_m -= 1
-    growth = max(1.0, q / p)
-    s = k // p
-    t_s = max(
-        d for d in range(1, s + 1)
-        if s % d == 0 and t_m * d * p * growth <= VMEM_BUDGET_ELEMS
-    )
-    return t_m, t_s * p
-
-
-def _sliced_batched(y, f, backend):
-    """One batched sliced multiply through the fused dispatcher, tiled so the
-    Pallas kernel always fits VMEM."""
-    t_m, t_k = _conservative_batched_tiles(
-        int(y.shape[1]), int(y.shape[2]), int(f.shape[1]), int(f.shape[2])
-    )
-    return ops.fused_kron_batched(y, (f,), backend=backend, t_b=1, t_m=t_m, t_k=t_k)
-
-
-def _sliced_t_batched(g, f, backend):
-    p, q = int(f.shape[1]), int(f.shape[2])
-    # transposed call: the input has Q-sized slices, dX has P-sized ones.
-    t_m, t_k = _conservative_batched_tiles(
-        int(g.shape[1]), int(g.shape[2]) // q * p, p, q
-    )
-    return ops.fused_kron_t_batched(g, (f,), backend=backend, t_b=1, t_m=t_m, t_k=t_k)
-
-
-def _stage_bwd_per_factor_batched(u, g, stage_factors, backend):
-    """Batched analogue of _stage_bwd_per_factor: the fallback when the
-    one-kernel batched stage backward cannot hold the stage in VMEM.  Runs at
-    t_b=1 with conservatively-fitted tiles so it cannot overflow in turn."""
-    inputs = [u]
-    for f in stage_factors[:-1]:
-        inputs.append(_sliced_batched(inputs[-1], f, backend))
-    dfs = [None] * len(stage_factors)
-    for idx in reversed(range(len(stage_factors))):
-        f = stage_factors[idx]
-        p, q = int(f.shape[1]), int(f.shape[2])
-        dfs[idx] = _sliced_vjp_factor_b(inputs[idx], g, p, q)
-        g = _sliced_t_batched(g, f, backend)
-    return g, tuple(dfs)
-
-
-def _planned_bwd_batched(plan: KronPlan, backend: str, x, factors, g, f_pert: bool):
-    """Batched backward plan: (dx (B,M,K), per-sample dfs_by_rev_id or None).
-
-    Mirrors _planned_bwd without the prekron branch — batched plans are built
-    with pre-kronization disabled (per-sample explicit krons are a follow-on).
-    """
-    rev = tuple(reversed(factors))
-    stage_factors = [tuple(rev[i] for i in st.factor_ids) for st in plan.stages]
-    stage_inputs = []
-    y = x
-    for idx, (st, sf) in enumerate(zip(plan.stages, stage_factors)):
-        stage_inputs.append(y)
-        if idx + 1 < len(plan.stages):
-            y = _stage_forward_batched(y, sf, st, backend, plan.t_b)
-    bwd_sts = _default_bwd_stages(plan)
-    dfs_by_id: dict[int, jax.Array] = {}
-    for rev_idx in range(len(plan.stages) - 1, -1, -1):
-        st = plan.stages[rev_idx]
-        bst = bwd_sts[len(plan.stages) - 1 - rev_idx]
-        sf = stage_factors[rev_idx]
-        u = stage_inputs[rev_idx]
-        pprod = math.prod(int(f.shape[1]) for f in sf)
-        t_k = st.tiles.t_s * pprod
-        if f_pert:
-            try:
-                g, dfs = ops.fused_kron_bwd_batched(
-                    u, g, sf, backend=backend, t_b=plan.t_b,
-                    t_m=bst.tiles.t_m, t_k=t_k,
-                )
-            except ValueError:
-                g, dfs = _stage_bwd_per_factor_batched(u, g, sf, backend)
-            for fid, d in zip(st.factor_ids, dfs):
-                dfs_by_id[fid] = d
-        else:
-            try:
-                g = ops.fused_kron_t_batched(
-                    g, sf, backend=backend, t_b=plan.t_b, t_m=bst.tiles.t_m,
-                    t_k=t_k, t_qs=st.t_qs,
-                )
-            except ValueError:
-                # The planner validated t_b against FORWARD block sizes; the
-                # mirrored bwd t_m can overflow on the transposed shapes —
-                # walk the stage per factor with fitted tiles instead.
-                for f in reversed(sf):
-                    g = _sliced_t_batched(g, f, backend)
-    return g, (dfs_by_id if f_pert else None)
-
-
-@functools.lru_cache(maxsize=None)
-def _build_batched_kron_fn(n: int, backend: str, plan: KronPlan):
-    """custom-vjp function of (x (B,M,K), factors each (B,P_i,Q_i))."""
-
-    def fwd_only(x, factors):
-        rev = tuple(reversed(factors))
-        y = x
-        for stage in plan.stages:
-            y = _stage_forward_batched(
-                y, tuple(rev[i] for i in stage.factor_ids), stage, backend,
-                plan.t_b,
-            )
-        return y
-
-    @jax.custom_vjp
-    def kron_fn(x, factors):
-        return fwd_only(x, factors)
-
-    def kron_fwd(x_p, factors_p):
-        x = x_p.value
-        factors = tuple(f.value for f in factors_p)
-        f_pert = any(bool(f.perturbed) for f in factors_p)
-        return fwd_only(x, factors), (x, factors, f_pert)
-
-    def kron_bwd(res, g):
-        x, factors, f_pert = res
-        if isinstance(g, jax.custom_derivatives.SymbolicZero):
-            return jnp.zeros_like(x), tuple(jnp.zeros_like(f) for f in factors)
-        dx, dfs_by_id = _planned_bwd_batched(plan, backend, x, factors, g, f_pert)
-        nf = len(factors)
-        if dfs_by_id is None:
-            dfactors = tuple(jnp.zeros_like(f) for f in factors)
-        else:
-            dfactors = tuple(
-                dfs_by_id[nf - 1 - j].astype(factors[j].dtype) for j in range(nf)
-            )
-        return dx.astype(x.dtype), dfactors
-
-    kron_fn.defvjp(kron_fwd, kron_bwd, symbolic_zeros=True)
-    return kron_fn
-
-
-@functools.lru_cache(maxsize=None)
-def _batched_plan_for(
-    batch: int,
-    m: int,
-    ps: tuple[int, ...],
-    qs: tuple[int, ...],
-    dtype_bytes: int,
-    backend: str,
-    shared_factors: bool,
-    tune: str,
-    cache_path: str | None,
-) -> KronPlan:
-    return autotune.make_batched_plan(
-        KronProblem(m, ps, qs),
-        batch,
-        shared_factors=shared_factors,
-        dtype_bytes=dtype_bytes,
-        # pre-kronization only applies to the shared/collapse path (per-sample
-        # explicit krons are not implemented); TPU-only as in kron_matmul.
-        enable_prekron=shared_factors and jax.default_backend() == "tpu",
-        tune=tune,
-        backend=backend,
-        cache_path=cache_path,
-    )
-
-
-def _unfused_batched_plan(n: int, m: int) -> KronPlan:
-    """plan=None semantics for the per-sample path: one batched sliced
-    multiply per factor (the paper-faithful loop, batch-dispatched)."""
-    t_m = min(m, 8)
-    while m % t_m:
-        t_m -= 1
-    return KronPlan(
-        tuple(Stage((i,), False, TileConfig(t_m, 1, 1)) for i in range(n))
-    )
 
 
 def kron_matmul_batched(
@@ -554,72 +73,34 @@ def kron_matmul_batched(
 ) -> jax.Array:
     """``B`` independent Kron-Matmuls in one launch: ``x: (B, ..., prod P_i)``.
 
+    DEPRECATED shim over ``KronOp(ps, qs, batch=B, shared_factors=...)``.
+
     shared_factors=True: one factor set ``F^i: (P_i, Q_i)`` applied to every
-    sample (KronLinear under a serving batch, vmap'd layers).  The batch
-    axis collapses into M — the layout allows it because both are pure row
-    indices of the same contiguous array — and the whole batch runs through
-    the single-problem planned path with a plan keyed on the collapsed
-    ``B*M`` rows.
-
-    shared_factors=False: per-sample factors ``F^i: (B, P_i, Q_i)`` (the
-    Jhurani arXiv 1304.7054 regime — many small independent problems, e.g.
-    multi-kernel GP solves or per-expert projections).  Runs the batch-grid
-    kernels (``ops.fused_kron_batched`` and friends) under a batch-aware
-    plan whose ``t_b`` tile trades against the M-tile in VMEM.
-
-    Both paths are differentiable; per-sample factor grads have shape
-    ``(B, P_i, Q_i)``.
+    sample — the batch axis collapses into M and the whole batch runs the
+    single-problem planned path.  shared_factors=False: per-sample factors
+    ``F^i: (B, P_i, Q_i)`` on the batch-grid kernels under a batch-aware
+    plan (``t_b`` sample tiles).  Both paths are differentiable; per-sample
+    factor grads have shape ``(B, P_i, Q_i)``.
     """
+    engine.warn_deprecated(
+        "kron_matmul_batched", "KronOp(ps, qs, batch=B, shared_factors=...)"
+    )
     factors = tuple(factors)
-    if not factors:
-        raise ValueError("need at least one factor")
     if x.ndim < 2:
         raise ValueError(f"x needs a leading batch axis: (B, ..., K), got {x.shape}")
-    b = int(x.shape[0])
-    lead = x.shape[1:-1]
-    m = math.prod(lead) if lead else 1
-    if shared_factors:
-        if any(f.ndim != 2 for f in factors):
-            raise ValueError("shared_factors=True expects 2-D (P_i, Q_i) factors")
-        ps = tuple(int(f.shape[0]) for f in factors)
-        qs = tuple(int(f.shape[1]) for f in factors)
-        k = math.prod(ps)
-        if x.shape[-1] != k:
-            raise ValueError(f"x last dim {x.shape[-1]} != prod(P)={k} for {ps}")
-        # Collapse B into M and DELEGATE: the shared-factors batched problem
-        # is exactly the single problem on (B*M, K) rows, so it shares
-        # kron_matmul's plan memo and custom-VJP path rather than duplicating
-        # them (make_batched_plan(shared_factors=True) builds the same plan).
-        y = kron_matmul(
-            x.reshape(b * m, k), factors, backend=backend, plan=plan,
-            tune=tune, cache_path=cache_path,
-        )
-        return y.reshape(b, *lead, math.prod(qs))
-    if any(f.ndim != 3 for f in factors):
-        raise ValueError("shared_factors=False expects 3-D (B, P_i, Q_i) factors")
-    for f in factors:
-        if int(f.shape[0]) != b:
-            raise ValueError(f"factor batch {f.shape[0]} != x batch {b}")
-    ps = tuple(int(f.shape[1]) for f in factors)
-    qs = tuple(int(f.shape[2]) for f in factors)
-    k = math.prod(ps)
-    if x.shape[-1] != k:
-        raise ValueError(f"x last dim {x.shape[-1]} != prod(P)={k} for {ps}")
-    if plan == "auto":
-        plan = _batched_plan_for(
-            b, m, ps, qs, x.dtype.itemsize, backend, False, tune, cache_path
-        )
-    elif plan is None:
-        plan = _unfused_batched_plan(len(factors), m)
-    fn = _build_batched_kron_fn(len(factors), backend, plan)
-    y = fn(x.reshape(b, m, k), factors)
-    return y.reshape(b, *lead, math.prod(qs))
+    ps, qs = signature_of(factors, shared_factors=shared_factors)
+    op = kron_op_for(
+        ps, qs, batch=int(x.shape[0]), shared_factors=shared_factors,
+        backend=backend, plan=plan, tune=tune, cache_path=cache_path,
+    )
+    return op(x, factors)
 
 
 __all__ = [
     "kron_matmul",
     "kron_matmul_unfused",
     "kron_matmul_batched",
+    "KronOp",
     "KronPlan",
     "Stage",
     "TileConfig",

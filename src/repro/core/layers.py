@@ -4,6 +4,13 @@ use case, Table 4 rows 6-8 / Kronecker Recurrent Units).
 ``W = F^1 (x) ... (x) F^N`` replaces a dense ``(d_in, d_out)`` matrix with
 ``sum_i P_i*Q_i`` parameters; the forward pass is a FastKron Kron-Matmul.
 Used by the model zoo when a config sets ``kron_ffn``/``kron_proj``.
+
+Execution is rewired onto the ``KronOp`` engine: every apply fetches its op
+from the engine's bounded signature cache (``kron_op_for``) instead of
+re-entering per-call plan memos, and the ``KronLinear`` class holds spec,
+params, AND the resolved op — the plan is built at init, not per apply.
+Params stay plain pytrees (dicts of factor arrays) so the optimizer and
+``jax.grad`` see them unchanged.
 """
 from __future__ import annotations
 
@@ -15,11 +22,11 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from .fastkron import kron_matmul, kron_matmul_batched
+from .engine import KronOp, kron_op_for, signature_of
 
 # Active distributed-KronLinear scopes (innermost last).  Entered via
 # ``kron_distributed``; while active, batched KronLinear applies route
-# through ``kron_matmul_batched_distributed`` on the scope's mesh.
+# through the mesh KronOp (distributed batched rounds) on the scope's mesh.
 _DIST_SCOPES: list[tuple] = []
 
 
@@ -28,13 +35,13 @@ def kron_distributed(mesh, *, data_axis="data", model_axis="model"):
     """Route batched KronLinear applies through the distributed Kron-Matmul.
 
     Inside the scope, ``kron_linear_apply`` on ``(B, T, d)`` activations uses
-    ``kron_matmul_batched_distributed`` (shared factors: B·T collapses into
-    the data-sharded row axis, paper §5 round schedule) on ``mesh`` instead
-    of the single-device batched launch.  Shapes the mesh cannot host (row
-    count not divisible by the data axis, or no legal relocation round) fall
-    back to the local path — the scope is an optimization, never an error.
-    This is what ``launch/serve.py --kron-ffn --distributed`` wraps the
-    serving loop in.
+    the mesh ``KronOp`` (shared factors: B·T collapses into the data-sharded
+    row axis, paper §5 round schedule) on ``mesh`` instead of the
+    single-device batched launch.  Shapes the mesh cannot host (row count not
+    divisible by the data axis, or no legal relocation round — the mesh op's
+    constructor validates the round schedule) fall back to the local path —
+    the scope is an optimization, never an error.  This is what
+    ``launch/serve.py --kron-ffn --distributed`` wraps the serving loop in.
 
     The routing decision is made at TRACE time: enter the scope before the
     first call of a jitted function (as serve.py does).  A function traced
@@ -49,37 +56,37 @@ def kron_distributed(mesh, *, data_axis="data", model_axis="model"):
         _DIST_SCOPES.pop()
 
 
-def _apply_batched_maybe_distributed(factors, x, backend, plan):
-    if _DIST_SCOPES and x.ndim == 3:
-        from .distributed import (
-            _mesh_size, kron_matmul_batched_distributed, plan_rounds,
+def _mesh_op_maybe(ps, qs, b, m, k, backend) -> KronOp | None:
+    """The innermost scope's mesh op when it can host this shape, else None."""
+    if not _DIST_SCOPES:
+        return None
+    mesh, data_axis, model_axis = _DIST_SCOPES[-1]
+    try:
+        op = kron_op_for(
+            ps, qs, batch=b, shared_factors=True, mesh=mesh,
+            data_axis=data_axis, model_axis=model_axis, backend=backend,
         )
+    except ValueError:
+        # K not divisible by the model axis, or no legal relocation round
+        # for this (K, G_K) — run local.
+        return None
+    if (b * m) % op.g_m:
+        return None
+    return op
 
-        mesh, data_axis, model_axis = _DIST_SCOPES[-1]
-        b, m, k = (int(d) for d in x.shape)
-        g_m = _mesh_size(mesh, data_axis)
-        g_k = mesh.shape[model_axis]
-        if (b * m) % g_m == 0 and k % g_k == 0:
 
-            # Pre-flight ONLY the round-schedule feasibility — any other
-            # error from the distributed path stays loud.
-            try:
-                plan_rounds(
-                    k // g_k,
-                    [int(f.shape[0]) for f in reversed(factors)],
-                    [int(f.shape[1]) for f in reversed(factors)],
-                    g_k,
-                )
-            except ValueError:
-                pass  # no legal round schedule for this (K, G_K) — run local
-            else:
-                return kron_matmul_batched_distributed(
-                    x, factors, mesh, shared_factors=True,
-                    data_axis=data_axis, model_axis=model_axis, backend=backend,
-                )
-    return kron_matmul_batched(
-        x, factors, shared_factors=True, backend=backend, plan=plan
+def _apply_batched_maybe_distributed(factors, x, backend, plan):
+    ps, qs = signature_of(factors, shared_factors=True)
+    if x.ndim == 3:
+        b, m = int(x.shape[0]), int(x.shape[1])
+        op = _mesh_op_maybe(ps, qs, b, m, int(x.shape[2]), backend)
+        if op is not None:
+            return op(x, factors)
+    op = kron_op_for(
+        ps, qs, batch=int(x.shape[0]), shared_factors=True, backend=backend,
+        plan=plan,
     )
+    return op(x, factors)
 
 
 def balanced_factorization(d: int, n: int) -> tuple[int, ...]:
@@ -137,6 +144,10 @@ class KronLinearSpec:
             use_bias,
         )
 
+    def op(self, **op_kwargs) -> KronOp:
+        """The (shared, bounded-cached) KronOp executing this projection."""
+        return kron_op_for(self.ps, self.qs, **op_kwargs)
+
 
 def kron_linear_init(
     key: jax.Array, spec: KronLinearSpec, dtype=jnp.float32
@@ -161,14 +172,15 @@ def kron_linear_apply(
     params: dict, x: jax.Array, *, backend: str = "auto", plan="auto"
 ) -> jax.Array:
     if x.ndim >= 3:
-        # Serving/training batches (B, ..., d_in): the batched entry point —
-        # shared factors collapse B into the row axis and the plan is keyed
-        # on the batch size, so one launch covers the whole batch.  Inside a
-        # ``kron_distributed`` scope, 3-D activations additionally route
-        # through the distributed batched path on the scope's mesh.
+        # Serving/training batches (B, ..., d_in): the batched op — shared
+        # factors collapse B into the row axis, one launch for the whole
+        # batch.  Inside a ``kron_distributed`` scope, 3-D activations
+        # additionally route through the mesh op on the scope's mesh.
         y = _apply_batched_maybe_distributed(params["factors"], x, backend, plan)
     else:
-        y = kron_matmul(x, params["factors"], backend=backend, plan=plan)
+        ps, qs = signature_of(params["factors"], shared_factors=True)
+        op = kron_op_for(ps, qs, backend=backend, plan=plan)
+        y = op(x, params["factors"])
     if "bias" in params:
         y = y + params["bias"]
     return y
@@ -181,15 +193,52 @@ def kron_linear_apply_batched(
     Kronecker projections).  ``params["factors"][i]: (B, P_i, Q_i)``,
     ``x: (B, ..., d_in)``; an optional bias is ``(d_out,)`` or ``(B, d_out)``.
     """
-    y = kron_matmul_batched(
-        x, params["factors"], shared_factors=False, backend=backend, plan=plan
+    ps, qs = signature_of(params["factors"], shared_factors=False)
+    op = kron_op_for(
+        ps, qs, batch=int(x.shape[0]), shared_factors=False, backend=backend,
+        plan=plan,
     )
+    y = op(x, params["factors"])
     if "bias" in params:
         bias = params["bias"]
         if bias.ndim == 2:  # per-sample bias broadcasts over the lead dims
             bias = bias.reshape(bias.shape[0], *([1] * (y.ndim - 2)), -1)
         y = y + bias
     return y
+
+
+class KronLinear:
+    """Operator-holding KronLinear: spec + params + the resolved ``KronOp``.
+
+    The plan is built at init (op construction), not per apply — the module
+    object is what serving and GP consumers hold across requests.  ``params``
+    is a plain pytree (swap it for trained weights freely); ``__call__``
+    accepts ``(..., d_in)`` of any rank — leading dims collapse into the
+    op's row axis.  Inside a ``kron_distributed`` scope, 3-D activations
+    route through the scope's mesh op exactly like ``kron_linear_apply``.
+    """
+
+    def __init__(
+        self,
+        key: jax.Array,
+        spec: KronLinearSpec,
+        dtype=jnp.float32,
+        *,
+        backend: str = "auto",
+        m: int | None = None,
+    ):
+        self.spec = spec
+        self.params = kron_linear_init(key, spec, dtype)
+        self.op = kron_op_for(spec.ps, spec.qs, m=m, backend=backend)
+
+    def __call__(self, x: jax.Array, params: dict | None = None) -> jax.Array:
+        params = self.params if params is None else params
+        if x.ndim >= 3 and _DIST_SCOPES:
+            return kron_linear_apply(params, x, backend=self.op.backend)
+        y = self.op(x, params["factors"])
+        if "bias" in params:
+            y = y + params["bias"]
+        return y
 
 
 def kron_linear_materialize(params: dict) -> jax.Array:
@@ -202,6 +251,7 @@ def kron_linear_materialize(params: dict) -> jax.Array:
 
 __all__ = [
     "KronLinearSpec",
+    "KronLinear",
     "kron_linear_init",
     "kron_linear_apply",
     "kron_linear_apply_batched",

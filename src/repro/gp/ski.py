@@ -13,14 +13,14 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from functools import partial
+from functools import cached_property, partial
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from ..core import kron as K
-from ..core.fastkron import kron_matmul, kron_matmul_batched
+from ..core.engine import KronOp, kron_op_for
 
 
 def rbf_kernel_1d(grid: jax.Array, lengthscale: float = 0.2) -> jax.Array:
@@ -40,10 +40,18 @@ class KronKernel:
     def dim(self) -> int:
         return math.prod(f.shape[0] for f in self.factors)
 
+    @cached_property
+    def op(self) -> KronOp:
+        """The kernel's resolved KronOp — built once, reused by every CG
+        iteration's MVM (cached_property writes through the frozen
+        dataclass's __dict__)."""
+        shapes = tuple(int(f.shape[0]) for f in self.factors)
+        return kron_op_for(shapes, shapes)
+
     def matmul(self, v: jax.Array, *, backend: str = "fastkron") -> jax.Array:
         """v: (M, prod P) -> v @ K  (symmetric K: right-multiply == solve op)."""
         if backend == "fastkron":
-            return kron_matmul(v, self.factors)
+            return self.op(v, self.factors)
         if backend == "shuffle":
             return K.kron_matmul_shuffle(v, list(self.factors))
         if backend == "naive":
@@ -70,20 +78,31 @@ class BatchedKronKernel:
     def dim(self) -> int:
         return math.prod(int(f.shape[1]) for f in self.factors)
 
+    @cached_property
+    def op(self) -> KronOp:
+        """The batched (per-sample-factors) KronOp, built once per kernel
+        stack; ``op.with_mesh`` derivations are shared through the engine's
+        bounded op cache."""
+        shapes = tuple(int(f.shape[1]) for f in self.factors)
+        return kron_op_for(
+            shapes, shapes, batch=self.batch, shared_factors=False
+        )
+
     def matmul(self, v: jax.Array, *, mesh=None) -> jax.Array:
         """v: (B, M, prod P) -> per-sample v_b @ K_b.
 
         ``mesh``: an optional ``(data, model)`` jax Mesh — the MVM then runs
-        ``kron_matmul_batched_distributed`` (v sharded rows-over-data /
-        cols-over-model, ONE collective round per stage for all B kernels)
-        instead of the single-device batched launch."""
+        the mesh-derived op (v sharded rows-over-data / cols-over-model, ONE
+        collective round per stage for all B kernels) instead of the
+        single-device batched launch."""
         if mesh is not None:
-            from ..core.distributed import kron_matmul_batched_distributed
-
-            return kron_matmul_batched_distributed(
-                v, self.factors, mesh, shared_factors=False
+            shapes = tuple(int(f.shape[1]) for f in self.factors)
+            op = kron_op_for(
+                shapes, shapes, batch=self.batch, shared_factors=False,
+                mesh=mesh,
             )
-        return kron_matmul_batched(v, self.factors, shared_factors=False)
+            return op(v, self.factors)
+        return self.op(v, self.factors)
 
     @classmethod
     def stack(cls, kernels: Sequence[KronKernel]) -> "BatchedKronKernel":

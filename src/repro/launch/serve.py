@@ -20,7 +20,7 @@ from ..configs import get_config
 from ..data import SyntheticLM
 from ..models.config import reduced as reduce_cfg
 from ..runtime.fault import elastic_mesh
-from ..train import make_prefill_step, make_serve_step
+from ..train import make_prefill_step, make_serve_step, prebuild_kron_ops
 
 
 def main() -> None:
@@ -68,6 +68,15 @@ def main() -> None:
     dist_scope = (
         kron_distributed(mesh) if args.distributed else contextlib.nullcontext()
     )
+    if cfg.kron_ffn:
+        # One KronOp per FFN shape, its plan resolved for the serving
+        # (batch, prompt-len) rows ONCE before the first trace and reused
+        # across every request — the handle-based serving path.
+        for op in prebuild_kron_ops(
+            cfg, batch=args.batch, seq_len=args.prompt_len,
+            mesh=mesh if args.distributed else None,
+        ):
+            print(f"kron-ffn {op.describe()}")
     with mesh, dist_scope:
         from ..models import model as M
 

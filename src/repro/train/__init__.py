@@ -6,5 +6,6 @@ from .steps import (  # noqa: F401
     make_train_step,
     make_prefill_step,
     make_serve_step,
+    prebuild_kron_ops,
     train_state_init,
 )

@@ -27,6 +27,53 @@ class TrainState(NamedTuple):
     step: jax.Array
 
 
+def prebuild_kron_ops(
+    cfg: ModelConfig, *, batch: int | None = None, seq_len: int | None = None,
+    mesh=None,
+) -> tuple:
+    """Construct the ``KronOp`` handles behind every Kron-compressed
+    projection in ``cfg`` before the first jitted step.
+
+    With ``batch`` and ``seq_len`` given (serving knows both), the plan for
+    the ``(batch*seq_len)``-row collapsed problem is resolved HERE — the
+    tile search lands in the engine's shared bounded plan memo, which is
+    exactly what the layer applies hit at trace time, so the first trace
+    does no Python-side planning.  Without them (training builds steps
+    before seeing a batch) this constructs and returns the op handles;
+    their plans resolve once, on first call, through the same shared memo.
+    ``mesh``: also pre-validate the distributed ops a ``kron_distributed``
+    scope would route to (shapes the mesh cannot host are skipped — the
+    scope falls back to the local path for those).
+    """
+    if not getattr(cfg, "kron_ffn", False):
+        return ()
+    from ..core.engine import kron_op_for
+    from ..core.layers import KronLinearSpec
+
+    dtype_bytes = {"bfloat16": 2, "float16": 2, "float64": 8}.get(
+        str(getattr(cfg, "dtype", "float32")), 4
+    )
+    up = KronLinearSpec.balanced(cfg.d_model, cfg.d_ff, cfg.kron_factors)
+    down = KronLinearSpec.balanced(cfg.d_ff, cfg.d_model, cfg.kron_factors)
+    ops = []
+    for spec in (up, down):
+        if batch is not None and seq_len is not None:
+            # The serving shape: (B, T, d) collapses to B*T rows — resolve
+            # that plan now (m is rows per sample for a batched op).
+            ops.append(kron_op_for(
+                spec.ps, spec.qs, m=seq_len, batch=batch,
+                shared_factors=True, dtype_bytes=dtype_bytes,
+            ))
+        else:
+            ops.append(kron_op_for(spec.ps, spec.qs))
+        if mesh is not None:
+            try:
+                ops.append(kron_op_for(spec.ps, spec.qs, mesh=mesh))
+            except ValueError:
+                pass  # no legal round schedule — scope will run local
+    return tuple(ops)
+
+
 def train_state_init(cfg: ModelConfig, opt_cfg: OptConfig, key: jax.Array) -> TrainState:
     params = M.init_params(cfg, key)
     return TrainState(params, opt_init(params, opt_cfg), jnp.zeros((), jnp.int32))
@@ -62,6 +109,9 @@ def make_train_step(
     ``acc_dtype``: gradient-accumulator dtype (bf16 halves the buffer for
     100B+ models; error < 2^-8 relative per add, fine for <=32 microbatches).
     """
+    # Construct the op handles up front; their plans resolve once through
+    # the shared bounded memo (the first trace reuses, not re-plans).
+    prebuild_kron_ops(cfg)
 
     def grads_of(params, tokens, labels, embeds):
         (loss, parts), grads = jax.value_and_grad(
@@ -141,6 +191,7 @@ def make_serve_step(cfg: ModelConfig):
 __all__ = [
     "TrainState",
     "train_state_init",
+    "prebuild_kron_ops",
     "loss_fn",
     "make_train_step",
     "make_prefill_step",

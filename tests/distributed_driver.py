@@ -109,7 +109,7 @@ def main() -> None:
 
     # --- G_M axis is communication-free (rows embarrassingly parallel) ------
     mesh_dp = jax.make_mesh((8, 1), ("data", "model"))
-    xs_dp = sharded_input(jnp.ones((8, 16)), mesh_dp)
+    xs_dp = sharded_input(jnp.ones((8, 256)), mesh_dp)
     cb_dp = collective_bytes(lambda x_, fs: kron_matmul_distributed(x_, fs, mesh_dp),
                              xs_dp, factors)
     assert cb_dp == 0, f"expected no comm for G_K=1, got {cb_dp}"

@@ -320,8 +320,15 @@ def test_batched_shape_validation():
 
 
 # ---------------------------------------------------------------------------
-# vmap-consistency (satellite): the generic fallback can't silently diverge
+# vmap lowering (satellite): the custom batching rule routes jax.vmap through
+# the batch-grid kernels — pinned at jaxpr level (which primitive fires) and
+# at HLO level (the vmap lowering IS the batched entry point's lowering).
 # ---------------------------------------------------------------------------
+
+
+def _hlo_dot_count(fn, *args) -> tuple[int, str]:
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return txt.count(" dot("), txt
 
 
 @pytest.mark.parametrize("backend", ["xla", "pallas"])
@@ -339,11 +346,98 @@ def test_vmap_kron_matmul_matches_per_sample_loop(backend):
         for i in range(b)
     ])
     np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
-    # ... and the dedicated batched path agrees with the vmap fallback.
+    # ... and the dedicated batched path agrees with the vmap lowering.
     batched = fastkron.kron_matmul_batched(
         x, fb, shared_factors=False, backend=backend
     )
     np.testing.assert_allclose(np.asarray(batched), want, rtol=1e-4, atol=1e-4)
+
+
+def test_vmap_over_x_only_collapses_into_rows():
+    """vmap over x with SHARED factors: the batching rule collapses B into M
+    and re-binds the single-problem primitive — no batched primitive, and
+    the compiled dots run on the collapsed (B*M) row count."""
+    b, m, ps, qs = 4, 8, (4, 4), (4, 4)
+    keys = jax.random.split(jax.random.PRNGKey(20), len(ps) + 1)
+    x = jax.random.normal(keys[0], (b, m, math.prod(ps)), jnp.float32)
+    fs = tuple(
+        jax.random.normal(k, (p, q), jnp.float32)
+        for k, p, q in zip(keys[1:], ps, qs)
+    )
+    fn = jax.vmap(lambda xi: fastkron.kron_matmul(xi, fs))
+    got = fn(x)
+    want = np.stack([
+        np.asarray(fastkron.kron_matmul(x[i], fs)) for i in range(b)
+    ])
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+    # jaxpr pin: single-problem primitive on the collapsed rows, and the
+    # batched primitive does NOT fire.
+    jx = str(jax.make_jaxpr(fn)(x))
+    assert "kron_matmul[" in jx, jx
+    assert "kron_matmul_batched" not in jx, jx
+    assert f"({b * m}, {math.prod(ps)})" in jx.replace("f32[", "(").replace(
+        "]", ")"
+    ) or f"f32[{b * m},{math.prod(ps)}]" in jx, jx
+    # HLO pin: the lowering equals the collapsed single-problem call.
+    n_vmap, txt = _hlo_dot_count(fn, x)
+    n_flat, _ = _hlo_dot_count(
+        lambda x2: fastkron.kron_matmul(x2, fs), x.reshape(b * m, -1)
+    )
+    assert n_vmap == n_flat, (n_vmap, n_flat)
+    assert f"f32[{b * m}," in txt, "expected collapsed-row dots in HLO"
+
+
+def test_vmap_over_x_and_factors_routes_to_batch_grid():
+    """vmap over (x, factors): the rule binds the BATCHED primitive, and the
+    compiled HLO is the same as kron_matmul_batched's — the batch-grid
+    kernels, not the generic fallback."""
+    b, m, ps, qs = 4, 8, (4, 4), (4, 4)
+    x, fls = _mk_batched(21, b, m, ps, qs)
+    fb = tuple(reversed(fls))
+    fn = jax.vmap(lambda xi, fi: fastkron.kron_matmul(xi, fi))
+    jx = str(jax.make_jaxpr(fn)(x, fb))
+    assert "kron_matmul_batched[" in jx, jx
+    got = fn(x, fb)
+    np.testing.assert_allclose(
+        np.asarray(got), _ref_loop(x, fls), rtol=1e-4, atol=1e-4
+    )
+    # HLO pin: identical dot structure to the dedicated batched entry point
+    # (same plan, same executor — vmap IS the batched path).
+    n_vmap, txt_v = _hlo_dot_count(fn, x, fb)
+    n_batched, txt_b = _hlo_dot_count(
+        lambda x2, f2: fastkron.kron_matmul_batched(
+            x2, f2, shared_factors=False
+        ),
+        x, fb,
+    )
+    assert n_vmap == n_batched, (n_vmap, n_batched)
+
+
+def test_nested_vmap_folds_into_one_batch_axis():
+    """vmap(vmap(...)) folds the outer axis into the existing batch: one
+    batched primitive on C*B samples, numerics matching the double loop."""
+    c, b, m, ps, qs = 2, 2, 4, (4, 4), (4, 4)
+    x, fls = _mk_batched(22, c * b, m, ps, qs)
+    fb = tuple(reversed(fls))
+    xn = x.reshape(c, b, m, -1)
+    fn_ = tuple(f.reshape(c, b, *f.shape[1:]) for f in fb)
+    fn = jax.vmap(jax.vmap(lambda xi, fi: fastkron.kron_matmul(xi, fi)))
+    got = fn(xn, fn_)
+    want = _ref_loop(x, fls).reshape(c, b, m, -1)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+    jx = str(jax.make_jaxpr(fn)(xn, fn_))
+    assert jx.count("kron_matmul_batched[") == 1, jx
+    # grads through the nested-vmap lowering agree with the flat batched path
+    gx = jax.grad(lambda xn: (fn(xn, fn_) ** 2).sum())(xn)
+    gx_flat = jax.grad(
+        lambda x2: (
+            fastkron.kron_matmul_batched(x2, fb, shared_factors=False) ** 2
+        ).sum()
+    )(x)
+    np.testing.assert_allclose(
+        np.asarray(gx).reshape(c * b, m, -1), np.asarray(gx_flat),
+        rtol=1e-4, atol=1e-3,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -152,13 +152,16 @@ def test_planned_backward_has_zero_unfused_fallbacks():
     plan = autotune.make_plan(prob, enable_prekron=False)
     assert all(len(st.factor_ids) > 1 for st in plan.stages), plan.describe()
 
+    # Lower (not just trace): the op engine's forward runs behind the
+    # kron_matmul primitive, whose stage loop is emitted at lowering time
+    # (value_and_grad keeps the primal live so it isn't DCE'd away).
     with _OpCounter() as counts:
-        jax.make_jaxpr(
-            jax.grad(
+        jax.jit(
+            jax.value_and_grad(
                 lambda x, fs: fastkron.kron_matmul(x, fs, plan=plan).sum(),
                 argnums=(0, 1),
             )
-        )(x, factors)
+        ).lower(x, factors)
     assert counts["sliced_multiply"] == 0, counts
     assert counts["sliced_multiply_t"] == 0, counts
     assert counts["fused_kron"] >= 1, counts  # primal + stage-input remat
@@ -167,9 +170,9 @@ def test_planned_backward_has_zero_unfused_fallbacks():
     # grad wrt x only: the chain cotangent runs through the fused transposed
     # dispatcher instead (no factor-grad stage at all).
     with _OpCounter() as counts:
-        jax.make_jaxpr(
+        jax.jit(
             jax.grad(lambda x: fastkron.kron_matmul(x, factors, plan=plan).sum())
-        )(x)
+        ).lower(x)
     assert counts["sliced_multiply"] == 0, counts
     assert counts["sliced_multiply_t"] == 0, counts
     assert counts["fused_kron_t"] == len(plan.stages), counts

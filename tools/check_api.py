@@ -1,0 +1,134 @@
+#!/usr/bin/env python
+"""API surface lock: the public surface must match docs/api.md, both ways.
+
+    PYTHONPATH=src python tools/check_api.py
+
+Run by CI next to the docs-lint step (see .github/workflows/ci.yml).  Rules:
+
+  * Every module in ``LOCKED`` must define ``__all__``, and every symbol in
+    it must be mentioned in docs/api.md (inside backticks — a heading, a
+    signature, or prose).  An exported-but-undocumented symbol fails CI:
+    growing the public surface requires documenting it.
+  * Every non-dotted backticked identifier in a docs/api.md HEADING must
+    resolve to an attribute of some locked module.  A documented-but-
+    vanished symbol fails CI: shrinking or renaming the surface requires
+    updating the docs.
+
+Exit status: 0 iff the surface and the reference agree.
+"""
+from __future__ import annotations
+
+import importlib
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+API_MD = ROOT / "docs" / "api.md"
+
+LOCKED = [
+    "repro.core",
+    "repro.core.engine",
+    "repro.core.fastkron",
+    "repro.core.distributed",
+    "repro.core.autotune",
+    "repro.core.layers",
+    "repro.gp.ski",
+    "repro.kernels.ops",
+]
+
+_IDENT = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
+
+
+def _prose_lines(text: str):
+    """Lines outside ``` fences (fenced code would desync backtick pairing);
+    code-block identifiers are exercised by tools/check_docs.py instead."""
+    in_fence = False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            yield line
+
+
+def documented_names(text: str) -> set[str]:
+    """Every identifier mentioned inside backticks in the doc's prose."""
+    names: set[str] = set()
+    for line in _prose_lines(text):
+        for tok in re.findall(r"`([^`]+)`", line):
+            m = _IDENT.match(tok.strip())
+            if m:
+                base = tok.strip().split("(")[0]
+                names.add(m.group(0))
+                names.update(p for p in base.split(".") if _IDENT.fullmatch(p))
+    return names
+
+
+def heading_symbols(text: str) -> list[tuple[int, str]]:
+    """(line, identifier) for backticked names in headings — the doc's claim
+    of what exists.  Dotted tokens (module paths) are skipped; they are
+    checked by importing LOCKED."""
+    out = []
+    for n, line in enumerate(text.splitlines(), 1):
+        if not line.startswith("#"):
+            continue
+        for tok in re.findall(r"`([^`]+)`", line):
+            head = tok.strip().split("(")[0]
+            if "." in head:
+                continue
+            if _IDENT.fullmatch(head):
+                out.append((n, head))
+    return out
+
+
+def main() -> int:
+    errors: list[str] = []
+    text = API_MD.read_text()
+    documented = documented_names(text)
+
+    mods = {}
+    for name in LOCKED:
+        try:
+            mods[name] = importlib.import_module(name)
+        except Exception as e:  # import failure IS a surface break
+            errors.append(f"{name}: cannot import ({e})")
+    n_symbols = 0
+    for name, mod in mods.items():
+        exported = getattr(mod, "__all__", None)
+        if exported is None:
+            errors.append(f"{name}: locked module has no __all__")
+            continue
+        for sym in exported:
+            n_symbols += 1
+            if not hasattr(mod, sym):
+                errors.append(f"{name}.__all__ lists {sym!r} but the module "
+                              "does not define it")
+            if sym not in documented:
+                errors.append(
+                    f"{name}.{sym} is public (__all__) but never mentioned "
+                    "in docs/api.md — document it or un-export it"
+                )
+
+    universe: set[str] = set()
+    for mod in mods.values():
+        universe.update(getattr(mod, "__all__", ()))
+        universe.update(dir(mod))
+    for line, sym in heading_symbols(text):
+        if sym not in universe:
+            errors.append(
+                f"docs/api.md:{line}: heading documents `{sym}` but no "
+                "locked module exports it — vanished/renamed symbol"
+            )
+
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        print(f"[api-lock] FAILED ({len(errors)} problem(s))", file=sys.stderr)
+        return 1
+    print(f"[api-lock] OK: {n_symbols} public symbol(s) across "
+          f"{len(mods)} module(s) match docs/api.md")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
