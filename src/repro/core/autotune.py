@@ -45,7 +45,8 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 
-from ..kernels.kron_fused import fused_growth
+from ..kernels import emit as emit_mod
+from ..kernels.emit import StageInstr, StageProgram, fused_growth
 from .kron import KronProblem
 
 # TPU v5e hardware model (same constants as EXPERIMENTS.md).
@@ -179,12 +180,18 @@ class Stage:
     ``t_qs`` (fused stages only; application order, one entry per factor)
     tiles the composite Q axis of the fused kernel so its in-VMEM growth is
     bounded by ``prod(t_qs)/prod(P)`` — None means no Q-tiling.
+
+    ``acc_dtype`` (a dtype name, e.g. ``"float32"``) is THIS stage's
+    accumulation dtype — per-stage dtype policies flow from here through
+    ``lower`` into the emitted kernels and the VJP.  None promotes the input
+    dtype against f32 (the historical behavior).
     """
 
     factor_ids: tuple[int, ...]
     prekron: bool
     tiles: TileConfig
     t_qs: tuple[int, ...] | None = None
+    acc_dtype: str | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -231,8 +238,76 @@ def mirror_bwd_stages(
     for st, pprod, qprod, k_out in reversed(outs):
         s = k_out // qprod
         tiles = tune_sliced(prob.m, s, qprod, pprod, dtype_bytes=dtype_bytes)
-        bwd.append(Stage(st.factor_ids, st.prekron, tiles, st.t_qs))
+        bwd.append(Stage(st.factor_ids, st.prekron, tiles, st.t_qs, st.acc_dtype))
     return tuple(bwd)
+
+
+def lower(
+    plan: KronPlan,
+    ps: Sequence[int],
+    qs: Sequence[int],
+    *,
+    batched: bool = False,
+    acc_dtype: str | None = None,
+) -> StageProgram:
+    """Lower a ``KronPlan`` into the emitter's ``StageProgram`` IR.
+
+    This is the single contract between planning and execution: one typed
+    instruction per stage (``multiply`` or ``prekron``), each carrying its
+    per-factor ``(p_i, q_i)`` list, its tiles (``t_k = t_s * prod(P)``), its
+    batch tile (``t_b=None`` when ``batched=False`` — batch is then just a
+    leading grid axis, not a separate code path), its accumulation dtype
+    (``Stage.acc_dtype``, falling back to ``acc_dtype``), and the tuned
+    transposed M-tile from ``plan.bwd_stages`` so ``emit.transpose`` can swap
+    it in mechanically.  ``ps``/``qs`` are the problem-order factor dims.
+    """
+    rps = tuple(reversed(tuple(int(p) for p in ps)))
+    rqs = tuple(reversed(tuple(int(q) for q in qs)))
+    bwd_sts = plan.bwd_stages or tuple(reversed(plan.stages))
+    n_st = len(plan.stages)
+    instrs = []
+    for i, st in enumerate(plan.stages):
+        sps = tuple(rps[j] for j in st.factor_ids)
+        sqs = tuple(rqs[j] for j in st.factor_ids)
+        bst = bwd_sts[n_st - 1 - i]
+        t_qs = st.t_qs
+        if t_qs is None and (st.prekron or len(st.factor_ids) == 1):
+            # Single-multiply stages (one factor, or a prekron product): the
+            # stage's TUNED Q-tile is tiles.t_q — without it the chain
+            # template would see full Q and huge-Q factors would fail the
+            # VMEM growth check that the old kron_sliced kernel's t_q tiling
+            # made irrelevant.  Injected ONLY when full-Q growth actually
+            # overflows the budget: everything else keeps t_qs=None so the
+            # emitted grid matches the pre-refactor kernels exactly, and
+            # placeholder tiles (t_q=1 in engine-built fallback plans) are
+            # never mistaken for a tuned Q-tile.  Prekron stages' tiles are
+            # tuned for the combined product, so the 1-tuple applies to it
+            # (run_stage keeps a length-1 t_qs across the substitution).
+            eff_p = math.prod(sps)
+            eff_q = math.prod(sqs)
+            t_k = st.tiles.t_s * eff_p
+            full = st.tiles.t_m * t_k * max(1.0, eff_q / eff_p)
+            if (
+                (plan.t_b if batched else 1) * full > emit_mod.VMEM_BUDGET_ELEMS
+                and 1 < st.tiles.t_q < eff_q
+                and eff_q % st.tiles.t_q == 0
+            ):
+                t_qs = (st.tiles.t_q,)
+        instrs.append(
+            StageInstr(
+                kind=emit_mod.PREKRON if st.prekron else emit_mod.MULTIPLY,
+                ps=sps,
+                qs=sqs,
+                factor_ids=st.factor_ids,
+                t_m=st.tiles.t_m,
+                t_k=st.tiles.t_s * math.prod(sps),
+                t_qs=t_qs,
+                t_b=plan.t_b if batched else None,
+                acc_dtype=st.acc_dtype if st.acc_dtype is not None else acc_dtype,
+                t_m_bwd=bst.tiles.t_m,
+            )
+        )
+    return StageProgram(tuple(instrs), len(rps))
 
 
 def make_plan(
@@ -247,6 +322,7 @@ def make_plan(
     tune: str = "analytic",
     backend: str = "auto",
     cache_path: str | None = None,
+    acc_dtype: str | None = None,
 ) -> KronPlan:
     """Greedy plan over the reversed factor list (application order).
 
@@ -256,8 +332,14 @@ def make_plan(
          Q-tiling factors whose growth would otherwise end the group.
       3. Else a single tuned sliced multiply.
 
+    ``acc_dtype`` stamps every stage's accumulation dtype (per-stage policies
+    are set by replacing individual ``Stage.acc_dtype`` fields); None keeps
+    the promote-against-f32 default.
+
     ``tune="measure"`` wall-clock-ranks a narrowed set of plan variants via
-    ``measure_best`` and memoizes the winner in the on-disk plan cache.
+    ``measure_best`` — the candidates are EMITTED as StagePrograms and timed
+    through ``kernels.emit`` — and memoizes the winner in the on-disk plan
+    cache.
     """
     if tune == "measure":
         return _measured_plan(
@@ -270,6 +352,7 @@ def make_plan(
             vmem_budget_elems=vmem_budget_elems,
             backend=backend,
             cache_path=cache_path,
+            acc_dtype=acc_dtype,
         )
     if tune != "analytic":
         raise ValueError(f"unknown tune mode {tune!r}")
@@ -293,7 +376,7 @@ def make_plan(
             pp, qq = p * ps[i + 1], q * qs[i + 1]
             s = k // pp
             tiles = tune_sliced(prob.m, s, pp, qq, dtype_bytes=dtype_bytes)
-            stages.append(Stage((i, i + 1), True, tiles))
+            stages.append(Stage((i, i + 1), True, tiles, None, acc_dtype))
             k = s * qq
             i += 2
             continue
@@ -324,6 +407,28 @@ def make_plan(
         pprod = math.prod(ps[g] for g in group)
         qprod = math.prod(qs[g] for g in group)
         s = k // pprod
+        if len(group) > 1:
+            # Repair pass: the grouping loop's fit proxy measures growth
+            # against the RUNNING prefix product, but the emitted tile's
+            # T_K is a multiple of the FULL prod(P) — and the first factor
+            # is admitted with full Q unchecked — so early-prefix growth
+            # can exceed the budget even at the minimal (t_m=1, t_s=1)
+            # tile.  Shrink the worst-contributing Q-tile until it fits
+            # (t_qs=1 everywhere bounds growth at 1, so this terminates).
+            sps = [ps[g] for g in group]
+            sqs = [qs[g] for g in group]
+            while (
+                pprod * fused_growth(sps, sqs, group_tqs) > vmem_budget_elems
+                and any(t > 1 for t in group_tqs)
+            ):
+                i_big = max(
+                    range(len(group_tqs)),
+                    key=lambda j: group_tqs[j] / sps[j],
+                )
+                group_tqs[i_big] = max(
+                    (d for d in _divisors(sqs[i_big]) if d < group_tqs[i_big]),
+                    default=1,
+                )
         tiles = tune_sliced(prob.m, s, pprod, qprod, dtype_bytes=dtype_bytes)
         t_qs = tuple(group_tqs) if group_tqs != [qs[g] for g in group] else None
         if len(group) > 1:
@@ -339,7 +444,7 @@ def make_plan(
                 ts = max(d for d in _divisors(s) if d <= max_ts)
             if (t_m, ts) != (tiles.t_m, tiles.t_s):
                 tiles = TileConfig(t_m, ts, tiles.t_q)
-        stages.append(Stage(tuple(group), False, tiles, t_qs))
+        stages.append(Stage(tuple(group), False, tiles, t_qs, acc_dtype))
         k = s * qprod
         i = group[-1] + 1
     fwd = tuple(stages)
@@ -451,6 +556,7 @@ def make_batched_plan(
     backend: str = "auto",
     cache_path: str | None = None,
     g_k: int = 1,
+    acc_dtype: str | None = None,
 ) -> KronPlan:
     """Plan for ``batch`` independent copies of ``prob`` in one launch.
 
@@ -462,11 +568,15 @@ def make_batched_plan(
     re-tiled by ``_batch_tiled`` so every stage block carries ``t_b`` samples
     under the same VMEM budget.  ``enable_prekron=True`` lets the planner
     emit pre-kronization stages here too — the batched executor runs them as
-    a vmapped ``jnp.kron`` + one batched sliced multiply (engine
-    ``_stage_forward_batched``); callers enable it where the analytic model
+    a vmapped ``jnp.kron`` + one batched sliced multiply
+    (``emit.prekron_product`` inside ``run_stage``); callers enable it where
+    the analytic model
     favors it (TPU MXU, same gate as the single-problem path).
-    ``tune="measure"`` wall-clock ranks ``t_b`` variants and persists the
-    winner keyed on B.
+    ``tune="measure"`` wall-clock ranks ``t_b`` variants BY MEASURING THE
+    EMITTED PROGRAM (the same ``_measured_plan``/``measure_best`` path the
+    single-problem planner uses — one measured path, not a split) and
+    persists the winner keyed on B, with the widened candidate set recorded
+    in the plan-cache entry.
 
     ``g_k > 1`` selects DISTRIBUTED mode (``kron_matmul_batched_distributed``
     on a mesh with a ``G_K``-way model axis): ``prob`` is the per-device
@@ -498,6 +608,7 @@ def make_batched_plan(
             vmem_budget_elems=vmem_budget_elems,
             tune="analytic",
             backend=backend,
+            acc_dtype=acc_dtype,
         )
         return _batch_tiled(
             base, prob, batch, vmem_budget_elems, dtype_bytes,
@@ -515,11 +626,12 @@ def make_batched_plan(
             tune=tune,
             backend=backend,
             cache_path=cache_path,
+            acc_dtype=acc_dtype,
         )
     if tune == "measure":
-        return _measured_batched_plan(
+        return _measured_plan(
             prob,
-            batch,
+            batch=batch,
             dtype_bytes=dtype_bytes,
             enable_fusion=enable_fusion,
             enable_prekron=enable_prekron,
@@ -528,6 +640,7 @@ def make_batched_plan(
             vmem_budget_elems=vmem_budget_elems,
             backend=backend,
             cache_path=cache_path,
+            acc_dtype=acc_dtype,
         )
     if tune != "analytic":
         raise ValueError(f"unknown tune mode {tune!r}")
@@ -541,6 +654,7 @@ def make_batched_plan(
         vmem_budget_elems=vmem_budget_elems,
         tune="analytic",
         backend=backend,
+        acc_dtype=acc_dtype,
     )
     return _batch_tiled(base, prob, batch, vmem_budget_elems, dtype_bytes)
 
@@ -569,11 +683,13 @@ def plan_cache_key(
     vmem_budget_elems: int = 2 * 1024 * 1024,
     batch: int = 0,
     shared_factors: bool = True,
+    acc_dtype: str | None = None,
 ) -> str:
     """Cache key covers every plan-shaping input (defaults mirror make_plan):
     a hit must satisfy the caller's constraints, not just the problem shape.
     ``batch > 0`` marks a batched-plan entry (keyed on B and the factor-
-    sharing mode); 0 keeps the single-problem key format stable.
+    sharing mode); 0 keeps the single-problem key format stable, and a
+    non-default ``acc_dtype`` is appended only when set for the same reason.
     Distributed batched plans (``make_batched_plan(g_k > 1)``) are analytic-
     only and never cached, so the key carries no g_k field."""
     ps = ",".join(map(str, prob.ps))
@@ -585,6 +701,8 @@ def plan_cache_key(
     )
     if batch > 0:
         key += f";B={batch};shared={int(shared_factors)}"
+    if acc_dtype is not None:
+        key += f";acc={acc_dtype}"
     return key
 
 
@@ -594,6 +712,7 @@ def _stage_to_json(st: Stage) -> dict:
         "prekron": st.prekron,
         "tiles": list(st.tiles.as_tuple),
         "t_qs": list(st.t_qs) if st.t_qs is not None else None,
+        "acc_dtype": st.acc_dtype,
     }
 
 
@@ -603,6 +722,7 @@ def _stage_from_json(d: dict) -> Stage:
         bool(d["prekron"]),
         TileConfig(*d["tiles"]),
         tuple(d["t_qs"]) if d.get("t_qs") is not None else None,
+        d.get("acc_dtype"),
     )
 
 
@@ -672,53 +792,136 @@ def save_plan_cache(path: str, entries: dict) -> None:
             pass
 
 
-def _measured_plan(
-    prob: KronProblem,
-    *,
-    dtype_bytes: int,
-    backend: str,
-    cache_path: str | None,
-    **plan_kwargs,
-) -> KronPlan:
-    path = cache_path or default_cache_path()
-    key = plan_cache_key(prob, dtype_bytes, backend, **plan_kwargs)
-    entries = load_plan_cache(path)
-    hit = entries.get(key)
-    if hit is not None:
-        return plan_from_json(hit["plan"])
-
-    base = make_plan(
-        prob, dtype_bytes=dtype_bytes, tune="analytic", backend=backend, **plan_kwargs
+def _plan_vmem_legal(plan: KronPlan, prob: KronProblem, batched: bool) -> bool:
+    """Would every instruction of the lowered plan (both directions) fit the
+    Pallas VMEM budget?  Measured tuning filters its widened sweep with this
+    so an XLA wall clock (which ignores tiles) can never cache a plan that
+    crashes the Pallas backend later."""
+    from ..kernels.emit import (
+        PREKRON, VMEM_BUDGET_ELEMS, fused_growth, transposed_growth,
     )
-    # Narrowed candidate set (paper §4.3 structure): the analytic winner plus
-    # T_M sweeps applied to every stage, forward and backward.
+
+    try:
+        prog = lower(plan, prob.ps, prob.qs, batched=batched)
+    except Exception:
+        return False
+    for ins in prog.instrs:
+        if ins.kind == PREKRON:
+            eff_ps = (math.prod(ins.ps),)
+            eff_qs = (math.prod(ins.qs),)
+            t_qs = ins.t_qs if ins.t_qs and len(ins.t_qs) == 1 else None
+        else:
+            eff_ps, eff_qs, t_qs = ins.ps, ins.qs, ins.t_qs
+        tb = ins.t_b or 1
+        for growth_fn, t_m in (
+            (fused_growth, ins.t_m),
+            (transposed_growth, ins.t_m_bwd or ins.t_m),
+        ):
+            if tb * t_m * ins.t_k * growth_fn(eff_ps, eff_qs, t_qs) > (
+                VMEM_BUDGET_ELEMS
+            ):
+                return False
+    return True
+
+
+def _measured_candidates(
+    base: KronPlan, prob: KronProblem, batch: int | None
+) -> list[KronPlan]:
+    """Narrowed candidate set (paper §4.3 structure): the analytic winner
+    plus T_M sweeps applied to every stage (forward and backward) and — for
+    batched plans — a WIDENED t_b sweep over every divisor of B up to 32 (the
+    ROADMAP "batched measured tuning" follow-on: let the wall clock overrule
+    the analytic t_b/t_m trade).  Sweep variants that would overflow the
+    Pallas VMEM budget are dropped (``_plan_vmem_legal``): the wall clock
+    here may be an XLA one that ignores tiles, and a cached Pallas-illegal
+    winner would crash a later TPU process."""
     cands = [base]
     for t_m in (4, 8, 16, 32):
         if t_m > prob.m or prob.m % t_m:
             continue
         retile = lambda st: Stage(
             st.factor_ids, st.prekron,
-            TileConfig(t_m, st.tiles.t_s, st.tiles.t_q), st.t_qs,
+            TileConfig(t_m, st.tiles.t_s, st.tiles.t_q), st.t_qs, st.acc_dtype,
         )
         cands.append(
             KronPlan(
                 tuple(retile(s) for s in base.stages),
                 tuple(retile(s) for s in (base.bwd_stages or ())) or None,
+                base.t_b,
             )
         )
+    if batch is not None:
+        for plan in list(cands):
+            for t_b in (1, 2, 4, 8, 16, 32):
+                if t_b > batch or batch % t_b or t_b == plan.t_b:
+                    continue
+                cands.append(dataclasses.replace(plan, t_b=t_b))
+    return [
+        c for c in cands
+        if c is base or _plan_vmem_legal(c, prob, batch is not None)
+    ]
+
+
+def _measured_plan(
+    prob: KronProblem,
+    *,
+    batch: int | None = None,
+    dtype_bytes: int,
+    backend: str,
+    cache_path: str | None,
+    vmem_budget_elems: int = 2 * 1024 * 1024,
+    **plan_kwargs,
+) -> KronPlan:
+    """ONE measured-tuning path for single and batched plans.
+
+    Candidates are ranked by timing the engine's program-driven forward +
+    full VJP for each plan — i.e. the EMITTED programs as training actually
+    runs them: the lowered forward chain, its ``transpose`` for the input
+    cotangent, and the one-kernel factor-gradient stage backward
+    (``run_stage_grad``) — so what is ranked is exactly what will run.  The
+    winner is persisted in the plan cache together with the candidate set
+    that was measured (``"candidates"``) so a later widening of the sweep is
+    visible in the cache entry.
+    """
+    path = cache_path or default_cache_path()
+    key = plan_cache_key(
+        prob, dtype_bytes, backend,
+        vmem_budget_elems=vmem_budget_elems,
+        **plan_kwargs,
+        **({"batch": batch, "shared_factors": False} if batch is not None else {}),
+    )
+    entries = load_plan_cache(path)
+    hit = entries.get(key)
+    if hit is not None:
+        return plan_from_json(hit["plan"])
+
+    base = make_plan(
+        prob, dtype_bytes=dtype_bytes, tune="analytic", backend=backend,
+        vmem_budget_elems=vmem_budget_elems, **plan_kwargs,
+    )
+    if batch is not None:
+        base = _batch_tiled(base, prob, batch, vmem_budget_elems, dtype_bytes)
+    cands = _measured_candidates(base, prob, batch)
+
+    dtype = {2: jnp.bfloat16, 4: jnp.float32, 8: jnp.float64}.get(
+        dtype_bytes, jnp.float32
+    )
+    lead = () if batch is None else (batch,)
+    keys = jax.random.split(jax.random.PRNGKey(0), prob.n + 1)
+    x = jax.random.normal(keys[0], (*lead, prob.m, prob.k)).astype(dtype)
+    factors = tuple(
+        jax.random.normal(kk, (*lead, p, q)).astype(dtype)
+        for kk, p, q in zip(keys[1:], prob.ps, prob.qs)
+    )
     # Deferred import: engine imports this module at load time.
     from . import engine
 
-    dtype = {2: jnp.bfloat16, 4: jnp.float32, 8: jnp.float64}.get(dtype_bytes, jnp.float32)
-    keys = jax.random.split(jax.random.PRNGKey(0), prob.n + 1)
-    x = jax.random.normal(keys[0], (prob.m, prob.k)).astype(dtype)
-    factors = tuple(
-        jax.random.normal(kk, (p, q)).astype(dtype)
-        for kk, p, q in zip(keys[1:], prob.ps, prob.qs)
-    )
-
     def fn_of_plan(plan):
-        op = engine.KronOp(prob.ps, prob.qs, backend=backend, plan=plan)
+        op = engine.KronOp(
+            prob.ps, prob.qs, backend=backend, plan=plan,
+            **({} if batch is None else
+               {"batch": batch, "shared_factors": False}),
+        )
         f = jax.jit(
             jax.grad(
                 lambda x, fs: op(x, fs).sum().astype(jnp.float32),
@@ -737,78 +940,7 @@ def _measured_plan(
         "plan": plan_to_json(best),
         "seconds": seconds,
         "measured_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
-    }
-    save_plan_cache(path, entries)
-    return best
-
-
-def _measured_batched_plan(
-    prob: KronProblem,
-    batch: int,
-    *,
-    dtype_bytes: int,
-    enable_fusion: bool,
-    enable_prekron: bool,
-    prekron_max_p: int,
-    prekron_max_dim: int,
-    vmem_budget_elems: int,
-    backend: str,
-    cache_path: str | None,
-) -> KronPlan:
-    """Wall-clock-rank t_b variants of the batched per-sample plan; the cache
-    key carries B and the factor-sharing mode."""
-    path = cache_path or default_cache_path()
-    key = plan_cache_key(
-        prob, dtype_bytes, backend,
-        enable_fusion=enable_fusion, enable_prekron=enable_prekron,
-        prekron_max_p=prekron_max_p, prekron_max_dim=prekron_max_dim,
-        vmem_budget_elems=vmem_budget_elems,
-        batch=batch, shared_factors=False,
-    )
-    entries = load_plan_cache(path)
-    hit = entries.get(key)
-    if hit is not None:
-        return plan_from_json(hit["plan"])
-
-    base = make_plan(
-        prob, dtype_bytes=dtype_bytes, enable_fusion=enable_fusion,
-        enable_prekron=enable_prekron, prekron_max_p=prekron_max_p,
-        prekron_max_dim=prekron_max_dim, vmem_budget_elems=vmem_budget_elems,
-        tune="analytic", backend=backend,
-    )
-    tiled = _batch_tiled(base, prob, batch, vmem_budget_elems, dtype_bytes)
-    cands = [tiled]
-    for t_b in (1, 2, 4, 8, 16):
-        if t_b > batch or batch % t_b or t_b == tiled.t_b:
-            continue
-        cands.append(dataclasses.replace(tiled, t_b=t_b))
-    # Deferred import: engine imports this module at load time.
-    from . import engine
-
-    dtype = {2: jnp.bfloat16, 4: jnp.float32, 8: jnp.float64}.get(dtype_bytes, jnp.float32)
-    keys = jax.random.split(jax.random.PRNGKey(0), prob.n + 1)
-    x = jax.random.normal(keys[0], (batch, prob.m, prob.k)).astype(dtype)
-    factors = tuple(
-        jax.random.normal(kk, (batch, p, q)).astype(dtype)
-        for kk, p, q in zip(keys[1:], prob.ps, prob.qs)
-    )
-
-    def fn_of_plan(plan):
-        op = engine.KronOp(
-            prob.ps, prob.qs, batch=batch, shared_factors=False,
-            backend=backend, plan=plan,
-        )
-        f = jax.jit(lambda x, fs: op(x, fs))
-        return lambda: f(x, factors)
-
-    try:
-        best, seconds = measure_best(fn_of_plan, cands, warmup=1, iters=3)
-    except RuntimeError:
-        return tiled
-    entries[key] = {
-        "plan": plan_to_json(best),
-        "seconds": seconds,
-        "measured_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "candidates": [c.describe() for c in cands],
     }
     save_plan_cache(path, entries)
     return best
@@ -820,6 +952,7 @@ __all__ = [
     "KronPlan",
     "make_plan",
     "make_batched_plan",
+    "lower",
     "mirror_bwd_stages",
     "tune_sliced",
     "candidate_tiles",

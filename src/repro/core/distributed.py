@@ -28,10 +28,11 @@ factors run a batched ``_dist_body`` whose relocation all-to-all moves a
 a per-problem loop would issue B.  The payload per device per round becomes
 ``B * M_loc * C_loc * (G_K-1)/G_K`` (``comm_elems_per_device(batch=B)``); the
 LATENCY per round is paid once instead of B times, which is the whole win in
-the small-problem regime (see EXPERIMENTS.md §Distributed-Batched).  Local
-multiplies route through the PR-2 batch-grid kernels (``ops.fused_kron_*``
-``_batched``) under a plan from ``autotune.make_batched_plan(g_k=...)`` whose
-``t_b`` is traded against the per-round relocation slab.
+the small-problem regime (see EXPERIMENTS.md §Distributed-Batched).  Each
+round's local multiplies are ONE chain ``StageInstr`` on the unified emitter
+(``kernels/emit.py`` — the same template every other fused path runs; batched
+rounds set ``t_b`` from ``autotune.make_batched_plan(g_k=...)``, which trades
+it against the per-round relocation slab).
 """
 from __future__ import annotations
 
@@ -55,7 +56,7 @@ def _shard_map(fn, *, mesh, in_specs, out_specs):
 
     return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
 
-from ..kernels import ops
+from ..kernels import emit
 
 
 # ---------------------------------------------------------------------------
@@ -146,8 +147,37 @@ def _relocate(y: jax.Array, q_prod: int, g_k: int, model_axis: str) -> jax.Array
     return _relocate_batched(y[None], q_prod, g_k, model_axis)[0]
 
 
-def _local_multiply(y: jax.Array, f: jax.Array, backend: str) -> jax.Array:
-    return ops.sliced_multiply(y, f, backend=backend)
+def _local_multiply_round(
+    y: jax.Array, fs: Sequence[jax.Array], backend: str, t_b: int | None
+) -> jax.Array:
+    """One round's local multiplies as ONE chain instruction on the unified
+    emitter — the same template every other fused path runs.  ``t_b=None``
+    is the single-problem body (2-D operands); an int selects the batch-grid
+    kernels with ``t_b`` samples per block, tiles re-fitted per round because
+    the round grouping follows the COMM schedule, not the compute plan."""
+    fs = tuple(fs)
+    off = 0 if t_b is None else 1
+    ps = [int(f.shape[off]) for f in fs]
+    qs = [int(f.shape[off + 1]) for f in fs]
+    tb, t_m, t_k = _round_tiles(
+        int(y.shape[-2]), int(y.shape[-1]), ps, qs, t_b or 1
+    )
+    instr = emit.StageInstr(
+        kind=emit.MULTIPLY, ps=tuple(ps), qs=tuple(qs), t_m=t_m, t_k=t_k,
+        t_b=None if t_b is None else tb,
+    )
+    try:
+        return emit.run_stage(y, fs, instr, backend=backend)
+    except ValueError:
+        # Round chain cannot fit VMEM even at the degenerate tile (huge
+        # Q-growth rounds): fall back to per-factor multiplies — the
+        # pre-refactor behavior of the single-problem rounds, batch-
+        # polymorphic through the engine's conservative fallback.
+        from .engine import _sliced_batched
+
+        for f in fs:
+            y = _sliced_batched(y, f, backend)
+        return y
 
 
 def _dist_body(
@@ -166,11 +196,10 @@ def _dist_body(
     y = x_loc
     i = 0
     for r in rounds:
-        qprod = 1
-        for f in factors_rev[i : i + r]:
-            y = _local_multiply(y, f, backend)
-            qprod *= int(f.shape[1])
+        fs = factors_rev[i : i + r]
+        y = _local_multiply_round(y, fs, backend, None)
         if g_k > 1:
+            qprod = math.prod(int(f.shape[1]) for f in fs)
             y = _relocate(y, qprod, g_k, model_axis)
         i += r
     return y
@@ -197,15 +226,15 @@ def _relocate_batched(y: jax.Array, q_prod: int, g_k: int, model_axis: str) -> j
     return y5.reshape(b, m_loc, c)
 
 
-def _round_tiles_batched(
+def _round_tiles(
     m: int, k: int, ps: Sequence[int], qs: Sequence[int], t_b: int
 ) -> tuple[int, int, int]:
-    """(t_b, t_m, t_k) for one batched round chain that provably fits the
-    batch-grid kernels' VMEM legality (``t_b * t_m * t_k * growth <= budget``).
+    """(t_b, t_m, t_k) for one round chain that provably fits the unified
+    kernel's VMEM legality (``t_b * t_m * t_k * growth <= budget``).
     The round grouping follows the COMM schedule, not the compute plan's
     stages, so tiles are re-fitted here; prefers the planner's ``t_b`` and
     trades it down only if even (t_m=1, t_s=1) cannot hold it."""
-    from ..kernels.kron_fused import VMEM_BUDGET_ELEMS, fused_growth
+    from ..kernels.emit import VMEM_BUDGET_ELEMS, fused_growth
 
     pprod = math.prod(ps)
     s = k // pprod
@@ -223,16 +252,6 @@ def _round_tiles_batched(
                 return tb, t_m, max(fits) * pprod
             t_m = max((d for d in range(1, t_m) if m % d == 0), default=0)
     return 1, 1, pprod  # degenerate problems; XLA path ignores tiles anyway
-
-
-def _local_multiply_batched(
-    y: jax.Array, fs: Sequence[jax.Array], t_b: int, backend: str
-) -> jax.Array:
-    """One round's local multiplies as a single batch-grid fused chain."""
-    ps = [int(f.shape[1]) for f in fs]
-    qs = [int(f.shape[2]) for f in fs]
-    tb, t_m, t_k = _round_tiles_batched(int(y.shape[1]), int(y.shape[2]), ps, qs, t_b)
-    return ops.fused_kron_batched(y, fs, backend=backend, t_b=tb, t_m=t_m, t_k=t_k)
 
 
 def _dist_body_batched(
@@ -256,7 +275,7 @@ def _dist_body_batched(
     i = 0
     for r in rounds:
         fs = factors_rev[i : i + r]
-        y = _local_multiply_batched(y, fs, t_b, backend)
+        y = _local_multiply_round(y, fs, backend, t_b)
         if g_k > 1:
             qprod = math.prod(int(f.shape[2]) for f in fs)
             y = _relocate_batched(y, qprod, g_k, model_axis)
@@ -329,7 +348,7 @@ def run_batched_distributed_rounds(
 
     ``x``: (B, M, K) sharded ``P(None, data_axis, model_axis)``; per-sample
     factors ``F^i: (B, P_i, Q_i)`` replicated.  Each round's local multiplies
-    are one batch-grid kernel chain (``ops.fused_kron_batched``, ``t_b``
+    are one batch-grid chain instruction on the emitter (``t_b``
     samples per block) and each round's relocation is ONE all_to_all moving
     the ``(B·M_local, C_local)`` slab — where a per-problem loop would issue
     B collectives per round.  The plan (and its ``t_b``) is resolved by the

@@ -17,6 +17,16 @@ batched), instead of four parallel code paths.
     op_b = op.with_batch(8, shared_factors=False)
     op_d = op.with_mesh(mesh)                # round schedule resolved here
 
+Since the StageProgram refactor the spine is **program-driven end to end**:
+a resolved ``KronPlan`` is lowered once (``autotune.lower``, memoized in
+``_lowered``) into a ``kernels.emit.StageProgram``, the forward walks its
+instructions through the ONE kernel emitter (``emit.run_stage``), and the
+backward executes ``emit.transpose`` of the forward program — the twelve
+near-duplicate fused paths (fwd/transposed/bwd x single/batched x
+Pallas/XLA) and the hand-mirrored ``_*_batched`` twins this module used to
+carry are gone; batchedness lives in the program's ``t_b`` and the operand
+ranks, not in parallel code.
+
 Execution is expressed through two JAX primitives, ``kron_matmul_p`` and
 ``kron_matmul_batched_p``, whose **custom batching rules** are what make
 ``jax.vmap`` a first-class consumer: ``vmap`` over ``x`` alone collapses the
@@ -50,75 +60,66 @@ import jax.numpy as jnp
 from jax.extend.core import Primitive
 from jax.interpreters import batching, mlir
 
-from ..kernels import ops
+from ..kernels import emit, ops
 from . import autotune
 from .autotune import KronPlan, Stage, TileConfig
 from .kron import KronProblem
 
 
 # ---------------------------------------------------------------------------
-# Stage execution (single-problem forward)
+# Plan lowering (KronPlan -> StageProgram, memoized) + program execution
 # ---------------------------------------------------------------------------
 
 
-def _prekron_factor(stage_factors: Sequence[jax.Array]) -> jax.Array:
-    # stage_factors are in APPLICATION order (rev[i], rev[i+1], ...);
-    # the explicit Kronecker product must be formed in PROBLEM order,
-    # i.e. kron(rev[i+1], rev[i]):  x @ (A (x) B) applies B first.
-    f = stage_factors[-1]
-    for g in reversed(stage_factors[:-1]):
-        f = jnp.kron(f, g)
-    return f
+@functools.lru_cache(maxsize=512)
+def _lowered(
+    plan: KronPlan, ps: tuple[int, ...], qs: tuple[int, ...], batched: bool
+) -> emit.StageProgram:
+    """The op spine's bounded lowering memo: one StageProgram per (plan,
+    signature, batchedness).  The backward program is NOT cached separately —
+    it is ``emit.transpose`` of this one, derived mechanically."""
+    return autotune.lower(plan, ps, qs, batched=batched)
 
 
-def _stage_forward(
-    y: jax.Array, stage_factors: Sequence[jax.Array], stage: Stage, backend: str
-) -> jax.Array:
-    if stage.prekron:
-        f = _prekron_factor(stage_factors)
-        return ops.sliced_multiply(y, f, backend=backend, tiles=stage.tiles.as_tuple)
-    if len(stage_factors) == 1:
-        return ops.sliced_multiply(
-            y, stage_factors[0], backend=backend, tiles=stage.tiles.as_tuple
-        )
-    pprod = math.prod(int(f.shape[0]) for f in stage_factors)
-    t_k = stage.tiles.t_s * pprod
-    return ops.fused_kron(
-        y, stage_factors, backend=backend, t_m=stage.tiles.t_m, t_k=t_k,
-        t_qs=stage.t_qs,
+def _signature(factors: Sequence[jax.Array]) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    off = 1 if factors[0].ndim == 3 else 0
+    return (
+        tuple(int(f.shape[off]) for f in factors),
+        tuple(int(f.shape[off + 1]) for f in factors),
     )
 
 
 # ---------------------------------------------------------------------------
-# VJP building blocks (single-problem)
+# VJP building blocks (batch-polymorphic: one set for single AND batched)
 # ---------------------------------------------------------------------------
 
 
-def _sliced_vjp_input(g: jax.Array, f: jax.Array, backend: str = "xla") -> jax.Array:
-    """du for y = sliced(u, f):  du[m, s*P+p] = sum_q g[m, q*S+s] f[p, q].
-
-    This is the TRANSPOSED sliced multiply — itself Kron-shaped, with its
-    own Pallas kernel (kernels/kron_sliced_t.py) on TPU."""
-    return ops.sliced_multiply_t(g, f, backend=backend)
-
-
 def _sliced_vjp_factor(u: jax.Array, g: jax.Array, p: int, q: int) -> jax.Array:
-    """df[p,q] = sum_{m,s} u[m, s*P+p] g[m, q*S+s]."""
-    m, k = u.shape
-    s = k // p
+    """df[p,q] = sum_{m,s} u[m, s*P+p] g[m, q*S+s]; per-sample ``(B, P, Q)``
+    grads when ``u``/``g`` carry a leading batch axis."""
+    s = int(u.shape[-1]) // p
     acc = jnp.promote_types(g.dtype, jnp.float32)
-    u3 = u.reshape(m, s, p)
-    g3 = g.reshape(m, q, s)
-    return jnp.einsum("msp,mqs->pq", u3.astype(acc), g3.astype(acc))
+    if u.ndim == 2:
+        u3 = u.reshape(u.shape[0], s, p)
+        g3 = g.reshape(g.shape[0], q, s)
+        return jnp.einsum("msp,mqs->pq", u3.astype(acc), g3.astype(acc))
+    b, m = u.shape[0], u.shape[1]
+    u4 = u.reshape(b, m, s, p)
+    g4 = g.reshape(b, m, q, s)
+    return jnp.einsum("bmsp,bmqs->bpq", u4.astype(acc), g4.astype(acc))
 
 
 def _prekron_vjp(dK: jax.Array, stage_factors: Sequence[jax.Array]) -> tuple:
     """Split the cotangent of kron(rev[i+1], ..., rev[i]) back into per-factor
-    cotangents, in ``stage_factors`` (application) order."""
+    cotangents, in ``stage_factors`` (application) order; vmapped over the
+    leading batch axis for per-sample 3-D factors."""
+    stage_factors = tuple(stage_factors)
+    if dK.ndim == 3:
+        return jax.vmap(lambda dk, fs: _prekron_vjp(dk, fs))(dK, stage_factors)
     if len(stage_factors) == 1:
         return (dK,)
     a = stage_factors[0]
-    b = _prekron_factor(stage_factors[1:])
+    b = emit.prekron_product(stage_factors[1:])
     pa, qa = int(a.shape[0]), int(a.shape[1])
     pb, qb = int(b.shape[0]), int(b.shape[1])
     acc = jnp.promote_types(dK.dtype, jnp.float32)
@@ -128,147 +129,9 @@ def _prekron_vjp(dK: jax.Array, stage_factors: Sequence[jax.Array]) -> tuple:
     return (da,) + _prekron_vjp(db, stage_factors[1:])
 
 
-# ---------------------------------------------------------------------------
-# Planned backward (single-problem)
-# ---------------------------------------------------------------------------
-
-
-def _default_bwd_stages(plan: KronPlan) -> tuple[Stage, ...]:
-    return plan.bwd_stages or tuple(reversed(plan.stages))
-
-
-def _stage_bwd_per_factor(u, g, stage_factors, backend):
-    """Stage backward as per-factor planned ops — the fallback when the
-    one-kernel fused backward cannot hold the stage's growth in VMEM (e.g.
-    Q-tiled stages: the forward tiles Q, but the backward needs every
-    factor-gradient pair).  Still stage-local and dispatch-routed."""
-    inputs = [u]
-    for f in stage_factors[:-1]:
-        inputs.append(ops.sliced_multiply(inputs[-1], f, backend=backend))
-    dfs = [None] * len(stage_factors)
-    for idx in reversed(range(len(stage_factors))):
-        f = stage_factors[idx]
-        p, q = int(f.shape[0]), int(f.shape[1])
-        dfs[idx] = _sliced_vjp_factor(inputs[idx], g, p, q)
-        g = ops.sliced_multiply_t(g, f, backend=backend)
-    return g, tuple(dfs)
-
-
-def _planned_bwd(plan: KronPlan, backend: str, x, factors, g, f_pert: bool):
-    """Execute the backward plan: returns (dx, dfs_by_rev_id or None)."""
-    rev = tuple(reversed(factors))
-    stage_factors = [tuple(rev[i] for i in st.factor_ids) for st in plan.stages]
-    # Stage inputs rematerialized with the FORWARD plan (fused stages, not an
-    # unfused per-factor loop); under jit XLA CSEs these against the primal
-    # forward chain, so the remat is effectively free at stage granularity.
-    stage_inputs = []
-    y = x
-    for idx, (st, sf) in enumerate(zip(plan.stages, stage_factors)):
-        stage_inputs.append(y)
-        if idx + 1 < len(plan.stages):
-            y = _stage_forward(y, sf, st, backend)
-    bwd_sts = _default_bwd_stages(plan)
-    dfs_by_id: dict[int, jax.Array] = {}
-    for rev_idx in range(len(plan.stages) - 1, -1, -1):
-        st = plan.stages[rev_idx]
-        bst = bwd_sts[len(plan.stages) - 1 - rev_idx]
-        sf = stage_factors[rev_idx]
-        u = stage_inputs[rev_idx]
-        pprod = math.prod(int(f.shape[0]) for f in sf)
-        t_k = st.tiles.t_s * pprod
-        if st.prekron:
-            fk = _prekron_factor(sf)
-            if f_pert:
-                try:
-                    g, (dk,) = ops.fused_kron_bwd(
-                        u, g, (fk,), backend=backend, t_m=bst.tiles.t_m
-                    )
-                except ValueError:
-                    g, (dk,) = _stage_bwd_per_factor(u, g, (fk,), backend)
-                for fid, d in zip(st.factor_ids, _prekron_vjp(dk, sf)):
-                    dfs_by_id[fid] = d
-            else:
-                g = ops.sliced_multiply_t(
-                    g, fk, backend=backend, tiles=bst.tiles.as_tuple
-                )
-        elif f_pert:
-            try:
-                g, dfs = ops.fused_kron_bwd(
-                    u, g, sf, backend=backend, t_m=bst.tiles.t_m, t_k=t_k
-                )
-            except ValueError:
-                # Fused backward tile exceeds VMEM (Q-tiled forward stages
-                # have no Q relief on the gradient-pair side) — run the
-                # stage per factor, still through planned dispatch.
-                g, dfs = _stage_bwd_per_factor(u, g, sf, backend)
-            for fid, d in zip(st.factor_ids, dfs):
-                dfs_by_id[fid] = d
-        elif len(sf) == 1:
-            g = ops.sliced_multiply_t(
-                g, sf[0], backend=backend, tiles=bst.tiles.as_tuple
-            )
-        else:
-            g = ops.fused_kron_t(
-                g, sf, backend=backend, t_m=bst.tiles.t_m, t_k=t_k, t_qs=st.t_qs
-            )
-    return g, (dfs_by_id if f_pert else None)
-
-
-# ---------------------------------------------------------------------------
-# Batched stage execution + backward (per-sample factors)
-# ---------------------------------------------------------------------------
-
-
-def _prekron_factor_b(stage_factors: Sequence[jax.Array]) -> jax.Array:
-    """Per-sample explicit Kronecker product of a stage's (B, P, Q) factors —
-    the batched pre-kronization stage (ROADMAP item): one vmapped ``jnp.kron``
-    chain, consumed by a single batched sliced multiply."""
-    f = stage_factors[-1]
-    for g in reversed(stage_factors[:-1]):
-        f = jax.vmap(jnp.kron)(f, g)
-    return f
-
-
-def _prekron_vjp_b(dK: jax.Array, stage_factors: Sequence[jax.Array]) -> tuple:
-    """Per-sample cotangent split of the batched explicit Kronecker product."""
-    return jax.vmap(lambda dk, fs: _prekron_vjp(dk, fs))(dK, tuple(stage_factors))
-
-
-def _stage_forward_batched(
-    y: jax.Array, stage_factors: Sequence[jax.Array], stage: Stage, backend: str,
-    t_b: int,
-) -> jax.Array:
-    if stage.prekron:
-        fk = _prekron_factor_b(stage_factors)
-        t_k = stage.tiles.t_s * int(fk.shape[1])
-        return ops.fused_kron_batched(
-            y, (fk,), backend=backend, t_b=t_b, t_m=stage.tiles.t_m, t_k=t_k
-        )
-    # Single-factor stages run through the same batched fused dispatcher (a
-    # chain of length 1) — one uniform batch-grid entry point per stage.
-    pprod = math.prod(int(f.shape[1]) for f in stage_factors)
-    t_k = stage.tiles.t_s * pprod
-    return ops.fused_kron_batched(
-        y, stage_factors, backend=backend, t_b=t_b, t_m=stage.tiles.t_m,
-        t_k=t_k, t_qs=stage.t_qs,
-    )
-
-
-def _sliced_vjp_factor_b(u: jax.Array, g: jax.Array, p: int, q: int) -> jax.Array:
-    """Per-sample factor grad: df[b,p,q] = sum_{m,s} u[b,m,s*P+p] g[b,m,q*S+s]."""
-    b, m, k = u.shape
-    s = k // p
-    acc = jnp.promote_types(g.dtype, jnp.float32)
-    u4 = u.reshape(b, m, s, p)
-    g4 = g.reshape(b, m, q, s)
-    return jnp.einsum("bmsp,bmqs->bpq", u4.astype(acc), g4.astype(acc))
-
-
 def _conservative_batched_tiles(m: int, k: int, p: int, q: int) -> tuple[int, int]:
     """(t_m, t_k) for a single-factor batched call at t_b=1 that provably fits
     the kernel's VMEM budget — the fallback path must never itself raise."""
-    from ..kernels.kron_fused import VMEM_BUDGET_ELEMS
-
     t_m = min(8, m)
     while m % t_m:
         t_m -= 1
@@ -276,109 +139,140 @@ def _conservative_batched_tiles(m: int, k: int, p: int, q: int) -> tuple[int, in
     s = k // p
     t_s = max(
         d for d in range(1, s + 1)
-        if s % d == 0 and t_m * d * p * growth <= VMEM_BUDGET_ELEMS
+        if s % d == 0 and t_m * d * p * growth <= emit.VMEM_BUDGET_ELEMS
     )
     return t_m, t_s * p
 
 
 def _sliced_batched(y, f, backend):
-    """One batched sliced multiply through the fused dispatcher, tiled so the
-    Pallas kernel always fits VMEM."""
+    """One sliced multiply through the emitter, batch-polymorphic: 2-D
+    operands run the per-factor sliced kernel; 3-D per-sample operands run a
+    batched chain-of-one instruction tiled so Pallas always fits VMEM."""
+    if f.ndim == 2:
+        return ops.sliced_multiply(y, f, backend=backend)
     t_m, t_k = _conservative_batched_tiles(
         int(y.shape[1]), int(y.shape[2]), int(f.shape[1]), int(f.shape[2])
     )
-    return ops.fused_kron_batched(y, (f,), backend=backend, t_b=1, t_m=t_m, t_k=t_k)
+    instr = emit.StageInstr(
+        kind=emit.MULTIPLY, ps=(int(f.shape[1]),), qs=(int(f.shape[2]),),
+        t_m=t_m, t_k=t_k, t_b=1,
+    )
+    return emit.run_stage(y, (f,), instr, backend=backend)
 
 
 def _sliced_t_batched(g, f, backend):
+    """Transposed twin of ``_sliced_batched`` (the input has Q-sized slices,
+    dX has P-sized ones)."""
+    if f.ndim == 2:
+        return ops.sliced_multiply_t(g, f, backend=backend)
     p, q = int(f.shape[1]), int(f.shape[2])
-    # transposed call: the input has Q-sized slices, dX has P-sized ones.
     t_m, t_k = _conservative_batched_tiles(
         int(g.shape[1]), int(g.shape[2]) // q * p, p, q
     )
-    return ops.fused_kron_t_batched(g, (f,), backend=backend, t_b=1, t_m=t_m, t_k=t_k)
+    instr = emit.StageInstr(
+        kind=emit.TRANSPOSED_MULTIPLY, ps=(p,), qs=(q,), t_m=t_m, t_k=t_k, t_b=1
+    )
+    return emit.run_stage(g, (f,), instr, backend=backend)
 
 
-def _stage_bwd_per_factor_batched(u, g, stage_factors, backend):
-    """Batched analogue of _stage_bwd_per_factor: the fallback when the
-    one-kernel batched stage backward cannot hold the stage in VMEM.  Runs at
-    t_b=1 with conservatively-fitted tiles so it cannot overflow in turn."""
+def _stage_bwd_per_factor(u, g, stage_factors, backend):
+    """Stage backward as per-factor planned ops — the fallback when the
+    one-kernel fused backward cannot hold the stage's growth in VMEM (e.g.
+    Q-tiled stages: the forward tiles Q, but the backward needs every
+    factor-gradient pair).  Batch-polymorphic: the same loop serves single
+    2-D stages and per-sample 3-D ones through the deduped emit bodies."""
     inputs = [u]
     for f in stage_factors[:-1]:
         inputs.append(_sliced_batched(inputs[-1], f, backend))
     dfs = [None] * len(stage_factors)
     for idx in reversed(range(len(stage_factors))):
         f = stage_factors[idx]
-        p, q = int(f.shape[1]), int(f.shape[2])
-        dfs[idx] = _sliced_vjp_factor_b(inputs[idx], g, p, q)
+        p, q = int(f.shape[-2]), int(f.shape[-1])
+        dfs[idx] = _sliced_vjp_factor(inputs[idx], g, p, q)
         g = _sliced_t_batched(g, f, backend)
     return g, tuple(dfs)
 
 
-def _planned_bwd_batched(plan: KronPlan, backend: str, x, factors, g, f_pert: bool):
-    """Batched backward plan: (dx (B,M,K), per-sample dfs_by_rev_id or None).
+# ---------------------------------------------------------------------------
+# Program-driven backward (ONE implementation for single and batched)
+# ---------------------------------------------------------------------------
 
-    Mirrors _planned_bwd including the pre-kronization branch: a prekron
-    stage's cotangent is computed against the per-sample explicit product
-    and split back into per-factor cotangents with a vmapped ``_prekron_vjp``.
+
+def _program_bwd(plan: KronPlan, backend: str, x, factors, g, f_pert: bool,
+                 batched: bool):
+    """Execute the backward of a lowered plan: (dx, dfs_by_rev_id or None).
+
+    The dx chain is ``emit.transpose`` of the forward program — derived, not
+    hand-mirrored; batched vs single is carried entirely by the program's
+    ``t_b`` and the operands' rank.  Stage inputs are rematerialized with the
+    FORWARD program (under jit XLA CSEs them against the primal chain, so the
+    remat is effectively free at stage granularity).  When factor grads are
+    needed, each transposed instruction is replaced by the one-kernel stage
+    backward (``emit.run_stage_grad``), falling back to per-factor planned
+    ops when the stage's live set cannot fit VMEM.
     """
+    ps, qs = _signature(factors)
+    prog = _lowered(plan, ps, qs, batched)
     rev = tuple(reversed(factors))
-    stage_factors = [tuple(rev[i] for i in st.factor_ids) for st in plan.stages]
+    stage_factors = [tuple(rev[i] for i in ins.factor_ids) for ins in prog.instrs]
     stage_inputs = []
     y = x
-    for idx, (st, sf) in enumerate(zip(plan.stages, stage_factors)):
+    for idx, (ins, sf) in enumerate(zip(prog.instrs, stage_factors)):
         stage_inputs.append(y)
-        if idx + 1 < len(plan.stages):
-            y = _stage_forward_batched(y, sf, st, backend, plan.t_b)
-    bwd_sts = _default_bwd_stages(plan)
+        if idx + 1 < len(prog.instrs):
+            y = emit.run_stage(y, sf, ins, backend=backend)
+    bwd_prog = emit.transpose(prog)
+    n_st = len(prog.instrs)
     dfs_by_id: dict[int, jax.Array] = {}
-    for rev_idx in range(len(plan.stages) - 1, -1, -1):
-        st = plan.stages[rev_idx]
-        bst = bwd_sts[len(plan.stages) - 1 - rev_idx]
-        sf = stage_factors[rev_idx]
-        u = stage_inputs[rev_idx]
-        pprod = math.prod(int(f.shape[1]) for f in sf)
-        t_k = st.tiles.t_s * pprod
-        if st.prekron:
-            fk = _prekron_factor_b(sf)
+    for pos, t_ins in enumerate(bwd_prog.instrs):
+        fwd_idx = n_st - 1 - pos
+        f_ins = prog.instrs[fwd_idx]
+        sf = stage_factors[fwd_idx]
+        u = stage_inputs[fwd_idx]
+        if f_ins.kind == emit.PREKRON:
+            fk = emit.prekron_product(sf)
+            pk_ins = dataclasses.replace(
+                f_ins, kind=emit.MULTIPLY, ps=(int(fk.shape[-2]),),
+                qs=(int(fk.shape[-1]),),
+                t_qs=f_ins.t_qs if f_ins.t_qs and len(f_ins.t_qs) == 1 else None,
+            )
             if f_pert:
                 try:
-                    g, (dk,) = ops.fused_kron_bwd_batched(
-                        u, g, (fk,), backend=backend, t_b=plan.t_b,
-                        t_m=bst.tiles.t_m, t_k=t_k,
+                    g, (dk,) = emit.run_stage_grad(
+                        u, g, (fk,), dataclasses.replace(pk_ins, t_m=t_ins.t_m),
+                        backend=backend,
                     )
                 except ValueError:
-                    g, (dk,) = _stage_bwd_per_factor_batched(u, g, (fk,), backend)
-                for fid, d in zip(st.factor_ids, _prekron_vjp_b(dk, sf)):
+                    g, (dk,) = _stage_bwd_per_factor(u, g, (fk,), backend)
+                for fid, d in zip(f_ins.factor_ids, _prekron_vjp(dk, sf)):
                     dfs_by_id[fid] = d
             else:
                 try:
-                    g = ops.fused_kron_t_batched(
-                        g, (fk,), backend=backend, t_b=plan.t_b,
-                        t_m=bst.tiles.t_m, t_k=t_k,
-                    )
+                    g = emit.run_stage(g, (fk,), pk_ins.transpose(), backend=backend)
                 except ValueError:
                     g = _sliced_t_batched(g, fk, backend)
         elif f_pert:
             try:
-                g, dfs = ops.fused_kron_bwd_batched(
-                    u, g, sf, backend=backend, t_b=plan.t_b,
-                    t_m=bst.tiles.t_m, t_k=t_k,
+                # Grad instr: the forward stage shape with the transposed
+                # instruction's tuned M-tile (plan.bwd_stages via transpose()).
+                g, dfs = emit.run_stage_grad(
+                    u, g, sf, dataclasses.replace(f_ins, t_m=t_ins.t_m),
+                    backend=backend,
                 )
             except ValueError:
-                g, dfs = _stage_bwd_per_factor_batched(u, g, sf, backend)
-            for fid, d in zip(st.factor_ids, dfs):
+                # Fused backward tile exceeds VMEM (Q-tiled forward stages
+                # have no Q relief on the gradient-pair side) — run the
+                # stage per factor, still through planned dispatch.
+                g, dfs = _stage_bwd_per_factor(u, g, sf, backend)
+            for fid, d in zip(f_ins.factor_ids, dfs):
                 dfs_by_id[fid] = d
         else:
             try:
-                g = ops.fused_kron_t_batched(
-                    g, sf, backend=backend, t_b=plan.t_b, t_m=bst.tiles.t_m,
-                    t_k=t_k, t_qs=st.t_qs,
-                )
+                g = emit.run_stage(g, sf, t_ins, backend=backend)
             except ValueError:
-                # The planner validated t_b against FORWARD block sizes; the
-                # mirrored bwd t_m can overflow on the transposed shapes —
-                # walk the stage per factor with fitted tiles instead.
+                # The planner validated tiles against FORWARD block sizes;
+                # the transposed shapes can overflow — walk the stage per
+                # factor with fitted tiles instead.
                 for f in reversed(sf):
                     g = _sliced_t_batched(g, f, backend)
     return g, (dfs_by_id if f_pert else None)
@@ -477,17 +371,16 @@ kron_matmul_batched_p = Primitive("kron_matmul_batched")
 
 
 def _kron_impl(x, *factors, plan, backend, pctx):
-    rev = tuple(reversed(factors))
-    y = x
     if plan is None:
         # Paper-faithful unfused loop (the C1 baseline): application order is
         # last factor first (Algorithm 1).
-        for f in rev:
+        y = x
+        for f in reversed(factors):
             y = ops.sliced_multiply(y, f, backend=backend)
         return y
-    for stage in plan.stages:
-        y = _stage_forward(y, [rev[i] for i in stage.factor_ids], stage, backend)
-    return y
+    ps, qs = _signature(factors)
+    prog = _lowered(plan, ps, qs, False)
+    return emit.run_program(x, factors, prog, backend=backend)
 
 
 def _kron_abstract(x, *factors, plan, backend, pctx):
@@ -496,13 +389,9 @@ def _kron_abstract(x, *factors, plan, backend, pctx):
 
 
 def _kron_batched_impl(x, *factors, plan, backend, pctx):
-    rev = tuple(reversed(factors))
-    y = x
-    for stage in plan.stages:
-        y = _stage_forward_batched(
-            y, tuple(rev[i] for i in stage.factor_ids), stage, backend, plan.t_b
-        )
-    return y
+    ps, qs = _signature(factors)
+    prog = _lowered(plan, ps, qs, True)
+    return emit.run_program(x, factors, prog, backend=backend)
 
 
 def _kron_batched_abstract(x, *factors, plan, backend, pctx):
@@ -617,11 +506,19 @@ batching.primitive_batchers[kron_matmul_batched_p] = _kron_batched_batch_rule
 
 
 @functools.lru_cache(maxsize=256)
-def _single_fn(plan: KronPlan | None, backend: str, pctx: _PlanCtx):
-    """Custom-vjp function of (x (M, K), factors_tuple)."""
+def _kron_fn(plan: KronPlan | None, backend: str, pctx: _PlanCtx, batched: bool):
+    """THE custom-vjp closure: one factory for both execution modes.
+
+    ``batched=False``: (x (M, K), 2-D factors_tuple); ``batched=True``:
+    (x (B, M, K), per-sample 3-D factors).  The forward binds the matching
+    primitive; the backward is the program-driven ``_program_bwd`` either
+    way — batchedness lives in the lowered program's ``t_b`` and the operand
+    ranks, not in a second code path.
+    """
+    prim = kron_matmul_batched_p if batched else kron_matmul_p
 
     def fwd_only(x, factors):
-        return kron_matmul_p.bind(x, *factors, plan=plan, backend=backend, pctx=pctx)
+        return prim.bind(x, *factors, plan=plan, backend=backend, pctx=pctx)
 
     @jax.custom_vjp
     def kron_fn(x, factors):
@@ -641,10 +538,10 @@ def _single_fn(plan: KronPlan | None, backend: str, pctx: _PlanCtx):
         x, factors, f_pert = res
         if isinstance(g, jax.custom_derivatives.SymbolicZero):
             return jnp.zeros_like(x), tuple(jnp.zeros_like(f) for f in factors)
-        rev = tuple(reversed(factors))
-        if plan is None:
+        if plan is None and not batched:
             # Paper-faithful unfused loop (the C1 baseline's backward): one
             # transposed sliced multiply + factor contraction per factor.
+            rev = tuple(reversed(factors))
             inputs = []
             y = x
             for i, f in enumerate(rev):
@@ -655,49 +552,11 @@ def _single_fn(plan: KronPlan | None, backend: str, pctx: _PlanCtx):
             for i in reversed(range(len(rev))):  # last applied stage first
                 f = rev[i]
                 p, q = int(f.shape[0]), int(f.shape[1])
-                u = inputs[i]
-                dfs_rev.append(_sliced_vjp_factor(u, g, p, q).astype(f.dtype))
-                g = _sliced_vjp_input(g, f, backend=backend)
+                dfs_rev.append(_sliced_vjp_factor(inputs[i], g, p, q).astype(f.dtype))
+                g = ops.sliced_multiply_t(g, f, backend=backend)
             dfactors = tuple(dfs_rev)  # appended rev[n-1]..rev[0] == F^1..F^N
             return g, dfactors
-        dx, dfs_by_id = _planned_bwd(plan, backend, x, factors, g, f_pert)
-        nf = len(factors)
-        if dfs_by_id is None:
-            dfactors = tuple(jnp.zeros_like(f) for f in factors)
-        else:
-            dfactors = tuple(
-                dfs_by_id[nf - 1 - j].astype(factors[j].dtype) for j in range(nf)
-            )
-        return dx.astype(x.dtype), dfactors
-
-    kron_fn.defvjp(kron_fwd, kron_bwd, symbolic_zeros=True)
-    return kron_fn
-
-
-@functools.lru_cache(maxsize=256)
-def _batched_fn(plan: KronPlan, backend: str, pctx: _PlanCtx):
-    """Custom-vjp function of (x (B, M, K), factors each (B, P_i, Q_i))."""
-
-    def fwd_only(x, factors):
-        return kron_matmul_batched_p.bind(
-            x, *factors, plan=plan, backend=backend, pctx=pctx
-        )
-
-    @jax.custom_vjp
-    def kron_fn(x, factors):
-        return fwd_only(x, factors)
-
-    def kron_fwd(x_p, factors_p):
-        x = x_p.value
-        factors = tuple(f.value for f in factors_p)
-        f_pert = any(bool(f.perturbed) for f in factors_p)
-        return fwd_only(x, factors), (x, factors, f_pert)
-
-    def kron_bwd(res, g):
-        x, factors, f_pert = res
-        if isinstance(g, jax.custom_derivatives.SymbolicZero):
-            return jnp.zeros_like(x), tuple(jnp.zeros_like(f) for f in factors)
-        dx, dfs_by_id = _planned_bwd_batched(plan, backend, x, factors, g, f_pert)
+        dx, dfs_by_id = _program_bwd(plan, backend, x, factors, g, f_pert, batched)
         nf = len(factors)
         if dfs_by_id is None:
             dfactors = tuple(jnp.zeros_like(f) for f in factors)
@@ -891,7 +750,7 @@ class KronOp:
             plan = self._single_plan(rows, dtype_bytes)
             self._remember(self._plans, key, plan)
             fn = self._remember(
-                self._fns, key, _single_fn(plan, self.backend, self._ctx)
+                self._fns, key, _kron_fn(plan, self.backend, self._ctx, False)
             )
         return fn
 
@@ -902,7 +761,7 @@ class KronOp:
             plan = self._batched_plan(b, m, dtype_bytes)
             self._remember(self._plans, key, plan)
             fn = self._remember(
-                self._fns, key, _batched_fn(plan, self.backend, self._ctx)
+                self._fns, key, _kron_fn(plan, self.backend, self._ctx, True)
             )
         return fn
 

@@ -1,7 +1,13 @@
 """Pallas TPU kernels for the Kron-Matmul hot spots the paper optimizes.
 
-kron_sliced.py — one sliced multiply (contributions C1+C2), BlockSpec-tiled.
-kron_fused.py  — VMEM-resident chain of sliced multiplies (contribution C3).
-ops.py         — jit'd wrappers + backend dispatch (pallas on TPU, xla else).
-ref.py         — pure-jnp oracles for the allclose sweeps in tests/.
+emit.py         — StageProgram IR + THE kernel emitter: one parameterized
+                  Pallas chain template (+ stage-backward template) and one
+                  XLA lax.scan executor behind every fused path.
+kron_sliced.py  — one sliced multiply (contributions C1+C2), BlockSpec-tiled.
+kron_sliced_t.py— its transpose (the per-factor backward kernel).
+kron_fused.py   — DEPRECATED shims: the legacy fused forward entry points.
+kron_fused_t.py — DEPRECATED shims: legacy transposed/backward entry points.
+ops.py          — sliced-multiply backend dispatch + the six deprecated
+                  fused_kron* one-instruction shims over emit.
+ref.py          — pure-jnp oracles for the allclose sweeps in tests/.
 """

@@ -1,0 +1,1111 @@
+"""StageProgram IR + the ONE kernel emitter behind every fused Kron-Matmul path.
+
+Before this module the engine's twelve fused paths — forward / transposed /
+backward x single / batched, each written once as a Pallas kernel
+(kron_fused.py / kron_fused_t.py) and once as an XLA scan analogue (ops.py) —
+were near-duplicate code.  The IR collapses them:
+
+* a ``StageInstr`` is one kernel launch, typed ``multiply`` /
+  ``transposed_multiply`` / ``prekron`` and carrying everything the emitter
+  needs (``ps, qs, t_m, t_k, t_qs, t_b, direction, acc_dtype``).  ``t_b=None``
+  means *unbatched*: batch is just a leading grid axis of size one, not a
+  separate code path.
+* a ``StageProgram`` is a tuple of instructions; ``transpose(prog)`` derives
+  the backward program mechanically (reverse the instructions, flip each
+  kind/direction) — no hand-mirrored stage lists anywhere.
+* ``run_stage`` / ``run_stage_grad`` / ``run_program`` / ``emit`` interpret
+  any program through exactly ONE parameterized Pallas kernel template
+  (``_chain_kernel``, plus ``_grad_kernel`` for the factor-gradient stage
+  backward) and ONE XLA ``lax.scan`` executor (``_chain_xla`` / ``_grad_xla``).
+
+Planner lowering lives in ``core.autotune.lower`` (KronPlan -> StageProgram);
+this module is deliberately core-free so both layers can import it.
+
+Per-stage heterogeneity is first-class: every instruction carries its own
+``(p_i, q_i)`` list and its own ``acc_dtype``, so mixed-shape chains like
+``ps=(8, 16, 32)`` and per-stage accumulation policies flow through planning,
+emission, and the VJP without new code paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import os
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Conservative usable-VMEM budget (f32 elements): ~16 MiB VMEM, keep half for
+# double buffering / Mosaic temporaries.
+VMEM_BUDGET_ELEMS = 2 * 1024 * 1024
+
+# CPU cache budget for the scan-fused XLA executor (the L2/L3 analogue of the
+# Pallas kernels' VMEM budget): chains whose whole working set fits are run
+# UNTILED — one set of full-size GEMMs beats a serializing scan when nothing
+# spills (measured: the B=8, M=64, (16,16)^3 batched chain is ~1.8x faster
+# untiled, while the M=256, (16,16)^4 fig_bwd chain at 64 MB still tiles).
+XLA_CACHE_BUDGET_BYTES = 16 * 1024 * 1024
+
+MULTIPLY = "multiply"
+TRANSPOSED_MULTIPLY = "transposed_multiply"
+PREKRON = "prekron"
+_KINDS = (MULTIPLY, TRANSPOSED_MULTIPLY, PREKRON)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_backend(backend: str) -> str:
+    """Resolve ``"auto"``: pallas on TPU, xla elsewhere.
+
+    ``FASTKRON_FORCE_BACKEND=pallas|xla`` overrides the auto rule (explicit
+    backends are untouched) — CI's interpret-mode matrix uses it to route
+    every auto-dispatched path through the emitted Pallas templates on a
+    CPU runner.
+    """
+    if backend == "auto":
+        forced = os.environ.get("FASTKRON_FORCE_BACKEND")
+        if forced in ("pallas", "xla"):
+            return forced
+        return "pallas" if _on_tpu() else "xla"
+    return backend
+
+
+def acc_dtype_for(dtype) -> jnp.dtype:
+    """f32 accumulation for <=f32 inputs, f64 for f64 (never truncate)."""
+    return jnp.promote_types(dtype, jnp.float32)
+
+
+def _resolve_acc(acc_dtype: str | None, dtype):
+    if acc_dtype is None:
+        return acc_dtype_for(dtype)
+    return jnp.dtype(acc_dtype)
+
+
+# ---------------------------------------------------------------------------
+# The IR
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StageInstr:
+    """One kernel launch of a stage program.
+
+    ``ps``/``qs`` are the per-chained-factor dims in APPLICATION order (the
+    factor applied first is entry 0).  ``kind`` selects the data flow:
+    ``multiply`` chains sliced multiplies, ``transposed_multiply`` un-applies
+    them (the input cotangent), ``prekron`` first combines the stage's
+    factors into their explicit Kronecker product and applies it as one
+    sliced multiply (forward or transposed per ``direction``).
+
+    Tiling: ``t_m`` rows, ``t_k`` input columns (a multiple of ``prod(ps)``;
+    None = full), ``t_qs`` per-factor Q-tiles, ``t_b`` samples per block —
+    ``t_b=None`` means unbatched, executed as a batch-of-one grid.
+    ``acc_dtype`` (a dtype name, e.g. ``"float32"``) is this stage's
+    accumulation dtype; None promotes the input dtype against f32.
+    ``t_m_bwd`` is the planner's tuned M-tile for the transposed instruction;
+    ``transpose()`` swaps it in mechanically.
+    """
+
+    kind: str
+    ps: tuple[int, ...]
+    qs: tuple[int, ...]
+    factor_ids: tuple[int, ...] = ()
+    t_m: int = 8
+    t_k: int | None = None
+    t_qs: tuple[int, ...] | None = None
+    t_b: int | None = None
+    direction: str = "fwd"
+    acc_dtype: str | None = None
+    t_m_bwd: int | None = None
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown stage kind {self.kind!r}")
+        if self.direction not in ("fwd", "bwd"):
+            raise ValueError(f"unknown direction {self.direction!r}")
+        if len(self.ps) != len(self.qs) or not self.ps:
+            raise ValueError(f"ps/qs must be equal-length, non-empty: {self}")
+        # kind implies direction for the non-prekron instructions.
+        if self.kind == MULTIPLY and self.direction != "fwd":
+            object.__setattr__(self, "direction", "fwd")
+        if self.kind == TRANSPOSED_MULTIPLY and self.direction != "bwd":
+            object.__setattr__(self, "direction", "bwd")
+
+    @property
+    def pprod(self) -> int:
+        return math.prod(self.ps)
+
+    @property
+    def qprod(self) -> int:
+        return math.prod(self.qs)
+
+    @property
+    def batched(self) -> bool:
+        return self.t_b is not None
+
+    def transpose(self) -> "StageInstr":
+        """The instruction computing this instruction's input cotangent."""
+        if self.kind == PREKRON:
+            kind = PREKRON
+            direction = "bwd" if self.direction == "fwd" else "fwd"
+        elif self.kind == MULTIPLY:
+            kind, direction = TRANSPOSED_MULTIPLY, "bwd"
+        else:
+            kind, direction = MULTIPLY, "fwd"
+        return dataclasses.replace(
+            self,
+            kind=kind,
+            direction=direction,
+            t_m=self.t_m_bwd if self.t_m_bwd is not None else self.t_m,
+            t_m_bwd=self.t_m,
+        )
+
+    def describe(self) -> str:
+        tag = f"{self.kind}[{list(self.ps)}x{list(self.qs)}]@(t_m={self.t_m},t_k={self.t_k}"
+        if self.t_qs is not None:
+            tag += f",t_qs={list(self.t_qs)}"
+        if self.t_b is not None:
+            tag += f",t_b={self.t_b}"
+        if self.acc_dtype is not None:
+            tag += f",acc={self.acc_dtype}"
+        return tag + ")"
+
+
+@dataclasses.dataclass(frozen=True)
+class StageProgram:
+    """A planner-emitted sequence of stage instructions.
+
+    ``factor_ids`` on each instruction index into the REVERSED (application
+    order) factor list of an ``n_factors``-long chain; ``run_program`` /
+    ``emit`` take factors in PROBLEM order and reverse internally.
+    """
+
+    instrs: tuple[StageInstr, ...]
+    n_factors: int
+
+    def __post_init__(self):
+        seen = [i for ins in self.instrs for i in ins.factor_ids]
+        if sorted(seen) != list(range(self.n_factors)):
+            raise ValueError(
+                f"program instrs must cover factors 0..{self.n_factors - 1} "
+                f"exactly once, got {seen}"
+            )
+
+    @property
+    def batched(self) -> bool:
+        return any(ins.batched for ins in self.instrs)
+
+    def describe(self) -> str:
+        return " -> ".join(ins.describe() for ins in self.instrs)
+
+
+def transpose(prog: StageProgram) -> StageProgram:
+    """The backward program: reversed instructions, each transposed.
+
+    ``emit(transpose(prog))`` computes the input cotangent of ``emit(prog)``
+    (the ``jax.vjp`` of the emitted function with respect to ``x``) — this is
+    how the engine derives its backward pass instead of hand-mirroring stage
+    lists.  ``transpose`` is an involution up to tile hints.
+    """
+    return StageProgram(
+        tuple(ins.transpose() for ins in reversed(prog.instrs)), prog.n_factors
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batch-polymorphic primitive bodies (the deduped `_sliced_body*` family)
+# ---------------------------------------------------------------------------
+
+
+def sliced_apply(y: jax.Array, f: jax.Array, acc_dtype=None) -> jax.Array:
+    """One FastKron sliced multiply, batch-polymorphic.
+
+    ``y: (M, S*P)`` with ``f: (P, Q)`` -> ``(M, Q*S)``; or ``y: (B, M, S*P)``
+    with per-sample ``f: (B, P, Q)`` -> ``(B, M, Q*S)``.  A 3-D ``y`` with a
+    shared 2-D ``f`` folds the batch into rows (pure row-parallelism).
+    """
+    acc = _resolve_acc(None, y.dtype) if acc_dtype is None else acc_dtype
+    if f.ndim == 2:
+        if y.ndim == 3:
+            b, m, k = y.shape
+            return sliced_apply(y.reshape(b * m, k), f, acc).reshape(b, m, -1)
+        m, k = y.shape
+        p, q = f.shape
+        s = k // p
+        out = jax.lax.dot_general(
+            y.reshape(m * s, p), f, (((1,), (0,)), ((), ())),
+            preferred_element_type=acc,
+        )
+        return (
+            jnp.swapaxes(out.reshape(m, s, q), 1, 2).reshape(m, q * s)
+            .astype(y.dtype)
+        )
+    b, m, k = y.shape
+    p, q = int(f.shape[1]), int(f.shape[2])
+    s = k // p
+    out = jax.lax.dot_general(
+        y.reshape(b, m * s, p), f, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=acc,
+    )
+    return (
+        jnp.swapaxes(out.reshape(b, m, s, q), 2, 3).reshape(b, m, q * s)
+        .astype(y.dtype)
+    )
+
+
+def sliced_apply_t(g: jax.Array, f: jax.Array, acc_dtype=None) -> jax.Array:
+    """Transposed sliced multiply (the input cotangent), batch-polymorphic.
+
+    ``g: (M, Q*S)`` with ``f: (P, Q)`` -> ``(M, S*P)``; batched analogue with
+    3-D ``g``/``f`` as in ``sliced_apply``.
+    """
+    acc = _resolve_acc(None, g.dtype) if acc_dtype is None else acc_dtype
+    if f.ndim == 2:
+        if g.ndim == 3:
+            b, m, l = g.shape
+            return sliced_apply_t(g.reshape(b * m, l), f, acc).reshape(b, m, -1)
+        m, l = g.shape
+        p, q = f.shape
+        s = l // q
+        out = jax.lax.dot_general(
+            jnp.swapaxes(g.reshape(m, q, s), 1, 2).reshape(m * s, q),
+            jnp.swapaxes(f, 0, 1),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=acc,
+        )
+        return out.reshape(m, s * p).astype(g.dtype)
+    b, m, l = g.shape
+    p, q = int(f.shape[1]), int(f.shape[2])
+    s = l // q
+    g2 = jnp.swapaxes(g.reshape(b, m, q, s), 2, 3).reshape(b, m * s, q)
+    out = jax.lax.dot_general(
+        g2, f, (((2,), (2,)), ((0,), (0,))), preferred_element_type=acc
+    )
+    return out.reshape(b, m, s * p).astype(g.dtype)
+
+
+def prekron_product(stage_factors: Sequence[jax.Array]) -> jax.Array:
+    """Explicit Kronecker product of a stage's factors, batch-polymorphic.
+
+    ``stage_factors`` are in APPLICATION order (rev[i], rev[i+1], ...); the
+    explicit product must be formed in PROBLEM order, i.e. kron(rev[i+1],
+    rev[i]): ``x @ (A (x) B)`` applies B first.  3-D per-sample factors run a
+    vmapped ``jnp.kron`` chain.
+    """
+    stage_factors = tuple(stage_factors)
+    kron = jax.vmap(jnp.kron) if stage_factors[0].ndim == 3 else jnp.kron
+    f = stage_factors[-1]
+    for g in reversed(stage_factors[:-1]):
+        f = kron(f, g)
+    return f
+
+
+# ---------------------------------------------------------------------------
+# VMEM-growth models (shared by the emitter and the planner)
+# ---------------------------------------------------------------------------
+
+
+def fused_growth(
+    ps: Sequence[int], qs: Sequence[int], t_qs: Sequence[int] | None = None
+) -> float:
+    """Max live-set multiplier over chain prefixes, with optional Q-tiling."""
+    t_qs = tuple(t_qs) if t_qs is not None else tuple(qs)
+    g = 1.0
+    pprod = qprod = 1
+    for p, tq in zip(ps, t_qs):
+        pprod *= p
+        qprod *= tq
+        g = max(g, qprod / pprod)
+    return g
+
+
+def transposed_growth(
+    ps: Sequence[int], qs: Sequence[int], t_qs: Sequence[int] | None = None
+) -> float:
+    """Max live-set multiplier of the inverse chain, relative to T_K.
+
+    Walking the chain backwards, the per-tile column count goes
+    ``prod(t_q)*ts_out -> ... -> t_k``; the max over those states bounds VMEM.
+    """
+    t_qs = tuple(t_qs) if t_qs is not None else tuple(qs)
+    pprod = math.prod(ps)
+    cols = math.prod(t_qs) / pprod  # in units of t_k
+    g = max(1.0, cols)
+    for p, tq in zip(reversed(tuple(ps)), reversed(t_qs)):
+        cols = cols / tq * p
+        g = max(g, cols)
+    return g
+
+
+def max_n_fused(t_k: int, p: int) -> int:
+    """Paper: N_fused = floor(log_P T_K)."""
+    n = 0
+    while t_k >= p and t_k % p == 0:
+        t_k //= p
+        n += 1
+    return n
+
+
+# ---------------------------------------------------------------------------
+# THE Pallas kernel template (chain, both directions, batch grid axis)
+# ---------------------------------------------------------------------------
+
+
+def _chain_kernel(
+    x_ref, *refs, ps: tuple[int, ...], qs: tuple[int, ...], direction: str,
+    acc_dtype,
+):
+    """One parameterized kernel body for every fused chain.
+
+    Tiles always carry a leading batch axis (size 1 when the instruction is
+    unbatched); every GEMM is a ``dot_general`` with a batch dimension, so
+    sample b's tile only ever contracts against sample b's factor slice.
+    ``direction="fwd"`` chains the factors (Algorithm 1 order, f_refs[0]
+    first); ``"bwd"`` inverts the chain with transposed contractions and
+    accumulates partial dX tiles across the sequential Q-tile grid axis.
+    """
+    f_refs, (y_ref,) = refs[:-1], refs[-1:]
+    t_b, t_m = x_ref.shape[0], x_ref.shape[1]
+    if direction == "fwd":
+        y = x_ref[...]
+        cols = x_ref.shape[2]
+        for f_ref, p, q in zip(f_refs, ps, qs):
+            s = cols // p
+            acc = jax.lax.dot_general(
+                y.reshape(t_b, t_m * s, p), f_ref[...],
+                (((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=acc_dtype,
+            )  # (t_b, t_m*s, q)
+            # FastKron layout (b, m, q, s) — stays in VMEM between factors.
+            y = jnp.swapaxes(acc.reshape(t_b, t_m, s, q), 2, 3).reshape(
+                t_b, t_m, q * s
+            )
+            cols = q * s
+        y_ref[...] = y.reshape(y_ref.shape).astype(y_ref.dtype)
+        return
+    # Transposed chain: the forward applied f_refs[0] first, so its transpose
+    # is applied last; the most-recently-applied factor's q is the major
+    # digit of the current layout and is contracted first.
+    jq = pl.program_id(3)
+    g = x_ref[...].reshape(t_b, t_m, -1).astype(acc_dtype)
+    cols = g.shape[2]
+    for f_ref, p, q in reversed(list(zip(f_refs, ps, qs))):
+        s = cols // q
+        g2 = jnp.swapaxes(g.reshape(t_b, t_m, q, s), 2, 3).reshape(
+            t_b, t_m * s, q
+        )
+        acc = jax.lax.dot_general(
+            g2, f_ref[...], (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=acc_dtype,
+        )  # (t_b, t_m*s, p)
+        g = acc.reshape(t_b, t_m, s * p)
+        cols = s * p
+    # y_ref is acc_dtype (cast to the input dtype by the wrapper) so the
+    # cross-Q-tile accumulation never rounds through a low-precision type.
+    part = g.astype(y_ref.dtype)
+
+    @pl.when(jq == 0)
+    def _init():
+        y_ref[...] = part
+
+    @pl.when(jq > 0)
+    def _acc():
+        y_ref[...] += part
+
+
+def _q_tiling(qs, t_qs, n):
+    nq = tuple(q // t for q, t in zip(qs, t_qs))
+    strides = [1] * n
+    for i in range(1, n):
+        strides[i] = strides[i - 1] * nq[i - 1]
+
+    def q_digit(jq, i):
+        return (jq // strides[i]) % nq[i]
+
+    return math.prod(nq), q_digit
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "t_b", "t_m", "t_k", "t_qs", "direction", "interpret", "acc_dtype",
+        "vmem_budget_elems",
+    ),
+)
+def chain_pallas(
+    x: jax.Array,
+    *factors: jax.Array,
+    t_b: int = 1,
+    t_m: int = 8,
+    t_k: int | None = None,
+    t_qs: tuple[int, ...] | None = None,
+    direction: str = "fwd",
+    interpret: bool = False,
+    acc_dtype: str | None = None,
+    vmem_budget_elems: int = VMEM_BUDGET_ELEMS,
+) -> jax.Array:
+    """The single Pallas entry point for any chain instruction.
+
+    ``x: (B, M, C)``; each factor ``(B, P_i, Q_i)`` (B=1 replays the
+    unbatched kernels).  ``direction="fwd"``: C = K, returns the
+    ``(B, M, prod(Q) * K/prod(P))`` chain output.  ``direction="bwd"``:
+    ``x`` is the cotangent at C = prod(Q)*S, returns dX ``(B, M, prod(P)*S)``.
+    The grid is always ``(B/t_b, M/t_m, Q-tiles, K/t_k)`` (Q-tiles innermost
+    for "bwd": the sequential accumulation axis).
+    """
+    acc = _resolve_acc(acc_dtype, x.dtype)
+    b, m, cols = x.shape
+    n = len(factors)
+    ps = tuple(int(f.shape[1]) for f in factors)
+    qs = tuple(int(f.shape[2]) for f in factors)
+    for f in factors:
+        if int(f.shape[0]) != b:
+            raise ValueError(f"factor batch {f.shape[0]} != x batch {b}")
+    pprod = math.prod(ps)
+    qprod = math.prod(qs)
+    if direction == "fwd":
+        if cols % pprod:
+            raise ValueError(f"K={cols} not divisible by prod(P)={pprod}")
+        k = cols
+    else:
+        if cols % qprod:
+            raise ValueError(f"dY cols {cols} not divisible by prod(Q)={qprod}")
+        k = cols // qprod * pprod
+    s_out = k // pprod
+    t_b = min(t_b, b)
+    t_m = min(t_m, m)
+    t_k = min(t_k or k, k)
+    if t_qs is None:
+        t_qs = qs
+    t_qs = tuple(min(t, q) for t, q in zip(t_qs, qs))
+    if len(t_qs) != n:
+        raise ValueError(f"t_qs needs one entry per factor: {t_qs} vs {n}")
+    if any(q % t for q, t in zip(qs, t_qs)):
+        raise ValueError(f"t_qs must divide factor Q dims: {t_qs} vs {qs}")
+    # Fusion validity: every slice of every fused stage stays inside the tile.
+    if t_k % pprod:
+        raise ValueError(f"T_K={t_k} must be a multiple of prod(P)={pprod}")
+    growth_fn = fused_growth if direction == "fwd" else transposed_growth
+    growth = growth_fn(ps, qs, t_qs)
+    if t_b * t_m * t_k * growth > vmem_budget_elems:
+        raise ValueError(
+            f"tile {t_b}x{t_m}x{t_k} (growth {growth:.2f}) exceeds VMEM "
+            f"budget; reduce t_b / t_m / t_k or tile Q via t_qs"
+        )
+    if b % t_b or m % t_m or k % t_k:
+        raise ValueError(
+            f"tiles must divide dims: {(b, m, k)} vs {(t_b, t_m, t_k)}"
+        )
+
+    ts_out = t_k // pprod
+    # Composite Q-tile grid axis: one mixed-radix digit per factor, factor 0
+    # (applied first) minor — matching the output layout (q_n, ..., q_1, s).
+    nq_tiles, q_digit = _q_tiling(qs, t_qs, n)
+    # The (B, M, Q_{n-1}, ..., Q_0, S) view: row-major it flattens to the
+    # FastKron layout (B, M, prod(Q)*S); each Q axis is tiled by its own digit.
+    q_view = (b, m) + tuple(reversed(qs)) + (s_out,)
+    q_block = (t_b, t_m) + tuple(reversed(t_qs)) + (ts_out,)
+
+    if direction == "fwd":
+        grid = (b // t_b, m // t_m, nq_tiles, k // t_k)
+
+        def q_index(ib, im, jq, j):
+            return (ib, im) + tuple(
+                q_digit(jq, i) for i in reversed(range(n))
+            ) + (j,)
+
+        in_specs = [
+            pl.BlockSpec((t_b, t_m, t_k), lambda ib, im, jq, j: (ib, im, j))
+        ]
+        for i in range(n):
+            in_specs.append(
+                pl.BlockSpec(
+                    (t_b, ps[i], t_qs[i]),
+                    lambda ib, im, jq, j, i=i: (ib, 0, q_digit(jq, i)),
+                )
+            )
+        out = pl.pallas_call(
+            functools.partial(
+                _chain_kernel, ps=ps, qs=t_qs, direction="fwd", acc_dtype=acc
+            ),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec(q_block, q_index),
+            out_shape=jax.ShapeDtypeStruct(q_view, x.dtype),
+            interpret=interpret,
+        )(x, *factors)
+        return out.reshape(b, m, qprod * s_out)
+
+    # bwd: Q innermost — the sequential accumulation dim.
+    grid = (b // t_b, m // t_m, k // t_k, nq_tiles)
+
+    def q_index(ib, im, j, jq):
+        return (ib, im) + tuple(
+            q_digit(jq, i) for i in reversed(range(n))
+        ) + (j,)
+
+    in_specs = [pl.BlockSpec(q_block, q_index)]
+    for i in range(n):
+        in_specs.append(
+            pl.BlockSpec(
+                (t_b, ps[i], t_qs[i]),
+                lambda ib, im, j, jq, i=i: (ib, 0, q_digit(jq, i)),
+            )
+        )
+    out = pl.pallas_call(
+        functools.partial(
+            _chain_kernel, ps=ps, qs=t_qs, direction="bwd", acc_dtype=acc
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (t_b, t_m, t_k), lambda ib, im, j, jq: (ib, im, j)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, m, k), acc),
+        interpret=interpret,
+    )(x.reshape(q_view), *factors)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# The stage-backward Pallas template (dx + factor grads in one launch)
+# ---------------------------------------------------------------------------
+
+
+def _grad_kernel(
+    x_ref, dy_ref, *refs, ps: tuple[int, ...], qs: tuple[int, ...], acc_dtype
+):
+    """Full stage backward: rematerialize the forward chain in VMEM, then
+    walk the transposed chain computing the input gradient and every factor
+    gradient.  Per factor ONE in-VMEM relayout of the gradient tile is shared
+    by the factor-gradient GEMM (``U^T G``) and the chain-step GEMM
+    (``G F^T``).  Factor grads are per batch block: they accumulate over the
+    (M, K) grid for a fixed batch block only (batch is the outermost grid
+    axis, sequential on TPU), which reduces to the whole-grid accumulation
+    of the unbatched kernel when B = t_b = 1.
+    """
+    f_refs = refs[: len(ps)]
+    dx_ref = refs[len(ps)]
+    df_refs = refs[len(ps) + 1 :]
+    im, j = pl.program_id(1), pl.program_id(2)
+    first = jnp.logical_and(im == 0, j == 0)
+    t_b, t_m = x_ref.shape[0], x_ref.shape[1]
+    # In-VMEM rematerialization of the forward chain (stage-local residuals).
+    us = []
+    y = x_ref[...].astype(acc_dtype)
+    cols = y.shape[2]
+    for f_ref, p, q in zip(f_refs, ps, qs):
+        us.append(y)
+        s = cols // p
+        acc = jax.lax.dot_general(
+            y.reshape(t_b, t_m * s, p), f_ref[...], (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=acc_dtype,
+        )
+        y = jnp.swapaxes(acc.reshape(t_b, t_m, s, q), 2, 3).reshape(
+            t_b, t_m, q * s
+        )
+        cols = q * s
+    g = dy_ref[...].reshape(t_b, t_m, -1).astype(acc_dtype)
+    cols = g.shape[2]
+    for idx in reversed(range(len(f_refs))):
+        p, q = ps[idx], qs[idx]
+        s = cols // q
+        g2 = jnp.swapaxes(g.reshape(t_b, t_m, q, s), 2, 3).reshape(
+            t_b, t_m * s, q
+        )
+        u2 = us[idx].reshape(t_b, t_m * s, p)
+        df_part = jax.lax.dot_general(
+            u2, g2, (((1,), (1,)), ((0,), (0,))), preferred_element_type=acc_dtype
+        )  # (t_b, p, q)
+
+        @pl.when(first)
+        def _init(df_ref=df_refs[idx], df_part=df_part):
+            df_ref[...] = df_part
+
+        @pl.when(jnp.logical_not(first))
+        def _acc(df_ref=df_refs[idx], df_part=df_part):
+            df_ref[...] += df_part
+
+        g = jax.lax.dot_general(
+            g2, f_refs[idx][...], (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=acc_dtype,
+        ).reshape(t_b, t_m, s * p)
+        cols = s * p
+    dx_ref[...] = g.astype(dx_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "t_b", "t_m", "t_k", "interpret", "acc_dtype", "vmem_budget_elems",
+    ),
+)
+def grad_pallas(
+    x: jax.Array,
+    dy: jax.Array,
+    *factors: jax.Array,
+    t_b: int = 1,
+    t_m: int = 8,
+    t_k: int | None = None,
+    interpret: bool = False,
+    acc_dtype: str | None = None,
+    vmem_budget_elems: int = VMEM_BUDGET_ELEMS,
+) -> tuple[jax.Array, tuple[jax.Array, ...]]:
+    """The single Pallas stage-backward: (dx, per-factor grads).
+
+    ``x: (B, M, K)`` stage input, ``dy: (B, M, prod(Q)*S)`` stage output
+    cotangent, factors ``(B, P_i, Q_i)``; dfs returned in application order,
+    each ``(B, P_i, Q_i)``, accumulated in the stage's acc dtype.  B = 1
+    replays the unbatched kernel exactly.
+    """
+    acc = _resolve_acc(acc_dtype, dy.dtype)
+    b, m, k = x.shape
+    ps = tuple(int(f.shape[1]) for f in factors)
+    qs = tuple(int(f.shape[2]) for f in factors)
+    for f in factors:
+        if int(f.shape[0]) != b:
+            raise ValueError(f"factor batch {f.shape[0]} != x batch {b}")
+    pprod = math.prod(ps)
+    qprod = math.prod(qs)
+    if k % pprod:
+        raise ValueError(f"K={k} not divisible by prod(P)={pprod}")
+    s_out = k // pprod
+    if dy.shape != (b, m, qprod * s_out):
+        raise ValueError(f"dy shape {dy.shape} != {(b, m, qprod * s_out)}")
+    t_b = min(t_b, b)
+    t_m = min(t_m, m)
+    t_k = min(t_k or k, k)
+    if t_k % pprod:
+        raise ValueError(f"T_K={t_k} must be a multiple of prod(P)={pprod}")
+    # Live set: all forward intermediates of the tile chain plus the gradient
+    # tile — a sum over chain states, not just the max.
+    cols = float(t_k)
+    live = cols
+    for p, q in zip(ps, qs):
+        cols = cols / p * q
+        live += cols
+    if t_b * t_m * (live + cols) > vmem_budget_elems:
+        raise ValueError(
+            f"bwd tile {t_b}x{t_m}x{t_k} live set "
+            f"{int(t_b * t_m * (live + cols))} elems exceeds VMEM budget; "
+            f"reduce t_b / t_k or split the stage"
+        )
+    if b % t_b or m % t_m or k % t_k:
+        raise ValueError(
+            f"tiles must divide dims: {(b, m, k)} vs {(t_b, t_m, t_k)}"
+        )
+
+    ts_out = t_k // pprod
+    grid = (b // t_b, m // t_m, k // t_k)
+    in_specs = [
+        pl.BlockSpec((t_b, t_m, t_k), lambda ib, im, j: (ib, im, j)),
+        pl.BlockSpec((t_b, t_m, qprod, ts_out), lambda ib, im, j: (ib, im, 0, j)),
+    ]
+    for p, q in zip(ps, qs):
+        in_specs.append(pl.BlockSpec((t_b, p, q), lambda ib, im, j: (ib, 0, 0)))
+    out_specs = [pl.BlockSpec((t_b, t_m, t_k), lambda ib, im, j: (ib, im, j))]
+    out_shapes = [jax.ShapeDtypeStruct((b, m, k), x.dtype)]
+    for p, q in zip(ps, qs):
+        out_specs.append(pl.BlockSpec((t_b, p, q), lambda ib, im, j: (ib, 0, 0)))
+        out_shapes.append(jax.ShapeDtypeStruct((b, p, q), acc))
+    outs = pl.pallas_call(
+        functools.partial(_grad_kernel, ps=ps, qs=qs, acc_dtype=acc),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(x, dy.reshape(b, m, qprod, s_out), *factors)
+    return outs[0], tuple(outs[1:])
+
+
+# ---------------------------------------------------------------------------
+# THE XLA lax.scan executor (chain, both directions, both batch modes)
+# ---------------------------------------------------------------------------
+
+
+def _chain_max_cols(cols: int, pqs: Sequence[tuple[int, int]]) -> int:
+    """Max column count over the chain states starting from ``cols``."""
+    mx = cols
+    for p, q in pqs:
+        cols = cols // p * q
+        mx = max(mx, cols)
+    return mx
+
+
+def _xla_tile_rows(m: int, t_m: int, row_bytes: int | None = None) -> int | None:
+    """Effective M-tile for the scan-fused XLA path, or None to run untiled.
+
+    Tiling pays off only when the full chain would spill cache
+    (``row_bytes``: widest per-row working set) AND the tile chain fits with
+    enough tiles to amortize the scan; tiny analytic t_m values (tuned for
+    the TPU sublane) are clamped up to a useful CPU tile.
+    """
+    if row_bytes is not None and m * row_bytes <= XLA_CACHE_BUDGET_BYTES:
+        return None
+    t = min(m, max(t_m, 8))
+    if t >= m or m % t or m // t < 2:
+        return None
+    return t
+
+
+def _batch_tile(b: int, t_b: int, sample_bytes: int | None = None) -> int | None:
+    """Effective batch tile for the scan-batched XLA path, or None untiled.
+
+    ``sample_bytes``: one sample's chain working set — when the whole batch
+    fits the cache budget, run untiled (same rule as ``_xla_tile_rows``).
+    """
+    if sample_bytes is not None and b * sample_bytes <= XLA_CACHE_BUDGET_BYTES:
+        return None
+    t = min(b, max(t_b, 1))
+    if t >= b or b % t or b // t < 2:
+        return None
+    return t
+
+
+def _chain_pqs(factors, direction: str) -> list[tuple[int, int]]:
+    """(contract, expand) dims in traversal order for the working-set model."""
+    if direction == "fwd":
+        return [(int(f.shape[-2]), int(f.shape[-1])) for f in factors]
+    return [(int(f.shape[-1]), int(f.shape[-2])) for f in reversed(factors)]
+
+
+def _chain_apply(y, fs, direction: str, acc) -> jax.Array:
+    """The shared chain body: sliced multiplies (fwd) or their transposes in
+    reverse (bwd), batch-polymorphic through ``sliced_apply``/``sliced_apply_t``."""
+    if direction == "fwd":
+        for f in fs:
+            y = sliced_apply(y, f, acc)
+        return y
+    for f in reversed(tuple(fs)):
+        y = sliced_apply_t(y, f, acc)
+    return y
+
+
+@functools.partial(
+    jax.jit, static_argnames=("t_m", "t_b", "direction", "acc_dtype")
+)
+def _chain_xla(
+    x: jax.Array,
+    factors: tuple[jax.Array, ...],
+    t_m: int = 8,
+    t_b: int | None = None,
+    direction: str = "fwd",
+    acc_dtype: str | None = None,
+) -> jax.Array:
+    """The one lax.scan executor: any chain instruction on the XLA backend.
+
+    Unbatched input (2-D ``x``) tiles over M rows; batched input (3-D ``x``
+    with 3-D per-sample factors) tiles over B samples.  Either way the whole
+    per-tile chain stays cache-resident — the CPU analogue of the Pallas
+    kernel's VMEM fusion — and runs UNTILED when the full working set already
+    fits ``XLA_CACHE_BUDGET_BYTES``.
+    """
+    acc = _resolve_acc(acc_dtype, x.dtype)
+    maxcols = _chain_max_cols(int(x.shape[-1]), _chain_pqs(factors, direction))
+    if x.ndim == 2:
+        m, cols = x.shape
+        t = _xla_tile_rows(m, t_m, maxcols * x.dtype.itemsize)
+        if t is None:
+            return _chain_apply(x, factors, direction, acc)
+        _, yt = jax.lax.scan(
+            lambda _, xt: (None, _chain_apply(xt, factors, direction, acc)),
+            None,
+            x.reshape(m // t, t, cols),
+        )
+        return yt.reshape(m, -1)
+    b, m, cols = x.shape
+    t = _batch_tile(b, t_b or 1, m * maxcols * x.dtype.itemsize)
+    if t is None:
+        return _chain_apply(x, factors, direction, acc)
+    xs = (
+        x.reshape(b // t, t, m, cols),
+        tuple(f.reshape(b // t, t, *f.shape[1:]) for f in factors),
+    )
+    _, yt = jax.lax.scan(
+        lambda _, xf: (None, _chain_apply(xf[0], xf[1], direction, acc)),
+        None,
+        xs,
+    )
+    return yt.reshape(b, m, -1)
+
+
+def _grad_tile(us_first, g, factors, acc):
+    """Backward of one chain tile, batch-polymorphic: shared relayout per
+    factor feeds both the factor-gradient GEMM and the chain-step GEMM.
+    2-D tiles sum factor grads over rows; 3-D tiles keep them per sample."""
+    us = [us_first]
+    y = us_first
+    for f in factors[:-1]:
+        y = sliced_apply(y, f, acc)
+        us.append(y)
+    dfs = [None] * len(factors)
+    cols = g.shape[-1]
+    for idx in reversed(range(len(factors))):
+        f = factors[idx]
+        p, q = int(f.shape[-2]), int(f.shape[-1])
+        s = cols // q
+        if g.ndim == 2:
+            t_m = g.shape[0]
+            g2 = jnp.swapaxes(g.reshape(t_m, q, s), 1, 2).reshape(t_m * s, q)
+            u2 = us[idx].reshape(t_m * s, p)
+            dfs[idx] = jax.lax.dot_general(
+                u2.astype(acc), g2.astype(acc), (((0,), (0,)), ((), ())),
+                preferred_element_type=acc,
+            )
+            g = jax.lax.dot_general(
+                g2, f, (((1,), (1,)), ((), ())), preferred_element_type=acc
+            ).reshape(t_m, s * p).astype(g.dtype)
+        else:
+            t_b, t_m = g.shape[0], g.shape[1]
+            g2 = jnp.swapaxes(g.reshape(t_b, t_m, q, s), 2, 3).reshape(
+                t_b, t_m * s, q
+            )
+            u2 = us[idx].reshape(t_b, t_m * s, p)
+            dfs[idx] = jax.lax.dot_general(
+                u2.astype(acc), g2.astype(acc), (((1,), (1,)), ((0,), (0,))),
+                preferred_element_type=acc,
+            )  # (t_b, p, q)
+            g = jax.lax.dot_general(
+                g2, f, (((2,), (2,)), ((0,), (0,))), preferred_element_type=acc
+            ).reshape(t_b, t_m, s * p).astype(g.dtype)
+        cols = s * p
+    return dfs, g
+
+
+def _chain_live_cols(k: int, factors) -> int:
+    """Backward live set per row: every forward chain state plus the gradient
+    at its widest — a sum over chain states, not a max."""
+    live = cols = k
+    for f in factors:
+        cols = cols // int(f.shape[-2]) * int(f.shape[-1])
+        live += cols
+    return live
+
+
+@functools.partial(jax.jit, static_argnames=("t_m", "t_b", "acc_dtype"))
+def _grad_xla(
+    x: jax.Array,
+    dy: jax.Array,
+    factors: tuple[jax.Array, ...],
+    t_m: int = 8,
+    t_b: int | None = None,
+    acc_dtype: str | None = None,
+):
+    """The one lax.scan stage-backward executor (dx + factor grads).
+
+    Unbatched: M-tiled scan whose carry SUMS factor grads across row tiles.
+    Batched: batch-tiled scan stacking per-sample factor grads.
+    """
+    acc = _resolve_acc(acc_dtype, dy.dtype)
+    if x.ndim == 2:
+        m, k = x.shape
+        t = _xla_tile_rows(m, t_m, _chain_live_cols(k, factors) * x.dtype.itemsize)
+        if t is None:
+            dfs, dx = _grad_tile(x, dy, factors, acc)
+            return dx, tuple(dfs)
+
+        def body(carry, xg):
+            dfs, g = _grad_tile(xg[0], xg[1], factors, acc)
+            return tuple(c + d for c, d in zip(carry, dfs)), g
+
+        carry0 = tuple(jnp.zeros(f.shape, acc) for f in factors)
+        dfs, dxt = jax.lax.scan(
+            body, carry0, (x.reshape(m // t, t, k), dy.reshape(m // t, t, -1))
+        )
+        return dxt.reshape(m, k), dfs
+    b, m, k = x.shape
+    t = _batch_tile(
+        b, t_b or 1, m * _chain_live_cols(k, factors) * x.dtype.itemsize
+    )
+    if t is None:
+        dfs, dx = _grad_tile(x, dy, factors, acc)
+        return dx, tuple(dfs)
+
+    def body(_, xs):
+        dfs, g = _grad_tile(xs[0], xs[1], xs[2], acc)
+        return None, (g, tuple(dfs))
+
+    xs = (
+        x.reshape(b // t, t, m, k),
+        dy.reshape(b // t, t, m, -1),
+        tuple(f.reshape(b // t, t, *f.shape[1:]) for f in factors),
+    )
+    _, (dxt, dfts) = jax.lax.scan(body, None, xs)
+    return dxt.reshape(b, m, k), tuple(d.reshape(b, *d.shape[2:]) for d in dfts)
+
+
+# ---------------------------------------------------------------------------
+# Instruction / program interpreters (the emitter's public surface)
+# ---------------------------------------------------------------------------
+
+
+def _interpret_default(interpret: bool | None) -> bool:
+    return not _on_tpu() if interpret is None else interpret
+
+
+def _effective(instr: StageInstr, fs: tuple[jax.Array, ...]):
+    """(direction, factors, t_qs) after resolving a prekron instruction into
+    its explicit product (a chain of one).  A length-1 ``t_qs`` on a prekron
+    instruction is the Q-tile of the COMBINED product and survives the
+    substitution; per-original-factor tiles do not apply to the product."""
+    if instr.kind == PREKRON:
+        t_qs = instr.t_qs if instr.t_qs and len(instr.t_qs) == 1 else None
+        return instr.direction, (prekron_product(fs),), t_qs
+    return instr.direction, fs, instr.t_qs
+
+
+def run_stage(
+    y: jax.Array,
+    stage_factors: Sequence[jax.Array],
+    instr: StageInstr,
+    *,
+    backend: str = "auto",
+    interpret: bool | None = None,
+    vmem_budget_elems: int = VMEM_BUDGET_ELEMS,
+) -> jax.Array:
+    """Execute one chain instruction on ``y``.
+
+    ``stage_factors`` are the stage's factor arrays in application order —
+    2-D when ``instr.t_b is None``, per-sample 3-D otherwise.  Raises
+    ``ValueError`` when the Pallas tiling cannot hold the stage in VMEM
+    (callers fall back to per-factor execution).
+    """
+    fs = tuple(stage_factors)
+    direction, fs, t_qs = _effective(instr, fs)
+    b = resolve_backend(backend)
+    if b == "xla":
+        return _chain_xla(
+            y, fs, t_m=instr.t_m, t_b=instr.t_b, direction=direction,
+            acc_dtype=instr.acc_dtype,
+        )
+    ip = _interpret_default(interpret)
+    if instr.t_b is None:
+        out = chain_pallas(
+            y[None], *(f[None] for f in fs), t_b=1, t_m=instr.t_m,
+            t_k=instr.t_k, t_qs=t_qs, direction=direction, interpret=ip,
+            acc_dtype=instr.acc_dtype, vmem_budget_elems=vmem_budget_elems,
+        )
+        return out[0]
+    return chain_pallas(
+        y, *fs, t_b=instr.t_b, t_m=instr.t_m, t_k=instr.t_k, t_qs=t_qs,
+        direction=direction, interpret=ip, acc_dtype=instr.acc_dtype,
+        vmem_budget_elems=vmem_budget_elems,
+    )
+
+
+def run_stage_grad(
+    u: jax.Array,
+    g: jax.Array,
+    stage_factors: Sequence[jax.Array],
+    instr: StageInstr,
+    *,
+    backend: str = "auto",
+    interpret: bool | None = None,
+    vmem_budget_elems: int = VMEM_BUDGET_ELEMS,
+) -> tuple[jax.Array, tuple[jax.Array, ...]]:
+    """Full backward of one forward chain instruction: (dx, factor grads).
+
+    ``u`` is the stage input, ``g`` the stage output cotangent; ``instr`` is
+    the FORWARD instruction (its transpose is implied).  Factor grads are
+    returned in application order, accumulated in the stage's acc dtype
+    (callers cast).  Raises ``ValueError`` when the one-kernel Pallas
+    backward cannot hold the stage's live set in VMEM.
+    """
+    fs = tuple(stage_factors)
+    b = resolve_backend(backend)
+    if b == "xla":
+        dx, dfs = _grad_xla(
+            u, g, fs, t_m=instr.t_m, t_b=instr.t_b, acc_dtype=instr.acc_dtype
+        )
+        return dx, dfs
+    ip = _interpret_default(interpret)
+    if instr.t_b is None:
+        dx, dfs = grad_pallas(
+            u[None], g[None], *(f[None] for f in fs), t_b=1, t_m=instr.t_m,
+            t_k=instr.t_k, interpret=ip, acc_dtype=instr.acc_dtype,
+            vmem_budget_elems=vmem_budget_elems,
+        )
+        return dx[0], tuple(d[0] for d in dfs)
+    dx, dfs = grad_pallas(
+        u, g, *fs, t_b=instr.t_b, t_m=instr.t_m, t_k=instr.t_k, interpret=ip,
+        acc_dtype=instr.acc_dtype, vmem_budget_elems=vmem_budget_elems,
+    )
+    return dx, dfs
+
+
+def run_program(
+    x: jax.Array,
+    factors: Sequence[jax.Array],
+    prog: StageProgram,
+    *,
+    backend: str = "auto",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Interpret a StageProgram: walk its instructions over ``x``.
+
+    ``factors`` is the full chain's factor tuple in PROBLEM order (as the
+    engine's entry points take it); each instruction selects its stage's
+    factors via ``factor_ids`` into the reversed (application-order) list.
+    For a transposed program (``transpose(prog)``), ``x`` is the output
+    cotangent and the result is the input cotangent.
+    """
+    factors = tuple(factors)
+    if len(factors) != prog.n_factors:
+        raise ValueError(
+            f"program expects {prog.n_factors} factors, got {len(factors)}"
+        )
+    rev = tuple(reversed(factors))
+    y = x
+    for instr in prog.instrs:
+        y = run_stage(
+            y, tuple(rev[i] for i in instr.factor_ids), instr,
+            backend=backend, interpret=interpret,
+        )
+    return y
+
+
+def emit(
+    prog: StageProgram, *, backend: str = "auto", interpret: bool | None = None
+):
+    """Close a StageProgram over a backend: returns ``fn(x, factors)``.
+
+    ``emit(transpose(prog))`` is the x-cotangent of ``emit(prog)`` — the
+    property pinned by tests/test_properties.py.
+    """
+
+    def fn(x, factors):
+        return run_program(x, factors, prog, backend=backend, interpret=interpret)
+
+    return fn
+
+
+__all__ = [
+    "StageInstr",
+    "StageProgram",
+    "transpose",
+    "emit",
+    "run_program",
+    "run_stage",
+    "run_stage_grad",
+    "sliced_apply",
+    "sliced_apply_t",
+    "prekron_product",
+    "chain_pallas",
+    "grad_pallas",
+    "fused_growth",
+    "transposed_growth",
+    "max_n_fused",
+    "acc_dtype_for",
+    "resolve_backend",
+    "MULTIPLY",
+    "TRANSPOSED_MULTIPLY",
+    "PREKRON",
+    "VMEM_BUDGET_ELEMS",
+    "XLA_CACHE_BUDGET_BYTES",
+]

@@ -1,90 +1,27 @@
-"""Pallas TPU kernel fusing consecutive sliced multiplies (contribution C3).
+"""Compatibility shims: the fused FORWARD Pallas entry points (contribution C3).
 
-The paper's fused kernel keeps intermediates in shared memory for up to
-``N_fused = floor(log_P T_K)`` factors.  The TPU analogue holds the whole
-``(T_M, T_K)`` tile chain in VMEM: one ``pallas_call`` multiplies the tile
-through ``n`` factors and stores the final block once, eliminating the
-``n-1`` intermediate HBM round-trips of the per-factor path.
-
-Correctness of per-tile fusion (why a tile can be pushed through several
-factors independently): after ``j`` multiplies the global intermediate column
-index is ``(q_vec, s)`` with ``s`` strictly inherited from the source tile's
-column range; slices of factor ``j+1`` group ``P`` *adjacent* ``s`` values of
-one ``q_vec``, so as long as ``prod(P_i) | T_K`` no slice ever crosses a tile
-boundary.  The final store target is the contiguous block
-``(T_M, prod(Q_i), T_K/prod(P_i))`` of the ``(M, prod(Q), K/prod(P))`` output
-view — the paper's STOREFUSEDSHMEM index arithmetic, expressed as a BlockSpec.
-
-Q-tiling (lifts the VMEM-growth restriction): later factors never contract
-the ``q`` indices produced by earlier ones — they only slice along ``s`` — so
-each factor's output columns are pure batch indices.  Restricting factor
-``i`` to a ``T_Qi``-column slice therefore computes exactly the output block
-whose ``q_i`` digit lies in that slice, independently of all other Q-tiles.
-The grid gains a composite Q axis (``grid = (M/T_M, Q-tiles, K/T_K)``) whose
-index decomposes into one digit per factor, the output becomes the
-``(M, Q_n, ..., Q_1, K/prod(P))`` view tiled per digit, and the in-VMEM
-growth bound uses ``prod(T_Qi)`` instead of ``prod(Q_i)`` — fusion stays
-legal when ``prod(Q)/prod(P)`` is large.
-
-VMEM budget: the live set is two tiles of ``T_M * T_K * max(1, growth_j)``
-elements (f32 accumulation) where ``growth_j = prod(T_Qi)/prod(P_i)`` over
-chain prefixes, so the wrapper checks
-``T_M * T_K * growth <= vmem_budget_elems``.
+The kernel bodies that used to live here — the single-problem fused chain and
+its batch-grid twin — are now emitted by the ONE parameterized template in
+``kernels/emit.py`` (``emit.chain_pallas`` interpreting a ``multiply``
+``StageInstr``; see that module's docstring for the fusion-correctness and
+Q-tiling arguments that previously headed this file).  These wrappers keep
+the historical signatures for tests/benchmarks; new code should build a
+``StageInstr``/``StageProgram`` and call the emitter.
 """
 from __future__ import annotations
 
-import functools
-import math
-from typing import Sequence
-
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-# Conservative usable-VMEM budget (f32 elements): ~16 MiB VMEM, keep half for
-# double buffering / Mosaic temporaries.
-VMEM_BUDGET_ELEMS = 2 * 1024 * 1024
+from . import emit
+from .emit import VMEM_BUDGET_ELEMS, fused_growth, max_n_fused  # noqa: F401
 
 
-def _fused_kernel(x_ref, *refs, ps: tuple[int, ...], qs: tuple[int, ...], acc_dtype):
-    f_refs, (y_ref,) = refs[:-1], refs[-1:]
-    t_m = x_ref.shape[0]
-    y = x_ref[...]
-    cols = x_ref.shape[1]
-    # Chain the factors, last factor first (Algorithm 1 order: callers pass
-    # factors already reversed so f_refs[0] is F^N).  ``qs`` are the per-tile
-    # Q sizes (== full Q when the Q axis is not tiled).
-    for f_ref, p, q in zip(f_refs, ps, qs):
-        s = cols // p
-        x2 = y.reshape(t_m * s, p)
-        acc = jax.lax.dot_general(
-            x2, f_ref[...], (((1,), (0,)), ((), ())),
-            preferred_element_type=acc_dtype,
-        )  # (t_m*s, q)
-        # FastKron layout (m, q, s) — stays in VMEM between factors.
-        y = jnp.swapaxes(acc.reshape(t_m, s, q), 1, 2).reshape(t_m, q * s)
-        cols = q * s
-    y_ref[...] = y.reshape(y_ref.shape).astype(y_ref.dtype)
+def _acc_name(acc_dtype) -> str | None:
+    import jax.numpy as jnp
+
+    return None if acc_dtype is None else jnp.dtype(acc_dtype).name
 
 
-def fused_growth(
-    ps: Sequence[int], qs: Sequence[int], t_qs: Sequence[int] | None = None
-) -> float:
-    """Max live-set multiplier over chain prefixes, with optional Q-tiling."""
-    t_qs = tuple(t_qs) if t_qs is not None else tuple(qs)
-    g = 1.0
-    pprod = qprod = 1
-    for p, tq in zip(ps, t_qs):
-        pprod *= p
-        qprod *= tq
-        g = max(g, qprod / pprod)
-    return g
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("t_m", "t_k", "t_qs", "interpret", "acc_dtype", "vmem_budget_elems"),
-)
 def fused_kron_pallas(
     x: jax.Array,
     *factors_last_first: jax.Array,
@@ -95,127 +32,23 @@ def fused_kron_pallas(
     acc_dtype=None,
     vmem_budget_elems: int = VMEM_BUDGET_ELEMS,
 ) -> jax.Array:
-    """Apply ``n`` sliced multiplies in one kernel.
+    """Apply ``n`` sliced multiplies in one kernel (shim over ``emit``).
 
     ``factors_last_first[0]`` is applied first (i.e. it is F^N).  Returns the
     (M, K * prod(Q)/prod(P)) intermediate after all given factors.
-    ``t_qs`` (one entry per factor, each dividing Q_i) tiles the composite
-    output-Q axis so the in-VMEM growth uses prod(t_qs) instead of prod(Q).
     """
-    if acc_dtype is None:
-        acc_dtype = jnp.promote_types(x.dtype, jnp.float32)
-    m, k = x.shape
-    n = len(factors_last_first)
-    ps = tuple(int(f.shape[0]) for f in factors_last_first)
-    qs = tuple(int(f.shape[1]) for f in factors_last_first)
-    pprod = math.prod(ps)
-    qprod = math.prod(qs)
-    if k % pprod:
-        raise ValueError(f"K={k} not divisible by prod(P)={pprod}")
-    t_m = min(t_m, m)
-    t_k = min(t_k or k, k)
-    if t_qs is None:
-        t_qs = qs
-    t_qs = tuple(min(t, q) for t, q in zip(t_qs, qs))
-    if len(t_qs) != n:
-        raise ValueError(f"t_qs needs one entry per factor: {t_qs} vs {n}")
-    if any(q % t for q, t in zip(qs, t_qs)):
-        raise ValueError(f"t_qs must divide factor Q dims: {t_qs} vs {qs}")
-    # Fusion validity: every slice of every fused stage stays inside the tile.
-    if t_k % pprod:
-        raise ValueError(f"T_K={t_k} must be a multiple of prod(P)={pprod}")
-    growth = fused_growth(ps, qs, t_qs)
-    if t_m * t_k * growth > vmem_budget_elems:
-        raise ValueError(
-            f"tile {t_m}x{t_k} (growth {growth:.2f}) exceeds VMEM budget; "
-            f"reduce t_k / n_fused or tile Q via t_qs"
-        )
-    if m % t_m or k % t_k:
-        raise ValueError(f"tiles must divide dims: {(m, k)} vs {(t_m, t_k)}")
-
-    s_out = k // pprod          # global output minor dim
-    ts_out = t_k // pprod       # per-tile share of it
-    # Composite Q-tile grid axis: one mixed-radix digit per factor, factor 0
-    # (applied first) minor — matching the output layout (q_n, ..., q_1, s).
-    nq = tuple(q // t for q, t in zip(qs, t_qs))
-    strides = [1] * n
-    for i in range(1, n):
-        strides[i] = strides[i - 1] * nq[i - 1]
-    nq_tiles = math.prod(nq)
-
-    def q_digit(jq, i):
-        return (jq // strides[i]) % nq[i]
-
-    grid = (m // t_m, nq_tiles, k // t_k)
-    in_specs = [pl.BlockSpec((t_m, t_k), lambda i, jq, j: (i, j))]
-    for i, f in enumerate(factors_last_first):
-        p = ps[i]
-        in_specs.append(
-            pl.BlockSpec((p, t_qs[i]), lambda i_m, jq, j, i=i: (0, q_digit(jq, i)))
-        )
-    # Output view (M, Q_{n-1}, ..., Q_0, S): row-major it flattens to the
-    # FastKron layout (M, prod(Q)*S); each Q axis is tiled by its own digit.
-    out_view = (m,) + tuple(reversed(qs)) + (s_out,)
-    out_block = (t_m,) + tuple(reversed(t_qs)) + (ts_out,)
-
-    def out_index(i_m, jq, j):
-        return (i_m,) + tuple(q_digit(jq, i) for i in reversed(range(n))) + (j,)
-
-    out = pl.pallas_call(
-        functools.partial(_fused_kernel, ps=ps, qs=t_qs, acc_dtype=acc_dtype),
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec(out_block, out_index),
-        out_shape=jax.ShapeDtypeStruct(out_view, x.dtype),
-        interpret=interpret,
-    )(x, *factors_last_first)
-    return out.reshape(m, qprod * s_out)
+    instr = emit.StageInstr(
+        kind=emit.MULTIPLY,
+        ps=tuple(int(f.shape[0]) for f in factors_last_first),
+        qs=tuple(int(f.shape[1]) for f in factors_last_first),
+        t_m=t_m, t_k=t_k, t_qs=t_qs, acc_dtype=_acc_name(acc_dtype),
+    )
+    return emit.run_stage(
+        x, factors_last_first, instr, backend="pallas", interpret=interpret,
+        vmem_budget_elems=vmem_budget_elems,
+    )
 
 
-def max_n_fused(t_k: int, p: int) -> int:
-    """Paper: N_fused = floor(log_P T_K)."""
-    n = 0
-    while t_k >= p and t_k % p == 0:
-        t_k //= p
-        n += 1
-    return n
-
-
-# ---------------------------------------------------------------------------
-# Batched fused kernel: B independent problems, per-sample factors
-# ---------------------------------------------------------------------------
-
-
-def _fused_batched_kernel(
-    x_ref, *refs, ps: tuple[int, ...], qs: tuple[int, ...], acc_dtype
-):
-    f_refs, (y_ref,) = refs[:-1], refs[-1:]
-    t_b, t_m = x_ref.shape[0], x_ref.shape[1]
-    y = x_ref[...]
-    cols = x_ref.shape[2]
-    # Same chain as _fused_kernel, with a leading batch dim carried through
-    # every GEMM as a dot_general batch dimension: sample b's tile only ever
-    # contracts against sample b's factor slice.
-    for f_ref, p, q in zip(f_refs, ps, qs):
-        s = cols // p
-        x2 = y.reshape(t_b, t_m * s, p)
-        acc = jax.lax.dot_general(
-            x2, f_ref[...], (((2,), (1,)), ((0,), (0,))),
-            preferred_element_type=acc_dtype,
-        )  # (t_b, t_m*s, q)
-        y = jnp.swapaxes(acc.reshape(t_b, t_m, s, q), 2, 3).reshape(
-            t_b, t_m, q * s
-        )
-        cols = q * s
-    y_ref[...] = y.reshape(y_ref.shape).astype(y_ref.dtype)
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "t_b", "t_m", "t_k", "t_qs", "interpret", "acc_dtype", "vmem_budget_elems",
-    ),
-)
 def fused_kron_batched_pallas(
     x: jax.Array,
     *factors_last_first: jax.Array,
@@ -227,82 +60,15 @@ def fused_kron_batched_pallas(
     acc_dtype=None,
     vmem_budget_elems: int = VMEM_BUDGET_ELEMS,
 ) -> jax.Array:
-    """Batch-grid fused chain: B independent Kron-Matmuls in one launch.
-
-    ``x: (B, M, K)``; each factor ``(B, P_i, Q_i)`` (per-sample factors, the
-    Jhurani arXiv 1304.7054 regime).  The grid gains a leading batch axis
-    tiled by ``t_b`` samples per block; VMEM now holds ``t_b`` tile chains,
-    so the legality check is ``t_b * t_m * t_k * growth <= budget`` — the
-    planner trades ``t_m`` against ``t_b`` under the same budget.
-    """
-    if acc_dtype is None:
-        acc_dtype = jnp.promote_types(x.dtype, jnp.float32)
-    b, m, k = x.shape
-    n = len(factors_last_first)
-    ps = tuple(int(f.shape[1]) for f in factors_last_first)
-    qs = tuple(int(f.shape[2]) for f in factors_last_first)
-    for f in factors_last_first:
-        if int(f.shape[0]) != b:
-            raise ValueError(f"factor batch {f.shape[0]} != x batch {b}")
-    pprod = math.prod(ps)
-    qprod = math.prod(qs)
-    if k % pprod:
-        raise ValueError(f"K={k} not divisible by prod(P)={pprod}")
-    t_b = min(t_b, b)
-    t_m = min(t_m, m)
-    t_k = min(t_k or k, k)
-    if t_qs is None:
-        t_qs = qs
-    t_qs = tuple(min(t, q) for t, q in zip(t_qs, qs))
-    if any(q % t for q, t in zip(qs, t_qs)):
-        raise ValueError(f"t_qs must divide factor Q dims: {t_qs} vs {qs}")
-    if t_k % pprod:
-        raise ValueError(f"T_K={t_k} must be a multiple of prod(P)={pprod}")
-    growth = fused_growth(ps, qs, t_qs)
-    if t_b * t_m * t_k * growth > vmem_budget_elems:
-        raise ValueError(
-            f"batched tile {t_b}x{t_m}x{t_k} (growth {growth:.2f}) exceeds "
-            f"VMEM budget; reduce t_b / t_m / t_k or tile Q via t_qs"
-        )
-    if b % t_b or m % t_m or k % t_k:
-        raise ValueError(
-            f"tiles must divide dims: {(b, m, k)} vs {(t_b, t_m, t_k)}"
-        )
-
-    s_out = k // pprod
-    ts_out = t_k // pprod
-    nq = tuple(q // t for q, t in zip(qs, t_qs))
-    strides = [1] * n
-    for i in range(1, n):
-        strides[i] = strides[i - 1] * nq[i - 1]
-    nq_tiles = math.prod(nq)
-
-    def q_digit(jq, i):
-        return (jq // strides[i]) % nq[i]
-
-    grid = (b // t_b, m // t_m, nq_tiles, k // t_k)
-    in_specs = [
-        pl.BlockSpec((t_b, t_m, t_k), lambda ib, im, jq, j: (ib, im, j))
-    ]
-    for i, f in enumerate(factors_last_first):
-        in_specs.append(
-            pl.BlockSpec(
-                (t_b, ps[i], t_qs[i]),
-                lambda ib, im, jq, j, i=i: (ib, 0, q_digit(jq, i)),
-            )
-        )
-    out_view = (b, m) + tuple(reversed(qs)) + (s_out,)
-    out_block = (t_b, t_m) + tuple(reversed(t_qs)) + (ts_out,)
-
-    def out_index(ib, im, jq, j):
-        return (ib, im) + tuple(q_digit(jq, i) for i in reversed(range(n))) + (j,)
-
-    out = pl.pallas_call(
-        functools.partial(_fused_batched_kernel, ps=ps, qs=t_qs, acc_dtype=acc_dtype),
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec(out_block, out_index),
-        out_shape=jax.ShapeDtypeStruct(out_view, x.dtype),
-        interpret=interpret,
-    )(x, *factors_last_first)
-    return out.reshape(b, m, qprod * s_out)
+    """Batch-grid fused chain (shim over ``emit``): ``x (B, M, K)``, factors
+    ``(B, P_i, Q_i)`` per-sample, ``t_b`` samples per block."""
+    instr = emit.StageInstr(
+        kind=emit.MULTIPLY,
+        ps=tuple(int(f.shape[1]) for f in factors_last_first),
+        qs=tuple(int(f.shape[2]) for f in factors_last_first),
+        t_m=t_m, t_k=t_k, t_qs=t_qs, t_b=t_b, acc_dtype=_acc_name(acc_dtype),
+    )
+    return emit.run_stage(
+        x, factors_last_first, instr, backend="pallas", interpret=interpret,
+        vmem_budget_elems=vmem_budget_elems,
+    )

@@ -1,97 +1,21 @@
-"""Pallas TPU kernels for the fused TRANSPOSED chain — the backward of the
-fused kernel (beyond-paper: the paper only treats inference/forward).
+"""Compatibility shims: the fused TRANSPOSED / BACKWARD Pallas entry points.
 
-Two kernels:
-
-``fused_kron_t_pallas``
-    Chains transposed sliced multiplies in VMEM, mirroring
-    ``kron_fused.fused_kron_pallas``: the forward kernel maps a contiguous
-    ``(T_M, T_K)`` input tile to one ``(T_M, prod(Q), T_K/prod(P))`` block of
-    the output view, and that map is a linear bijection per tile — so its
-    transpose reads the same output block and inverts the chain factor by
-    factor entirely in VMEM, storing the contiguous ``(T_M, T_K)`` dX tile
-    once.  n-1 intermediate HBM round-trips of the per-factor transposed
-    path are eliminated.  An optional composite Q-tile grid axis (innermost,
-    sequential on TPU) splits the contraction over each factor's Q and
-    accumulates partial dX tiles across Q-tiles — the VMEM-growth relief of
-    the forward kernel, applied to the contracted side.
-
-``fused_kron_bwd_pallas``
-    The full training backward of one fused stage: per ``(T_M, T_K)`` tile it
-    rematerializes the forward chain in VMEM, then walks the transposed chain
-    computing both the input gradient and every factor gradient.  Per factor
-    it performs ONE in-VMEM relayout of the gradient tile to ``(T_M*S, Q)``,
-    shared by the factor-gradient GEMM (``U^T G``) and the chain-step GEMM
-    (``G F^T``) — the relayout the unfused path pays one HBM round-trip for.
-    Factor gradients accumulate across the whole grid into revisited
-    ``(P_i, Q_i)`` output blocks (grid is sequential on TPU).
+The four kernel bodies that used to live here (transposed chain and full
+stage backward, single and batched) are now emitted by the unified templates
+in ``kernels/emit.py``: ``emit.chain_pallas`` with ``direction="bwd"`` (one
+``transposed_multiply`` ``StageInstr``) and ``emit.grad_pallas`` (the factor-
+gradient stage backward).  These wrappers keep the historical signatures;
+new code should build a ``StageInstr``/``StageProgram`` and call the emitter.
 """
 from __future__ import annotations
 
-import functools
-import math
-from typing import Sequence
-
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-from .kron_fused import VMEM_BUDGET_ELEMS
-
-
-def transposed_growth(
-    ps: Sequence[int], qs: Sequence[int], t_qs: Sequence[int] | None = None
-) -> float:
-    """Max live-set multiplier of the inverse chain, relative to T_K.
-
-    Walking the chain backwards, the per-tile column count goes
-    ``prod(t_q)*ts_out -> ... -> t_k``; the max over those states bounds VMEM.
-    """
-    t_qs = tuple(t_qs) if t_qs is not None else tuple(qs)
-    pprod = math.prod(ps)
-    cols = math.prod(t_qs) / pprod  # in units of t_k
-    g = max(1.0, cols)
-    for p, tq in zip(reversed(ps), reversed(t_qs)):
-        cols = cols / tq * p
-        g = max(g, cols)
-    return g
+from . import emit
+from .emit import VMEM_BUDGET_ELEMS, transposed_growth  # noqa: F401
+from .kron_fused import _acc_name
 
 
-def _fused_t_kernel(dy_ref, *refs, ps: tuple[int, ...], qs: tuple[int, ...], acc_dtype):
-    f_refs, (dx_ref,) = refs[:-1], refs[-1:]
-    jq = pl.program_id(2)
-    t_m = dy_ref.shape[0]
-    g = dy_ref[...].reshape(t_m, -1).astype(acc_dtype)
-    cols = g.shape[1]
-    # Invert the chain: the forward applied f_refs[0] first, so its transpose
-    # is applied last; the most-recently-applied factor's q is the major
-    # digit of the current layout and is contracted first.
-    for f_ref, p, q in reversed(list(zip(f_refs, ps, qs))):
-        s = cols // q
-        g2 = jnp.swapaxes(g.reshape(t_m, q, s), 1, 2).reshape(t_m * s, q)
-        acc = jax.lax.dot_general(
-            g2, f_ref[...], (((1,), (1,)), ((), ())),
-            preferred_element_type=acc_dtype,
-        )  # (t_m*s, p)
-        g = acc.reshape(t_m, s * p)
-        cols = s * p
-    # dx_ref is acc_dtype (cast to the input dtype by the wrapper) so the
-    # cross-Q-tile accumulation never rounds through a low-precision type.
-    part = g.astype(dx_ref.dtype)
-
-    @pl.when(jq == 0)
-    def _init():
-        dx_ref[...] = part
-
-    @pl.when(jq > 0)
-    def _acc():
-        dx_ref[...] += part
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("t_m", "t_k", "t_qs", "interpret", "acc_dtype", "vmem_budget_elems"),
-)
 def fused_kron_t_pallas(
     dy: jax.Array,
     *factors_last_first: jax.Array,
@@ -102,241 +26,24 @@ def fused_kron_t_pallas(
     acc_dtype=None,
     vmem_budget_elems: int = VMEM_BUDGET_ELEMS,
 ) -> jax.Array:
-    """dX for a fused chain: dy (M, prod(Q)*S) -> (M, K) with K = prod(P)*S.
+    """dX for a fused chain (shim over ``emit``): dy (M, prod(Q)*S) -> (M, K).
 
     ``factors_last_first`` is the SAME list the forward kernel was given
-    (f[0] applied first); this kernel applies their transposes in reverse.
+    (f[0] applied first); the emitted kernel applies their transposes in
+    reverse.
     """
-    if acc_dtype is None:
-        acc_dtype = jnp.promote_types(dy.dtype, jnp.float32)
-    m, l_cols = dy.shape
-    n = len(factors_last_first)
-    ps = tuple(int(f.shape[0]) for f in factors_last_first)
-    qs = tuple(int(f.shape[1]) for f in factors_last_first)
-    pprod = math.prod(ps)
-    qprod = math.prod(qs)
-    if l_cols % qprod:
-        raise ValueError(f"dY cols {l_cols} not divisible by prod(Q)={qprod}")
-    s_out = l_cols // qprod
-    k = s_out * pprod
-    t_m = min(t_m, m)
-    t_k = min(t_k or k, k)
-    if t_qs is None:
-        t_qs = qs
-    t_qs = tuple(min(t, q) for t, q in zip(t_qs, qs))
-    if any(q % t for q, t in zip(qs, t_qs)):
-        raise ValueError(f"t_qs must divide factor Q dims: {t_qs} vs {qs}")
-    if t_k % pprod:
-        raise ValueError(f"T_K={t_k} must be a multiple of prod(P)={pprod}")
-    growth = transposed_growth(ps, qs, t_qs)
-    if t_m * t_k * growth > vmem_budget_elems:
-        raise ValueError(
-            f"tile {t_m}x{t_k} (growth {growth:.2f}) exceeds VMEM budget; "
-            f"reduce t_k or tile Q via t_qs"
-        )
-    if m % t_m or k % t_k:
-        raise ValueError(f"tiles must divide dims: {(m, k)} vs {(t_m, t_k)}")
-
-    ts_out = t_k // pprod
-    nq = tuple(q // t for q, t in zip(qs, t_qs))
-    strides = [1] * n
-    for i in range(1, n):
-        strides[i] = strides[i - 1] * nq[i - 1]
-    nq_tiles = math.prod(nq)
-
-    def q_digit(jq, i):
-        return (jq // strides[i]) % nq[i]
-
-    # Q innermost: sequential accumulation dim (kron_sliced_t layout).
-    grid = (m // t_m, k // t_k, nq_tiles)
-    dy_view = (m,) + tuple(reversed(qs)) + (s_out,)
-    dy_block = (t_m,) + tuple(reversed(t_qs)) + (ts_out,)
-
-    def dy_index(i_m, j, jq):
-        return (i_m,) + tuple(q_digit(jq, i) for i in reversed(range(n))) + (j,)
-
-    in_specs = [pl.BlockSpec(dy_block, dy_index)]
-    for i, f in enumerate(factors_last_first):
-        in_specs.append(
-            pl.BlockSpec((ps[i], t_qs[i]), lambda i_m, j, jq, i=i: (0, q_digit(jq, i)))
-        )
-    out = pl.pallas_call(
-        functools.partial(_fused_t_kernel, ps=ps, qs=t_qs, acc_dtype=acc_dtype),
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((t_m, t_k), lambda i_m, j, jq: (i_m, j)),
-        out_shape=jax.ShapeDtypeStruct((m, k), acc_dtype),
-        interpret=interpret,
-    )(dy.reshape(dy_view), *factors_last_first)
-    return out.astype(dy.dtype)
+    instr = emit.StageInstr(
+        kind=emit.TRANSPOSED_MULTIPLY,
+        ps=tuple(int(f.shape[0]) for f in factors_last_first),
+        qs=tuple(int(f.shape[1]) for f in factors_last_first),
+        t_m=t_m, t_k=t_k, t_qs=t_qs, acc_dtype=_acc_name(acc_dtype),
+    )
+    return emit.run_stage(
+        dy, factors_last_first, instr, backend="pallas", interpret=interpret,
+        vmem_budget_elems=vmem_budget_elems,
+    )
 
 
-def _fused_bwd_kernel(
-    x_ref, dy_ref, *refs, ps: tuple[int, ...], qs: tuple[int, ...], acc_dtype
-):
-    f_refs = refs[: len(ps)]
-    dx_ref = refs[len(ps)]
-    df_refs = refs[len(ps) + 1 :]
-    i_m, j = pl.program_id(0), pl.program_id(1)
-    first = jnp.logical_and(i_m == 0, j == 0)
-    t_m = x_ref.shape[0]
-    # In-VMEM rematerialization of the forward chain (stage-local residuals).
-    us = []
-    y = x_ref[...].astype(acc_dtype)
-    cols = y.shape[1]
-    for f_ref, p, q in zip(f_refs, ps, qs):
-        us.append(y)
-        s = cols // p
-        acc = jax.lax.dot_general(
-            y.reshape(t_m * s, p), f_ref[...], (((1,), (0,)), ((), ())),
-            preferred_element_type=acc_dtype,
-        )
-        y = jnp.swapaxes(acc.reshape(t_m, s, q), 1, 2).reshape(t_m, q * s)
-        cols = q * s
-    # Transposed chain with one shared relayout per factor.
-    g = dy_ref[...].reshape(t_m, -1).astype(acc_dtype)
-    cols = g.shape[1]
-    for idx in reversed(range(len(f_refs))):
-        p, q = ps[idx], qs[idx]
-        s = cols // q
-        g2 = jnp.swapaxes(g.reshape(t_m, q, s), 1, 2).reshape(t_m * s, q)
-        u2 = us[idx].reshape(t_m * s, p)
-        df_part = jax.lax.dot_general(
-            u2, g2, (((0,), (0,)), ((), ())), preferred_element_type=acc_dtype
-        )  # (p, q)
-
-        @pl.when(first)
-        def _init(df_ref=df_refs[idx], df_part=df_part):
-            df_ref[...] = df_part
-
-        @pl.when(jnp.logical_not(first))
-        def _acc(df_ref=df_refs[idx], df_part=df_part):
-            df_ref[...] += df_part
-
-        g = jax.lax.dot_general(
-            g2, f_refs[idx][...], (((1,), (1,)), ((), ())),
-            preferred_element_type=acc_dtype,
-        ).reshape(t_m, s * p)
-        cols = s * p
-    dx_ref[...] = g.astype(dx_ref.dtype)
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("t_m", "t_k", "interpret", "acc_dtype", "vmem_budget_elems"),
-)
-def fused_kron_bwd_pallas(
-    x: jax.Array,
-    dy: jax.Array,
-    *factors_last_first: jax.Array,
-    t_m: int = 8,
-    t_k: int | None = None,
-    interpret: bool = False,
-    acc_dtype=None,
-    vmem_budget_elems: int = VMEM_BUDGET_ELEMS,
-) -> tuple[jax.Array, tuple[jax.Array, ...]]:
-    """Full backward of one fused stage.
-
-    x: (M, K) stage input; dy: (M, prod(Q)*S) stage output cotangent.
-    Returns (dx, dfs) with dfs in ``factors_last_first`` order, accumulated
-    in ``acc_dtype``.
-    """
-    if acc_dtype is None:
-        acc_dtype = jnp.promote_types(dy.dtype, jnp.float32)
-    m, k = x.shape
-    ps = tuple(int(f.shape[0]) for f in factors_last_first)
-    qs = tuple(int(f.shape[1]) for f in factors_last_first)
-    pprod = math.prod(ps)
-    qprod = math.prod(qs)
-    if k % pprod:
-        raise ValueError(f"K={k} not divisible by prod(P)={pprod}")
-    s_out = k // pprod
-    if dy.shape != (m, qprod * s_out):
-        raise ValueError(f"dy shape {dy.shape} != {(m, qprod * s_out)}")
-    t_m = min(t_m, m)
-    t_k = min(t_k or k, k)
-    if t_k % pprod:
-        raise ValueError(f"T_K={t_k} must be a multiple of prod(P)={pprod}")
-    # Live set: all forward intermediates of the tile chain plus the gradient
-    # tile — a sum over chain states, not just the max.
-    cols = float(t_k)
-    live = cols
-    for p, q in zip(ps, qs):
-        cols = cols / p * q
-        live += cols
-    if t_m * (live + cols) > vmem_budget_elems:
-        raise ValueError(
-            f"bwd tile {t_m}x{t_k} live set {int(t_m * (live + cols))} elems "
-            f"exceeds VMEM budget; reduce t_k or split the stage"
-        )
-    if m % t_m or k % t_k:
-        raise ValueError(f"tiles must divide dims: {(m, k)} vs {(t_m, t_k)}")
-
-    ts_out = t_k // pprod
-    grid = (m // t_m, k // t_k)
-    in_specs = [
-        pl.BlockSpec((t_m, t_k), lambda i, j: (i, j)),
-        pl.BlockSpec((t_m, qprod, ts_out), lambda i, j: (i, 0, j)),
-    ]
-    for p, q in zip(ps, qs):
-        in_specs.append(pl.BlockSpec((p, q), lambda i, j: (0, 0)))
-    out_specs = [pl.BlockSpec((t_m, t_k), lambda i, j: (i, j))]
-    out_shapes = [jax.ShapeDtypeStruct((m, k), x.dtype)]
-    for p, q in zip(ps, qs):
-        out_specs.append(pl.BlockSpec((p, q), lambda i, j: (0, 0)))
-        out_shapes.append(jax.ShapeDtypeStruct((p, q), acc_dtype))
-    outs = pl.pallas_call(
-        functools.partial(_fused_bwd_kernel, ps=ps, qs=qs, acc_dtype=acc_dtype),
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=out_specs,
-        out_shape=out_shapes,
-        interpret=interpret,
-    )(x, dy.reshape(m, qprod, s_out), *factors_last_first)
-    return outs[0], tuple(outs[1:])
-
-
-# ---------------------------------------------------------------------------
-# Batched variants: B independent problems, per-sample factors (batch grid axis)
-# ---------------------------------------------------------------------------
-
-
-def _fused_t_batched_kernel(
-    dy_ref, *refs, ps: tuple[int, ...], qs: tuple[int, ...], acc_dtype
-):
-    f_refs, (dx_ref,) = refs[:-1], refs[-1:]
-    jq = pl.program_id(3)
-    t_b, t_m = dy_ref.shape[0], dy_ref.shape[1]
-    g = dy_ref[...].reshape(t_b, t_m, -1).astype(acc_dtype)
-    cols = g.shape[2]
-    for f_ref, p, q in reversed(list(zip(f_refs, ps, qs))):
-        s = cols // q
-        g2 = jnp.swapaxes(g.reshape(t_b, t_m, q, s), 2, 3).reshape(
-            t_b, t_m * s, q
-        )
-        acc = jax.lax.dot_general(
-            g2, f_ref[...], (((2,), (2,)), ((0,), (0,))),
-            preferred_element_type=acc_dtype,
-        )  # (t_b, t_m*s, p)
-        g = acc.reshape(t_b, t_m, s * p)
-        cols = s * p
-    part = g.astype(dx_ref.dtype)
-
-    @pl.when(jq == 0)
-    def _init():
-        dx_ref[...] = part
-
-    @pl.when(jq > 0)
-    def _acc():
-        dx_ref[...] += part
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "t_b", "t_m", "t_k", "t_qs", "interpret", "acc_dtype", "vmem_budget_elems",
-    ),
-)
 def fused_kron_t_batched_pallas(
     dy: jax.Array,
     *factors_last_first: jax.Array,
@@ -348,144 +55,48 @@ def fused_kron_t_batched_pallas(
     acc_dtype=None,
     vmem_budget_elems: int = VMEM_BUDGET_ELEMS,
 ) -> jax.Array:
-    """Batched transposed fused chain: dy (B, M, prod(Q)*S) -> dx (B, M, K).
+    """Batched transposed fused chain (shim over ``emit``):
+    dy (B, M, prod(Q)*S) -> dx (B, M, K), per-sample (B, P_i, Q_i) factors."""
+    instr = emit.StageInstr(
+        kind=emit.TRANSPOSED_MULTIPLY,
+        ps=tuple(int(f.shape[1]) for f in factors_last_first),
+        qs=tuple(int(f.shape[2]) for f in factors_last_first),
+        t_m=t_m, t_k=t_k, t_qs=t_qs, t_b=t_b, acc_dtype=_acc_name(acc_dtype),
+    )
+    return emit.run_stage(
+        dy, factors_last_first, instr, backend="pallas", interpret=interpret,
+        vmem_budget_elems=vmem_budget_elems,
+    )
 
-    Per-sample factors ``(B, P_i, Q_i)``; the grid gains a leading batch axis
-    tiled by ``t_b`` (Q-tiles stay innermost: the sequential accumulation dim).
+
+def fused_kron_bwd_pallas(
+    x: jax.Array,
+    dy: jax.Array,
+    *factors_last_first: jax.Array,
+    t_m: int = 8,
+    t_k: int | None = None,
+    interpret: bool = False,
+    acc_dtype=None,
+    vmem_budget_elems: int = VMEM_BUDGET_ELEMS,
+) -> tuple[jax.Array, tuple[jax.Array, ...]]:
+    """Full backward of one fused stage (shim over ``emit.grad_pallas``).
+
+    x: (M, K) stage input; dy: (M, prod(Q)*S) stage output cotangent.
+    Returns (dx, dfs) with dfs in ``factors_last_first`` order, accumulated
+    in the stage's acc dtype.
     """
-    if acc_dtype is None:
-        acc_dtype = jnp.promote_types(dy.dtype, jnp.float32)
-    b, m, l_cols = dy.shape
-    n = len(factors_last_first)
-    ps = tuple(int(f.shape[1]) for f in factors_last_first)
-    qs = tuple(int(f.shape[2]) for f in factors_last_first)
-    for f in factors_last_first:
-        if int(f.shape[0]) != b:
-            raise ValueError(f"factor batch {f.shape[0]} != dy batch {b}")
-    pprod = math.prod(ps)
-    qprod = math.prod(qs)
-    if l_cols % qprod:
-        raise ValueError(f"dY cols {l_cols} not divisible by prod(Q)={qprod}")
-    s_out = l_cols // qprod
-    k = s_out * pprod
-    t_b = min(t_b, b)
-    t_m = min(t_m, m)
-    t_k = min(t_k or k, k)
-    if t_qs is None:
-        t_qs = qs
-    t_qs = tuple(min(t, q) for t, q in zip(t_qs, qs))
-    if any(q % t for q, t in zip(qs, t_qs)):
-        raise ValueError(f"t_qs must divide factor Q dims: {t_qs} vs {qs}")
-    if t_k % pprod:
-        raise ValueError(f"T_K={t_k} must be a multiple of prod(P)={pprod}")
-    growth = transposed_growth(ps, qs, t_qs)
-    if t_b * t_m * t_k * growth > vmem_budget_elems:
-        raise ValueError(
-            f"batched tile {t_b}x{t_m}x{t_k} (growth {growth:.2f}) exceeds "
-            f"VMEM budget; reduce t_b / t_k or tile Q via t_qs"
-        )
-    if b % t_b or m % t_m or k % t_k:
-        raise ValueError(
-            f"tiles must divide dims: {(b, m, k)} vs {(t_b, t_m, t_k)}"
-        )
-
-    ts_out = t_k // pprod
-    nq = tuple(q // t for q, t in zip(qs, t_qs))
-    strides = [1] * n
-    for i in range(1, n):
-        strides[i] = strides[i - 1] * nq[i - 1]
-    nq_tiles = math.prod(nq)
-
-    def q_digit(jq, i):
-        return (jq // strides[i]) % nq[i]
-
-    grid = (b // t_b, m // t_m, k // t_k, nq_tiles)
-    dy_view = (b, m) + tuple(reversed(qs)) + (s_out,)
-    dy_block = (t_b, t_m) + tuple(reversed(t_qs)) + (ts_out,)
-
-    def dy_index(ib, im, j, jq):
-        return (ib, im) + tuple(q_digit(jq, i) for i in reversed(range(n))) + (j,)
-
-    in_specs = [pl.BlockSpec(dy_block, dy_index)]
-    for i, f in enumerate(factors_last_first):
-        in_specs.append(
-            pl.BlockSpec(
-                (t_b, ps[i], t_qs[i]),
-                lambda ib, im, j, jq, i=i: (ib, 0, q_digit(jq, i)),
-            )
-        )
-    out = pl.pallas_call(
-        functools.partial(
-            _fused_t_batched_kernel, ps=ps, qs=t_qs, acc_dtype=acc_dtype
-        ),
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((t_b, t_m, t_k), lambda ib, im, j, jq: (ib, im, j)),
-        out_shape=jax.ShapeDtypeStruct((b, m, k), acc_dtype),
-        interpret=interpret,
-    )(dy.reshape(dy_view), *factors_last_first)
-    return out.astype(dy.dtype)
+    instr = emit.StageInstr(
+        kind=emit.MULTIPLY,
+        ps=tuple(int(f.shape[0]) for f in factors_last_first),
+        qs=tuple(int(f.shape[1]) for f in factors_last_first),
+        t_m=t_m, t_k=t_k, acc_dtype=_acc_name(acc_dtype),
+    )
+    return emit.run_stage_grad(
+        x, dy, factors_last_first, instr, backend="pallas",
+        interpret=interpret, vmem_budget_elems=vmem_budget_elems,
+    )
 
 
-def _fused_bwd_batched_kernel(
-    x_ref, dy_ref, *refs, ps: tuple[int, ...], qs: tuple[int, ...], acc_dtype
-):
-    f_refs = refs[: len(ps)]
-    dx_ref = refs[len(ps)]
-    df_refs = refs[len(ps) + 1 :]
-    im, j = pl.program_id(1), pl.program_id(2)
-    # Factor grads are PER SAMPLE: accumulate over the (M, K) grid for a fixed
-    # batch block only (batch is the outermost grid axis, so (im, j) == (0, 0)
-    # marks the first visit of each df block).
-    first = jnp.logical_and(im == 0, j == 0)
-    t_b, t_m = x_ref.shape[0], x_ref.shape[1]
-    us = []
-    y = x_ref[...].astype(acc_dtype)
-    cols = y.shape[2]
-    for f_ref, p, q in zip(f_refs, ps, qs):
-        us.append(y)
-        s = cols // p
-        acc = jax.lax.dot_general(
-            y.reshape(t_b, t_m * s, p), f_ref[...], (((2,), (1,)), ((0,), (0,))),
-            preferred_element_type=acc_dtype,
-        )
-        y = jnp.swapaxes(acc.reshape(t_b, t_m, s, q), 2, 3).reshape(
-            t_b, t_m, q * s
-        )
-        cols = q * s
-    g = dy_ref[...].reshape(t_b, t_m, -1).astype(acc_dtype)
-    cols = g.shape[2]
-    for idx in reversed(range(len(f_refs))):
-        p, q = ps[idx], qs[idx]
-        s = cols // q
-        g2 = jnp.swapaxes(g.reshape(t_b, t_m, q, s), 2, 3).reshape(
-            t_b, t_m * s, q
-        )
-        u2 = us[idx].reshape(t_b, t_m * s, p)
-        df_part = jax.lax.dot_general(
-            u2, g2, (((1,), (1,)), ((0,), (0,))), preferred_element_type=acc_dtype
-        )  # (t_b, p, q)
-
-        @pl.when(first)
-        def _init(df_ref=df_refs[idx], df_part=df_part):
-            df_ref[...] = df_part
-
-        @pl.when(jnp.logical_not(first))
-        def _acc(df_ref=df_refs[idx], df_part=df_part):
-            df_ref[...] += df_part
-
-        g = jax.lax.dot_general(
-            g2, f_refs[idx][...], (((2,), (2,)), ((0,), (0,))),
-            preferred_element_type=acc_dtype,
-        ).reshape(t_b, t_m, s * p)
-        cols = s * p
-    dx_ref[...] = g.astype(dx_ref.dtype)
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("t_b", "t_m", "t_k", "interpret", "acc_dtype", "vmem_budget_elems"),
-)
 def fused_kron_bwd_batched_pallas(
     x: jax.Array,
     dy: jax.Array,
@@ -497,72 +108,18 @@ def fused_kron_bwd_batched_pallas(
     acc_dtype=None,
     vmem_budget_elems: int = VMEM_BUDGET_ELEMS,
 ) -> tuple[jax.Array, tuple[jax.Array, ...]]:
-    """Batched full stage backward: per-sample (dx, factor grads).
-
-    x: (B, M, K); dy: (B, M, prod(Q)*S); factors (B, P_i, Q_i).  Returns
-    (dx (B, M, K), dfs each (B, P_i, Q_i) in ``factors_last_first`` order,
-    accumulated in ``acc_dtype``).
-    """
-    if acc_dtype is None:
-        acc_dtype = jnp.promote_types(dy.dtype, jnp.float32)
-    b, m, k = x.shape
-    ps = tuple(int(f.shape[1]) for f in factors_last_first)
-    qs = tuple(int(f.shape[2]) for f in factors_last_first)
-    for f in factors_last_first:
-        if int(f.shape[0]) != b:
-            raise ValueError(f"factor batch {f.shape[0]} != x batch {b}")
-    pprod = math.prod(ps)
-    qprod = math.prod(qs)
-    if k % pprod:
-        raise ValueError(f"K={k} not divisible by prod(P)={pprod}")
-    s_out = k // pprod
-    if dy.shape != (b, m, qprod * s_out):
-        raise ValueError(f"dy shape {dy.shape} != {(b, m, qprod * s_out)}")
-    t_b = min(t_b, b)
-    t_m = min(t_m, m)
-    t_k = min(t_k or k, k)
-    if t_k % pprod:
-        raise ValueError(f"T_K={t_k} must be a multiple of prod(P)={pprod}")
-    cols = float(t_k)
-    live = cols
-    for p, q in zip(ps, qs):
-        cols = cols / p * q
-        live += cols
-    if t_b * t_m * (live + cols) > vmem_budget_elems:
-        raise ValueError(
-            f"batched bwd tile {t_b}x{t_m}x{t_k} live set "
-            f"{int(t_b * t_m * (live + cols))} elems exceeds VMEM budget; "
-            f"reduce t_b / t_k or split the stage"
-        )
-    if b % t_b or m % t_m or k % t_k:
-        raise ValueError(
-            f"tiles must divide dims: {(b, m, k)} vs {(t_b, t_m, t_k)}"
-        )
-
-    ts_out = t_k // pprod
-    grid = (b // t_b, m // t_m, k // t_k)
-    in_specs = [
-        pl.BlockSpec((t_b, t_m, t_k), lambda ib, im, j: (ib, im, j)),
-        pl.BlockSpec((t_b, t_m, qprod, ts_out), lambda ib, im, j: (ib, im, 0, j)),
-    ]
-    for p, q in zip(ps, qs):
-        in_specs.append(pl.BlockSpec((t_b, p, q), lambda ib, im, j: (ib, 0, 0)))
-    out_specs = [pl.BlockSpec((t_b, t_m, t_k), lambda ib, im, j: (ib, im, j))]
-    out_shapes = [jax.ShapeDtypeStruct((b, m, k), x.dtype)]
-    for p, q in zip(ps, qs):
-        out_specs.append(pl.BlockSpec((t_b, p, q), lambda ib, im, j: (ib, 0, 0)))
-        out_shapes.append(jax.ShapeDtypeStruct((b, p, q), acc_dtype))
-    outs = pl.pallas_call(
-        functools.partial(
-            _fused_bwd_batched_kernel, ps=ps, qs=qs, acc_dtype=acc_dtype
-        ),
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=out_specs,
-        out_shape=out_shapes,
-        interpret=interpret,
-    )(x, dy.reshape(b, m, qprod, s_out), *factors_last_first)
-    return outs[0], tuple(outs[1:])
+    """Batched full stage backward (shim over ``emit.grad_pallas``): per-sample
+    (dx (B, M, K), dfs each (B, P_i, Q_i) in ``factors_last_first`` order)."""
+    instr = emit.StageInstr(
+        kind=emit.MULTIPLY,
+        ps=tuple(int(f.shape[1]) for f in factors_last_first),
+        qs=tuple(int(f.shape[2]) for f in factors_last_first),
+        t_m=t_m, t_k=t_k, t_b=t_b, acc_dtype=_acc_name(acc_dtype),
+    )
+    return emit.run_stage_grad(
+        x, dy, factors_last_first, instr, backend="pallas",
+        interpret=interpret, vmem_budget_elems=vmem_budget_elems,
+    )
 
 
 __all__ = [

@@ -8,27 +8,32 @@ Three backends for one sliced multiply / fused chain:
                   ``lax.scan`` over M-tiles so the whole per-tile chain stays
                   cache-resident — the CPU analogue of the Pallas kernel's
                   VMEM fusion (see EXPERIMENTS.md §Backward).
-  * ``pallas``  — the Pallas TPU kernels (kron_sliced.py / kron_fused.py /
-                  kron_fused_t.py).  ``interpret=True`` is forced
+  * ``pallas``  — the Pallas TPU kernels.  ``interpret=True`` is forced
                   automatically off-TPU so the same call sites work in this
                   CPU container (correctness validation) and on real hardware
                   (performance).
   * ``auto``    — pallas on TPU, xla elsewhere.
 
-The wrappers are shape-polymorphic dispatchers, not jitted themselves: the
-underlying implementations are jitted (or meant to be called under an outer
-jit, e.g. inside train_step).
+Since the StageProgram refactor the fused-chain execution lives in
+``kernels/emit.py`` (one kernel template + one scan executor interpreting
+``StageInstr``s); the six ``fused_kron*`` wrappers here are DEPRECATED
+compatibility shims that build a one-instruction program and call the
+emitter.  Each warns once per process; the engine's hot paths call ``emit``
+directly and never enter them.  ``sliced_multiply`` / ``sliced_multiply_t``
+remain first-class: they dispatch the per-factor C1/C2 kernels
+(kron_sliced.py / kron_sliced_t.py) that the unfused baseline and the
+distributed per-iteration mode use.
 """
 from __future__ import annotations
 
-import functools
+import warnings
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 
-from . import kron_fused, kron_fused_t, kron_sliced, kron_sliced_t
+from . import emit, kron_sliced, kron_sliced_t
 from . import ref as _ref
+from .emit import XLA_CACHE_BUDGET_BYTES, acc_dtype_for, resolve_backend  # noqa: F401
 
 Backend = str  # "auto" | "xla" | "pallas"
 
@@ -37,35 +42,29 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def resolve_backend(backend: Backend) -> str:
-    if backend == "auto":
-        return "pallas" if _on_tpu() else "xla"
-    return backend
-
-
 def _interpret() -> bool:
     return not _on_tpu()
 
 
-def acc_dtype_for(dtype) -> jnp.dtype:
-    """f32 accumulation for <=f32 inputs, f64 for f64 (never truncate)."""
-    return jnp.promote_types(dtype, jnp.float32)
+_SHIM_WARNED: set[str] = set()
 
 
-def _sliced_body(x: jax.Array, f: jax.Array) -> jax.Array:
-    m, k = x.shape
-    p, q = f.shape
-    s = k // p
-    acc = jax.lax.dot_general(
-        x.reshape(m * s, p), f, (((1,), (0,)), ((), ())),
-        preferred_element_type=acc_dtype_for(x.dtype),
+def warn_shim(name: str) -> None:
+    """Emit ONE DeprecationWarning per process per legacy fused_kron* shim."""
+    if name in _SHIM_WARNED:
+        return
+    _SHIM_WARNED.add(name)
+    warnings.warn(
+        f"kernels.ops.{name} is deprecated: build a StageInstr/StageProgram "
+        "and call kernels.emit (run_stage / run_stage_grad); the engine's "
+        "planned paths do this automatically.",
+        DeprecationWarning,
+        stacklevel=3,
     )
-    return (
-        jnp.swapaxes(acc.reshape(m, s, q), 1, 2).reshape(m, q * s).astype(x.dtype)
-    )
 
 
-_sliced_xla = jax.jit(_sliced_body)
+_sliced_xla = jax.jit(lambda x, f: emit.sliced_apply(x, f))
+_sliced_t_xla = jax.jit(lambda dy, f: emit.sliced_apply_t(dy, f))
 
 
 def sliced_multiply(
@@ -83,22 +82,6 @@ def sliced_multiply(
     return kron_sliced.sliced_multiply_pallas(
         x, f, t_m=t_m, t_s=t_s, t_q=t_q, interpret=_interpret()
     )
-
-
-def _sliced_t_body(dy: jax.Array, f: jax.Array) -> jax.Array:
-    m, l = dy.shape
-    p, q = f.shape
-    s = l // q
-    acc = jax.lax.dot_general(
-        jnp.swapaxes(dy.reshape(m, q, s), 1, 2).reshape(m * s, q),
-        jnp.swapaxes(f, 0, 1),
-        (((1,), (0,)), ((), ())),
-        preferred_element_type=acc_dtype_for(dy.dtype),
-    )
-    return acc.reshape(m, s * p).astype(dy.dtype)
-
-
-_sliced_t_xla = jax.jit(_sliced_t_body)
 
 
 def sliced_multiply_t(
@@ -119,61 +102,18 @@ def sliced_multiply_t(
 
 
 # ---------------------------------------------------------------------------
-# Fused chains (C3): Pallas kernels on TPU, M-tiled lax.scan on XLA/CPU
+# DEPRECATED fused-chain shims (one StageInstr each, executed by the emitter)
 # ---------------------------------------------------------------------------
 
 
-# CPU cache budget for the scan-fused XLA paths (the L2/L3 analogue of the
-# Pallas kernels' VMEM budget): chains whose whole working set fits are run
-# UNTILED — one set of full-size GEMMs beats a serializing scan when nothing
-# spills (measured: the B=8, M=64, (16,16)^3 batched chain is ~1.8x faster
-# untiled, while the M=256, (16,16)^4 fig_bwd chain at 64 MB still tiles).
-XLA_CACHE_BUDGET_BYTES = 16 * 1024 * 1024
-
-
-def _chain_max_cols(cols: int, pqs: Sequence[tuple[int, int]]) -> int:
-    """Max column count over the chain states starting from ``cols``."""
-    mx = cols
-    for p, q in pqs:
-        cols = cols // p * q
-        mx = max(mx, cols)
-    return mx
-
-
-def _xla_tile_rows(m: int, t_m: int, row_bytes: int | None = None) -> int | None:
-    """Effective M-tile for the scan-fused XLA path, or None to run untiled.
-
-    Tiling pays off only when the full chain would spill cache
-    (``row_bytes``: widest per-row working set) AND the tile chain fits with
-    enough tiles to amortize the scan; tiny analytic t_m values (tuned for
-    the TPU sublane) are clamped up to a useful CPU tile.
-    """
-    if row_bytes is not None and m * row_bytes <= XLA_CACHE_BUDGET_BYTES:
-        return None
-    t = min(m, max(t_m, 8))
-    if t >= m or m % t or m // t < 2:
-        return None
-    return t
-
-
-@functools.partial(jax.jit, static_argnames=("t_m",))
-def _fused_xla(x: jax.Array, factors: tuple[jax.Array, ...], t_m: int) -> jax.Array:
-    def chain(y):
-        for f in factors:
-            y = _sliced_body(y, f)
-        return y
-
-    m, k = x.shape
-    row_bytes = _chain_max_cols(
-        k, [(int(f.shape[0]), int(f.shape[1])) for f in factors]
-    ) * x.dtype.itemsize
-    t = _xla_tile_rows(m, t_m, row_bytes)
-    if t is None:
-        return chain(x)
-    _, yt = jax.lax.scan(
-        lambda _, xt: (None, chain(xt)), None, x.reshape(m // t, t, k)
+def _chain_instr(factors, *, kind, t_b=None, t_m=8, t_k=None, t_qs=None):
+    off = 0 if t_b is None else 1
+    return emit.StageInstr(
+        kind=kind,
+        ps=tuple(int(f.shape[off]) for f in factors),
+        qs=tuple(int(f.shape[off + 1]) for f in factors),
+        t_m=t_m, t_k=t_k, t_qs=t_qs, t_b=t_b,
     )
-    return yt.reshape(m, -1)
 
 
 def fused_kron(
@@ -185,33 +125,15 @@ def fused_kron(
     t_k: int | None = None,
     t_qs: tuple[int, ...] | None = None,
 ) -> jax.Array:
-    """Chain of sliced multiplies in one kernel (C3).  factors[0] == F^N."""
-    b = resolve_backend(backend)
-    if b == "xla":
-        return _fused_xla(x, tuple(factors_last_first), t_m)
-    return kron_fused.fused_kron_pallas(
-        x, *factors_last_first, t_m=t_m, t_k=t_k, t_qs=t_qs, interpret=_interpret()
-    )
+    """DEPRECATED shim: chain of sliced multiplies in one kernel (C3).
 
-
-@functools.partial(jax.jit, static_argnames=("t_m",))
-def _fused_t_xla(dy: jax.Array, factors: tuple[jax.Array, ...], t_m: int) -> jax.Array:
-    def chain(g):
-        for f in reversed(factors):
-            g = _sliced_t_body(g, f)
-        return g
-
-    m, l = dy.shape
-    row_bytes = _chain_max_cols(
-        l, [(int(f.shape[1]), int(f.shape[0])) for f in reversed(factors)]
-    ) * dy.dtype.itemsize
-    t = _xla_tile_rows(m, t_m, row_bytes)
-    if t is None:
-        return chain(dy)
-    _, gt = jax.lax.scan(
-        lambda _, gt_: (None, chain(gt_)), None, dy.reshape(m // t, t, l)
-    )
-    return gt.reshape(m, -1)
+    ``factors_last_first[0] == F^N``.  Equivalent to ``emit.run_stage`` on a
+    ``multiply`` instruction.
+    """
+    warn_shim("fused_kron")
+    fs = tuple(factors_last_first)
+    instr = _chain_instr(fs, kind=emit.MULTIPLY, t_m=t_m, t_k=t_k, t_qs=t_qs)
+    return emit.run_stage(x, fs, instr, backend=backend)
 
 
 def fused_kron_t(
@@ -223,73 +145,18 @@ def fused_kron_t(
     t_k: int | None = None,
     t_qs: tuple[int, ...] | None = None,
 ) -> jax.Array:
-    """Transposed fused chain: the input cotangent of ``fused_kron``.
+    """DEPRECATED shim: transposed fused chain (input cotangent of
+    ``fused_kron``); a ``transposed_multiply`` instruction on the emitter.
 
     Takes the SAME factor list as the forward call and un-applies the chain
     (last-applied factor's transpose first).
     """
-    b = resolve_backend(backend)
-    if b == "xla":
-        return _fused_t_xla(dy, tuple(factors_last_first), t_m)
-    return kron_fused_t.fused_kron_t_pallas(
-        dy, *factors_last_first, t_m=t_m, t_k=t_k, t_qs=t_qs, interpret=_interpret()
+    warn_shim("fused_kron_t")
+    fs = tuple(factors_last_first)
+    instr = _chain_instr(
+        fs, kind=emit.TRANSPOSED_MULTIPLY, t_m=t_m, t_k=t_k, t_qs=t_qs
     )
-
-
-def _fused_bwd_tile(us_first, g, factors, acc):
-    """Backward of one chain tile: shared relayout per factor feeds both the
-    factor-gradient GEMM and the chain-step GEMM."""
-    t_m = g.shape[0]
-    us = [us_first]
-    y = us_first
-    for f in factors[:-1]:
-        y = _sliced_body(y, f)
-        us.append(y)
-    dfs = [None] * len(factors)
-    cols = g.shape[1]
-    for idx in reversed(range(len(factors))):
-        f = factors[idx]
-        p, q = int(f.shape[0]), int(f.shape[1])
-        s = cols // q
-        g2 = jnp.swapaxes(g.reshape(t_m, q, s), 1, 2).reshape(t_m * s, q)
-        u2 = us[idx].reshape(t_m * s, p)
-        dfs[idx] = jax.lax.dot_general(
-            u2.astype(acc), g2.astype(acc), (((0,), (0,)), ((), ())),
-            preferred_element_type=acc,
-        )
-        g = jax.lax.dot_general(
-            g2, f, (((1,), (1,)), ((), ())), preferred_element_type=acc
-        ).reshape(t_m, s * p).astype(g.dtype)
-        cols = s * p
-    return dfs, g
-
-
-@functools.partial(jax.jit, static_argnames=("t_m",))
-def _fused_bwd_xla(
-    x: jax.Array, dy: jax.Array, factors: tuple[jax.Array, ...], t_m: int
-):
-    acc = acc_dtype_for(dy.dtype)
-    m, k = x.shape
-    # Backward live set per row: every forward chain state is held (the
-    # rematerialized us) plus the gradient at its widest — a sum, not a max.
-    live = cols = k
-    for f in factors:
-        cols = cols // int(f.shape[0]) * int(f.shape[1])
-        live += cols
-    t = _xla_tile_rows(m, t_m, live * x.dtype.itemsize)
-    if t is None:
-        dfs, dx = _fused_bwd_tile(x, dy, factors, acc)
-        return dx, tuple(dfs)
-
-    def body(carry, xg):
-        dfs, g = _fused_bwd_tile(xg[0], xg[1], factors, acc)
-        return tuple(c + d for c, d in zip(carry, dfs)), g
-
-    carry0 = tuple(jnp.zeros(f.shape, acc) for f in factors)
-    dfs, dxt = jax.lax.scan(
-        body, carry0, (x.reshape(m // t, t, k), dy.reshape(m // t, t, -1))
-    )
-    return dxt.reshape(m, k), dfs
+    return emit.run_stage(dy, fs, instr, backend=backend)
 
 
 def fused_kron_bwd(
@@ -301,102 +168,17 @@ def fused_kron_bwd(
     t_m: int = 8,
     t_k: int | None = None,
 ) -> tuple[jax.Array, tuple[jax.Array, ...]]:
-    """Full backward of one fused stage: (dx, per-factor grads).
+    """DEPRECATED shim: full backward of one fused stage (dx, factor grads)
+    via ``emit.run_stage_grad``.
 
     x is the stage input, dy the stage output cotangent; factor grads are
     returned in ``factors_last_first`` order, accumulated in f32 (callers
-    cast).  On XLA this runs as one M-tiled scan whose per-tile body
-    rematerializes the forward chain in cache; on TPU it is a single Pallas
-    kernel doing the same in VMEM (kron_fused_t.fused_kron_bwd_pallas).
+    cast).
     """
-    b = resolve_backend(backend)
-    if b == "xla":
-        return _fused_bwd_xla(x, dy, tuple(factors_last_first), t_m)
-    return kron_fused_t.fused_kron_bwd_pallas(
-        x, dy, *factors_last_first, t_m=t_m, t_k=t_k, interpret=_interpret()
-    )
-
-
-# ---------------------------------------------------------------------------
-# Batched chains: B independent problems with per-sample factors.  Pallas
-# batch-grid kernels on TPU; on XLA a lax.scan over batch tiles whose body
-# runs the whole per-tile chain with batch-dimension GEMMs (one dispatch for
-# the entire batch — the launch-amortization the batched subsystem is for).
-# ---------------------------------------------------------------------------
-
-
-def _batch_tile(b: int, t_b: int, sample_bytes: int | None = None) -> int | None:
-    """Effective batch tile for the scan-batched XLA path, or None untiled.
-
-    ``sample_bytes``: one sample's chain working set — when the whole batch
-    fits the cache budget, run untiled (same rule as ``_xla_tile_rows``).
-    """
-    if sample_bytes is not None and b * sample_bytes <= XLA_CACHE_BUDGET_BYTES:
-        return None
-    t = min(b, max(t_b, 1))
-    if t >= b or b % t or b // t < 2:
-        return None
-    return t
-
-
-def _sample_chain_bytes(x: jax.Array, factors, transposed: bool = False) -> int:
-    m = int(x.shape[1])
-    cols = int(x.shape[2])
-    if transposed:
-        pqs = [(int(f.shape[2]), int(f.shape[1])) for f in reversed(factors)]
-    else:
-        pqs = [(int(f.shape[1]), int(f.shape[2])) for f in factors]
-    return m * _chain_max_cols(cols, pqs) * x.dtype.itemsize
-
-
-def _sliced_body_b(x: jax.Array, f: jax.Array) -> jax.Array:
-    """Batched sliced multiply: (B, M, S*P) x (B, P, Q) -> (B, M, Q*S)."""
-    b, m, k = x.shape
-    p, q = f.shape[1], f.shape[2]
-    s = k // p
-    acc = jax.lax.dot_general(
-        x.reshape(b, m * s, p), f, (((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=acc_dtype_for(x.dtype),
-    )
-    return (
-        jnp.swapaxes(acc.reshape(b, m, s, q), 2, 3)
-        .reshape(b, m, q * s)
-        .astype(x.dtype)
-    )
-
-
-def _sliced_t_body_b(dy: jax.Array, f: jax.Array) -> jax.Array:
-    """Batched transposed sliced multiply: (B, M, Q*S) x (B, P, Q) -> (B, M, S*P)."""
-    b, m, l = dy.shape
-    p, q = f.shape[1], f.shape[2]
-    s = l // q
-    g2 = jnp.swapaxes(dy.reshape(b, m, q, s), 2, 3).reshape(b, m * s, q)
-    acc = jax.lax.dot_general(
-        g2, f, (((2,), (2,)), ((0,), (0,))),
-        preferred_element_type=acc_dtype_for(dy.dtype),
-    )
-    return acc.reshape(b, m, s * p).astype(dy.dtype)
-
-
-@functools.partial(jax.jit, static_argnames=("t_b",))
-def _fused_batched_xla(
-    x: jax.Array, factors: tuple[jax.Array, ...], t_b: int
-) -> jax.Array:
-    def chain(yt, fts):
-        for f in fts:
-            yt = _sliced_body_b(yt, f)
-        return yt
-
-    b = x.shape[0]
-    t = _batch_tile(b, t_b, _sample_chain_bytes(x, factors))
-    if t is None:
-        return chain(x, factors)
-    xs = (
-        x.reshape(b // t, t, *x.shape[1:]),
-        tuple(f.reshape(b // t, t, *f.shape[1:]) for f in factors),
-    )
-    _, yt = jax.lax.scan(lambda _, xf: (None, chain(xf[0], xf[1])), None, xs)
-    return yt.reshape(b, x.shape[1], -1)
+    warn_shim("fused_kron_bwd")
+    fs = tuple(factors_last_first)
+    instr = _chain_instr(fs, kind=emit.MULTIPLY, t_m=t_m, t_k=t_k)
+    return emit.run_stage_grad(x, dy, fs, instr, backend=backend)
 
 
 def fused_kron_batched(
@@ -409,35 +191,14 @@ def fused_kron_batched(
     t_k: int | None = None,
     t_qs: tuple[int, ...] | None = None,
 ) -> jax.Array:
-    """Batched fused chain: x (B, M, K), per-sample factors (B, P_i, Q_i)."""
-    b = resolve_backend(backend)
-    if b == "xla":
-        return _fused_batched_xla(x, tuple(factors_last_first), t_b)
-    return kron_fused.fused_kron_batched_pallas(
-        x, *factors_last_first, t_b=t_b, t_m=t_m, t_k=t_k, t_qs=t_qs,
-        interpret=_interpret(),
+    """DEPRECATED shim: batched fused chain — x (B, M, K), per-sample factors
+    (B, P_i, Q_i) — via a batched ``multiply`` instruction."""
+    warn_shim("fused_kron_batched")
+    fs = tuple(factors_last_first)
+    instr = _chain_instr(
+        fs, kind=emit.MULTIPLY, t_b=t_b, t_m=t_m, t_k=t_k, t_qs=t_qs
     )
-
-
-@functools.partial(jax.jit, static_argnames=("t_b",))
-def _fused_t_batched_xla(
-    dy: jax.Array, factors: tuple[jax.Array, ...], t_b: int
-) -> jax.Array:
-    def chain(gt, fts):
-        for f in reversed(fts):
-            gt = _sliced_t_body_b(gt, f)
-        return gt
-
-    b = dy.shape[0]
-    t = _batch_tile(b, t_b, _sample_chain_bytes(dy, factors, transposed=True))
-    if t is None:
-        return chain(dy, factors)
-    xs = (
-        dy.reshape(b // t, t, *dy.shape[1:]),
-        tuple(f.reshape(b // t, t, *f.shape[1:]) for f in factors),
-    )
-    _, gt = jax.lax.scan(lambda _, gf: (None, chain(gf[0], gf[1])), None, xs)
-    return gt.reshape(b, dy.shape[1], -1)
+    return emit.run_stage(x, fs, instr, backend=backend)
 
 
 def fused_kron_t_batched(
@@ -450,75 +211,14 @@ def fused_kron_t_batched(
     t_k: int | None = None,
     t_qs: tuple[int, ...] | None = None,
 ) -> jax.Array:
-    """Batched transposed fused chain (input cotangent of fused_kron_batched)."""
-    b = resolve_backend(backend)
-    if b == "xla":
-        return _fused_t_batched_xla(dy, tuple(factors_last_first), t_b)
-    return kron_fused_t.fused_kron_t_batched_pallas(
-        dy, *factors_last_first, t_b=t_b, t_m=t_m, t_k=t_k, t_qs=t_qs,
-        interpret=_interpret(),
+    """DEPRECATED shim: batched transposed fused chain (input cotangent of
+    ``fused_kron_batched``)."""
+    warn_shim("fused_kron_t_batched")
+    fs = tuple(factors_last_first)
+    instr = _chain_instr(
+        fs, kind=emit.TRANSPOSED_MULTIPLY, t_b=t_b, t_m=t_m, t_k=t_k, t_qs=t_qs
     )
-
-
-def _fused_bwd_tile_b(us_first, g, factors, acc):
-    """Batched backward of one chain tile (cf. _fused_bwd_tile): per-sample
-    factor grads, so the batch dim rides every GEMM instead of being summed."""
-    t_b, t_m = g.shape[0], g.shape[1]
-    us = [us_first]
-    y = us_first
-    for f in factors[:-1]:
-        y = _sliced_body_b(y, f)
-        us.append(y)
-    dfs = [None] * len(factors)
-    cols = g.shape[2]
-    for idx in reversed(range(len(factors))):
-        f = factors[idx]
-        p, q = int(f.shape[1]), int(f.shape[2])
-        s = cols // q
-        g2 = jnp.swapaxes(g.reshape(t_b, t_m, q, s), 2, 3).reshape(
-            t_b, t_m * s, q
-        )
-        u2 = us[idx].reshape(t_b, t_m * s, p)
-        dfs[idx] = jax.lax.dot_general(
-            u2.astype(acc), g2.astype(acc), (((1,), (1,)), ((0,), (0,))),
-            preferred_element_type=acc,
-        )  # (t_b, p, q)
-        g = jax.lax.dot_general(
-            g2, f, (((2,), (2,)), ((0,), (0,))), preferred_element_type=acc
-        ).reshape(t_b, t_m, s * p).astype(g.dtype)
-        cols = s * p
-    return dfs, g
-
-
-@functools.partial(jax.jit, static_argnames=("t_b",))
-def _fused_bwd_batched_xla(
-    x: jax.Array, dy: jax.Array, factors: tuple[jax.Array, ...], t_b: int
-):
-    acc = acc_dtype_for(dy.dtype)
-    b, m, k = x.shape
-    live = cols = k
-    for f in factors:
-        cols = cols // int(f.shape[1]) * int(f.shape[2])
-        live += cols
-    t = _batch_tile(b, t_b, m * live * x.dtype.itemsize)
-    if t is None:
-        dfs, dx = _fused_bwd_tile_b(x, dy, factors, acc)
-        return dx, tuple(dfs)
-
-    def body(_, xs):
-        xt, dyt, fts = xs
-        dfs, g = _fused_bwd_tile_b(xt, dyt, fts, acc)
-        return None, (g, tuple(dfs))
-
-    xs = (
-        x.reshape(b // t, t, m, k),
-        dy.reshape(b // t, t, m, -1),
-        tuple(f.reshape(b // t, t, *f.shape[1:]) for f in factors),
-    )
-    _, (dxt, dfts) = jax.lax.scan(body, None, xs)
-    return dxt.reshape(b, m, k), tuple(
-        d.reshape(b, *d.shape[2:]) for d in dfts
-    )
+    return emit.run_stage(dy, fs, instr, backend=backend)
 
 
 def fused_kron_bwd_batched(
@@ -531,18 +231,12 @@ def fused_kron_bwd_batched(
     t_m: int = 8,
     t_k: int | None = None,
 ) -> tuple[jax.Array, tuple[jax.Array, ...]]:
-    """Batched full stage backward: per-sample (dx, factor grads).
-
-    x (B, M, K), dy (B, M, prod(Q)*S), factors (B, P_i, Q_i); dfs returned in
-    ``factors_last_first`` order, each (B, P_i, Q_i), accumulated in f32.
-    """
-    b = resolve_backend(backend)
-    if b == "xla":
-        return _fused_bwd_batched_xla(x, dy, tuple(factors_last_first), t_b)
-    return kron_fused_t.fused_kron_bwd_batched_pallas(
-        x, dy, *factors_last_first, t_b=t_b, t_m=t_m, t_k=t_k,
-        interpret=_interpret(),
-    )
+    """DEPRECATED shim: batched full stage backward — per-sample (dx, factor
+    grads each (B, P_i, Q_i)) — via ``emit.run_stage_grad``."""
+    warn_shim("fused_kron_bwd_batched")
+    fs = tuple(factors_last_first)
+    instr = _chain_instr(fs, kind=emit.MULTIPLY, t_b=t_b, t_m=t_m, t_k=t_k)
+    return emit.run_stage_grad(x, dy, fs, instr, backend=backend)
 
 
 # Re-export the oracles so tests can import one module.

@@ -174,6 +174,36 @@ def test_plan_cache_save_merges_concurrent_entries(tmp_path):
     assert set(entries) == {"a", "b"}
 
 
+def test_measured_plan_records_candidate_set(tmp_path):
+    """The unified measured path (single AND batched through one
+    _measured_plan) records the candidate set it ranked in the cache entry —
+    with the batched sweep widened over t_b divisors."""
+    from repro.core.autotune import make_batched_plan
+
+    cache = str(tmp_path / "plans.json")
+    prob = KronProblem(8, (4, 4), (4, 4))
+    make_plan(prob, tune="measure", backend="xla", cache_path=cache)
+    make_batched_plan(
+        prob, 8, shared_factors=False, tune="measure", backend="xla",
+        cache_path=cache,
+    )
+    entries = load_plan_cache(cache)
+    single_key = plan_cache_key(prob, 4, "xla")
+    batched_key = plan_cache_key(
+        prob, 4, "xla", enable_prekron=False, batch=8, shared_factors=False
+    )
+    assert set(entries) == {single_key, batched_key}
+    for key in entries:
+        assert len(entries[key]["candidates"]) >= 2, entries[key]
+    # widened t_b sweep: batched candidates cover multiple batch tiles
+    tbs = {
+        c.split("t_b=")[1].split("]")[0]
+        for c in entries[batched_key]["candidates"]
+        if "t_b=" in c
+    }
+    assert len(tbs) > 1, entries[batched_key]["candidates"]
+
+
 def test_measure_best_ranks_by_wallclock():
     """measure_best picks the candidate whose closure is actually fastest."""
     x = jnp.zeros((256, 256))

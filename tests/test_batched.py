@@ -126,25 +126,28 @@ def test_ops_batched_dispatch(backend):
     )
 
 
-def test_ops_batched_xla_scan_path():
-    """The scan-over-batch-tiles XLA body (taken when the batch working set
-    exceeds the cache budget) matches the untiled batched chain."""
+def test_emit_batched_xla_scan_path():
+    """The scan-over-batch-tiles branch of the unified XLA executor (taken
+    when the batch working set exceeds the cache budget) matches the untiled
+    batched chain — forward, transposed, and stage backward."""
+    from repro.kernels import emit
+
     b, m, ps, qs = 8, 4, (4, 4), (4, 4)
     x, fls = _mk_batched(6, b, m, ps, qs)
     want = _ref_loop(x, fls)
-    budget = ops.XLA_CACHE_BUDGET_BYTES
+    budget = emit.XLA_CACHE_BUDGET_BYTES
     try:
-        ops.XLA_CACHE_BUDGET_BYTES = 0  # force the scan branch
-        got = ops._fused_batched_xla.__wrapped__(x, tuple(fls), 2)
+        emit.XLA_CACHE_BUDGET_BYTES = 0  # force the scan branch
+        got = emit._chain_xla.__wrapped__(x, tuple(fls), t_b=2, direction="fwd")
         np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
         dy = jax.random.normal(jax.random.PRNGKey(7), want.shape, jnp.float32)
-        dx, dfs = ops._fused_bwd_batched_xla.__wrapped__(x, dy, tuple(fls), 2)
+        dx, dfs = emit._grad_xla.__wrapped__(x, dy, tuple(fls), t_b=2)
         assert dx.shape == x.shape
         assert all(d.shape == f.shape for d, f in zip(dfs, fls))
-        gt = ops._fused_t_batched_xla.__wrapped__(dy, tuple(fls), 2)
+        gt = emit._chain_xla.__wrapped__(dy, tuple(fls), t_b=2, direction="bwd")
         assert gt.shape == x.shape
     finally:
-        ops.XLA_CACHE_BUDGET_BYTES = budget
+        emit.XLA_CACHE_BUDGET_BYTES = budget
 
 
 # ---------------------------------------------------------------------------
@@ -227,20 +230,22 @@ def test_batched_per_sample_grads_match_loop(backend):
 def test_batched_per_sample_x_only_grad_skips_factor_grads():
     """symbolic_zeros on the batched path: closed-over factors produce exact
     zero cotangents without running the batched factor-grad stage."""
+    from repro.kernels import emit
+
     b, m, ps, qs = 2, 4, (4, 4), (4, 4)
     x, fls = _mk_batched(13, b, m, ps, qs)
     fb = tuple(reversed(fls))
     calls = []
-    orig = ops.fused_kron_bwd_batched
+    orig = emit.run_stage_grad
     try:
-        ops.fused_kron_bwd_batched = lambda *a, **k: calls.append(1) or orig(*a, **k)
+        emit.run_stage_grad = lambda *a, **k: calls.append(1) or orig(*a, **k)
         gx = jax.grad(
             lambda x: fastkron.kron_matmul_batched(
                 x, fb, shared_factors=False
             ).sum()
         )(x)
     finally:
-        ops.fused_kron_bwd_batched = orig
+        emit.run_stage_grad = orig
     assert not calls, "batched factor-grad stage ran despite unperturbed factors"
     for i in range(b):
         want = jax.grad(lambda xi: jnp.sum(xi @ kron_matrix([f[i] for f in fb])))(x[i])

@@ -83,8 +83,8 @@ def test_engine_plan_memos_are_bounded():
     for cache in (
         engine._resolve_plan,
         engine._resolve_batched_plan,
-        engine._single_fn,
-        engine._batched_fn,
+        engine._kron_fn,
+        engine._lowered,
         engine.kron_op_for,
     ):
         assert cache.cache_info().maxsize is not None, cache

@@ -17,7 +17,7 @@ import pytest
 from repro.core import autotune, fastkron
 from repro.core import kron as K
 from repro.core.kron import KronProblem
-from repro.kernels import ops
+from repro.kernels import emit, ops
 
 jax.config.update("jax_enable_x64", True)
 
@@ -98,54 +98,74 @@ def test_planned_grads_match_numerical(backend):
 
 def test_grad_wrt_x_only_skips_factor_grads():
     """symbolic_zeros: when factors are closed-over constants, the backward
-    returns exact zeros for them without running factor-grad contractions."""
+    returns exact zeros for them without running the factor-grad stage
+    backward (emit.run_stage_grad)."""
     x, factors = make_problem(2, 4, (4, 4), (4, 4))
     calls = []
-    orig = ops.fused_kron_bwd
+    orig = emit.run_stage_grad
     try:
-        ops.fused_kron_bwd = lambda *a, **k: calls.append(1) or orig(*a, **k)
+        emit.run_stage_grad = lambda *a, **k: calls.append(1) or orig(*a, **k)
         gx = jax.grad(lambda x: fastkron.kron_matmul(x, factors).sum())(x)
     finally:
-        ops.fused_kron_bwd = orig
+        emit.run_stage_grad = orig
     assert not calls, "factor-grad stage ran despite unperturbed factors"
     want = jax.grad(lambda x: jnp.sum(x @ K.kron_matrix(factors)))(x)
     np.testing.assert_allclose(gx, want, rtol=1e-9, atol=1e-9)
 
 
-_OP_NAMES = (
-    "sliced_multiply",
-    "sliced_multiply_t",
-    "fused_kron",
-    "fused_kron_t",
-    "fused_kron_bwd",
-)
-
-
 class _OpCounter:
-    """Counts fastkron's calls into the ops dispatch layer during tracing."""
+    """Counts the engine's calls into the unified emitter (and any per-factor
+    sliced fallbacks through ops) during tracing.  Chain instructions are
+    keyed by their data-flow direction: ``chain_fwd`` is the forward /
+    remat template, ``chain_bwd`` the transposed one, ``stage_grad`` the
+    one-kernel factor-gradient stage backward."""
 
     def __init__(self):
-        self.counts = {n: 0 for n in _OP_NAMES}
+        self.counts = {
+            "sliced_multiply": 0,
+            "sliced_multiply_t": 0,
+            "chain_fwd": 0,
+            "chain_bwd": 0,
+            "stage_grad": 0,
+        }
 
     def __enter__(self):
-        self._orig = {n: getattr(ops, n) for n in _OP_NAMES}
-        for n in _OP_NAMES:
+        self._orig_stage = emit.run_stage
+        self._orig_grad = emit.run_stage_grad
+        self._orig_ops = {
+            n: getattr(ops, n) for n in ("sliced_multiply", "sliced_multiply_t")
+        }
+
+        def stage(y, fs, instr, *a, _o=self._orig_stage, **k):
+            key = "chain_fwd" if instr.direction == "fwd" else "chain_bwd"
+            self.counts[key] += 1
+            return _o(y, fs, instr, *a, **k)
+
+        def grad(*a, _o=self._orig_grad, **k):
+            self.counts["stage_grad"] += 1
+            return _o(*a, **k)
+
+        emit.run_stage = stage
+        emit.run_stage_grad = grad
+        for n in self._orig_ops:
             def wrapper(*a, _n=n, **k):
                 self.counts[_n] += 1
-                return self._orig[_n](*a, **k)
+                return self._orig_ops[_n](*a, **k)
 
             setattr(ops, n, wrapper)
         return self.counts
 
     def __exit__(self, *exc):
-        for n, fn in self._orig.items():
+        emit.run_stage = self._orig_stage
+        emit.run_stage_grad = self._orig_grad
+        for n, fn in self._orig_ops.items():
             setattr(ops, n, fn)
 
 
 def test_planned_backward_has_zero_unfused_fallbacks():
     """Acceptance: with a plan whose stages are fused, tracing
-    jax.grad(kron_matmul) issues NO per-factor sliced ops — the chain runs
-    through the fused dispatchers only (fwd, remat, and bwd)."""
+    jax.grad(kron_matmul) issues NO per-factor sliced ops — every chain op
+    is an emitted stage instruction (fwd, remat, and bwd)."""
     m, ps, qs = 8, (4, 4, 4), (4, 4, 4)
     x, factors = make_problem(3, m, ps, qs, dtype=jnp.float32)
     prob = KronProblem(m, ps, qs)
@@ -164,19 +184,19 @@ def test_planned_backward_has_zero_unfused_fallbacks():
         ).lower(x, factors)
     assert counts["sliced_multiply"] == 0, counts
     assert counts["sliced_multiply_t"] == 0, counts
-    assert counts["fused_kron"] >= 1, counts  # primal + stage-input remat
-    assert counts["fused_kron_bwd"] == len(plan.stages), counts
+    assert counts["chain_fwd"] >= 1, counts  # primal + stage-input remat
+    assert counts["stage_grad"] == len(plan.stages), counts
 
-    # grad wrt x only: the chain cotangent runs through the fused transposed
-    # dispatcher instead (no factor-grad stage at all).
+    # grad wrt x only: the chain cotangent runs through the TRANSPOSED
+    # program (emit.transpose of the forward — no factor-grad stage at all).
     with _OpCounter() as counts:
         jax.jit(
             jax.grad(lambda x: fastkron.kron_matmul(x, factors, plan=plan).sum())
         ).lower(x)
     assert counts["sliced_multiply"] == 0, counts
     assert counts["sliced_multiply_t"] == 0, counts
-    assert counts["fused_kron_t"] == len(plan.stages), counts
-    assert counts["fused_kron_bwd"] == 0, counts
+    assert counts["chain_bwd"] == len(plan.stages), counts
+    assert counts["stage_grad"] == 0, counts
 
 
 def test_unfused_baseline_backward_unchanged():

@@ -339,3 +339,73 @@ def test_ops_fused_bwd_dispatch(backend, m):
     np.testing.assert_allclose(dx, dx_want, rtol=1e-4, atol=1e-4)
     for got, want in zip(dfs, dfs_want):
         np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Legacy fused_kron* shim surface (StageProgram refactor): each wrapper warns
+# ONCE per process and its numerics are the emitter path's bit for bit.
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_fused_shims_warn_once_and_match_emitter():
+    import warnings
+
+    from repro.kernels import emit
+
+    x, fls = _mk_chain(40, 8, (4, 4), (4, 4))
+    y = fused_kron_ref(x, list(reversed(fls)))
+    dy = jax.random.normal(jax.random.PRNGKey(41), y.shape, jnp.float32)
+    xb = jnp.stack([x, x + 1])
+    flsb = [jnp.stack([f, f * 0.5]) for f in fls]
+    dyb = jnp.stack([dy, dy])
+
+    ops._SHIM_WARNED.clear()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        y1 = ops.fused_kron(x, fls, t_m=2, t_k=16)
+        ops.fused_kron(x, fls, t_m=2, t_k=16)  # 2nd call: no 2nd warning
+        y2 = ops.fused_kron_t(dy, fls, t_m=2, t_k=16)
+        y3 = ops.fused_kron_bwd(x, dy, fls, t_m=2, t_k=16)
+        y4 = ops.fused_kron_batched(xb, flsb, t_b=1, t_m=2, t_k=16)
+        y5 = ops.fused_kron_t_batched(dyb, flsb, t_b=1, t_m=2, t_k=16)
+        y6 = ops.fused_kron_bwd_batched(xb, dyb, flsb, t_b=1, t_m=2, t_k=16)
+    dep = [d for d in w if issubclass(d.category, DeprecationWarning)]
+    names = sorted(str(d.message).split()[0] for d in dep)
+    assert names == sorted(
+        f"kernels.ops.{n}" for n in (
+            "fused_kron", "fused_kron_t", "fused_kron_bwd",
+            "fused_kron_batched", "fused_kron_t_batched",
+            "fused_kron_bwd_batched",
+        )
+    ), names  # one warning per entry point, not per call
+    assert all("StageInstr" in str(d.message) for d in dep)
+
+    # Numerical identity: the shim IS the emitter path.
+    mk = lambda kind, t_b=None: emit.StageInstr(
+        kind=kind, ps=(4, 4), qs=(4, 4), t_m=2, t_k=16, t_b=t_b
+    )
+    np.testing.assert_array_equal(
+        np.asarray(y1), np.asarray(emit.run_stage(x, tuple(fls), mk(emit.MULTIPLY)))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(y2),
+        np.asarray(emit.run_stage(dy, tuple(fls), mk(emit.TRANSPOSED_MULTIPLY))),
+    )
+    dx, dfs = emit.run_stage_grad(x, dy, tuple(fls), mk(emit.MULTIPLY))
+    np.testing.assert_array_equal(np.asarray(y3[0]), np.asarray(dx))
+    for a, b in zip(y3[1], dfs):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(y4),
+        np.asarray(emit.run_stage(xb, tuple(flsb), mk(emit.MULTIPLY, 1))),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(y5),
+        np.asarray(
+            emit.run_stage(dyb, tuple(flsb), mk(emit.TRANSPOSED_MULTIPLY, 1))
+        ),
+    )
+    dxb, dfsb = emit.run_stage_grad(xb, dyb, tuple(flsb), mk(emit.MULTIPLY, 1))
+    np.testing.assert_array_equal(np.asarray(y6[0]), np.asarray(dxb))
+    for a, b in zip(y6[1], dfsb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

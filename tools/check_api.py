@@ -35,6 +35,7 @@ LOCKED = [
     "repro.core.layers",
     "repro.gp.ski",
     "repro.kernels.ops",
+    "repro.kernels.emit",
 ]
 
 _IDENT = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")

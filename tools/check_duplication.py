@@ -1,0 +1,120 @@
+#!/usr/bin/env python
+"""Kernel-duplication lock: the legacy fused paths must STAY shims.
+
+    python tools/check_duplication.py
+
+Run by CI next to the api-lock step (see .github/workflows/ci.yml).  The
+StageProgram refactor collapsed the twelve fused Kron-Matmul paths into the
+one emitter in ``src/repro/kernels/emit.py``; the six ``fused_kron*``
+wrappers in ``ops.py`` and the ``*_pallas`` entry points in ``kron_fused.py``
+/ ``kron_fused_t.py`` survive only as compatibility shims.  This check fails
+CI if any of them grows a non-shim body again:
+
+  * every ``fused_kron*`` function in the legacy modules must delegate to
+    ``emit`` (reference the emitter) and contain NO loops (a stage/chain loop
+    is the signature of a reduplicated kernel body);
+  * its body must stay small (<= MAX_SHIM_STATEMENTS statements);
+  * the legacy modules must not reacquire ``pallas_call`` kernels of their
+    own — the only module allowed to build Pallas kernels for fused chains
+    is ``emit.py``.
+
+Exit status: 0 iff every legacy symbol is still a shim.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+KERNELS = ROOT / "src" / "repro" / "kernels"
+
+# Modules whose fused_kron* symbols are locked to shim form.
+LEGACY_MODULES = ["ops.py", "kron_fused.py", "kron_fused_t.py"]
+MAX_SHIM_STATEMENTS = 25
+
+
+def _body_statements(fn: ast.FunctionDef) -> int:
+    return sum(1 for _ in ast.walk(fn) if isinstance(_, ast.stmt)) - 1
+
+
+def _has_loop(fn: ast.FunctionDef) -> bool:
+    return any(
+        isinstance(node, (ast.For, ast.While, ast.AsyncFor))
+        for node in ast.walk(fn)
+    )
+
+
+def _references_emit(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and node.id == "emit":
+            return True
+        if isinstance(node, ast.Attribute) and node.attr in (
+            "run_stage", "run_stage_grad", "run_program"
+        ):
+            return True
+    return False
+
+
+def check_module(path: pathlib.Path) -> tuple[list[str], int]:
+    errors: list[str] = []
+    n_checked = 0
+    text = path.read_text()
+    tree = ast.parse(text)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        if not node.name.startswith("fused_kron"):
+            continue
+        n_checked += 1
+        where = f"{path.relative_to(ROOT)}:{node.lineno}: {node.name}"
+        if _has_loop(node):
+            errors.append(
+                f"{where} contains a loop — a reduplicated stage/chain body; "
+                "route it through kernels/emit.py instead"
+            )
+        if not _references_emit(node):
+            errors.append(
+                f"{where} does not delegate to the emitter (no `emit` "
+                "reference) — legacy fused paths must stay shims"
+            )
+        n = _body_statements(node)
+        if n > MAX_SHIM_STATEMENTS:
+            errors.append(
+                f"{where} has {n} statements (> {MAX_SHIM_STATEMENTS}) — "
+                "grew a non-shim body"
+            )
+    if "pallas_call" in text:
+        errors.append(
+            f"{path.relative_to(ROOT)}: builds its own pallas_call — fused "
+            "Pallas kernels belong in kernels/emit.py only"
+        )
+    return errors, n_checked
+
+
+def main() -> int:
+    errors: list[str] = []
+    n_checked = 0
+    for name in LEGACY_MODULES:
+        path = KERNELS / name
+        if not path.exists():
+            errors.append(f"missing legacy module {name}")
+            continue
+        mod_errors, mod_n = check_module(path)
+        errors.extend(mod_errors)
+        n_checked += mod_n
+    if not (KERNELS / "emit.py").exists():
+        errors.append("kernels/emit.py vanished — the unified emitter is gone")
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        print(f"[dup-lock] FAILED ({len(errors)} problem(s))", file=sys.stderr)
+        return 1
+    print(
+        f"[dup-lock] OK: {n_checked} legacy fused_kron* symbol(s) across "
+        f"{len(LEGACY_MODULES)} module(s) are still emitter shims"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
