@@ -47,6 +47,7 @@ import jax.numpy as jnp
 
 from ..kernels import emit as emit_mod
 from ..kernels.emit import StageInstr, StageProgram, fused_growth
+from ..runtime import chaos, guard
 from .kron import KronProblem
 
 # TPU v5e hardware model (same constants as EXPERIMENTS.md).
@@ -159,7 +160,7 @@ def measure_best(
         if dt < best_t:
             best, best_t = cfg, dt
     if best is None:
-        raise RuntimeError("no candidate executed successfully")
+        raise guard.PlanError("no candidate executed successfully")
     return best, best_t
 
 
@@ -355,7 +356,7 @@ def make_plan(
             acc_dtype=acc_dtype,
         )
     if tune != "analytic":
-        raise ValueError(f"unknown tune mode {tune!r}")
+        raise guard.PlanError(f"unknown tune mode {tune!r}")
     ps = list(reversed(prob.ps))
     qs = list(reversed(prob.qs))
     n = len(ps)
@@ -643,7 +644,7 @@ def make_batched_plan(
             acc_dtype=acc_dtype,
         )
     if tune != "analytic":
-        raise ValueError(f"unknown tune mode {tune!r}")
+        raise guard.PlanError(f"unknown tune mode {tune!r}")
     base = make_plan(
         prob,
         dtype_bytes=dtype_bytes,
@@ -753,43 +754,81 @@ def plan_from_json(d: dict) -> KronPlan:
 def load_plan_cache(path: str) -> dict:
     """Best-effort load: a corrupt / truncated / wrong-schema file (e.g. a
     concurrent writer died mid-rename on a non-atomic filesystem) degrades to
-    an empty cache, never an exception — the next save rewrites it whole."""
+    an empty cache, never an exception — the next save rewrites it whole.
+    Corruption is routed through ``PlanCacheError`` bookkeeping: a once-per-
+    process ``GuardWarning`` plus a ``plan_cache_rebuild`` health event, so
+    lost tuning work is visible instead of silent.  A missing file or a
+    version bump is a normal condition and stays quiet."""
     try:
+        chaos.maybe_fail("plan_cache_load")
         with open(path) as f:
             data = json.load(f)
-        if not isinstance(data, dict) or data.get("version") != PLAN_CACHE_VERSION:
-            return {}
-        entries = data.get("entries", {})
-        if not isinstance(entries, dict):
-            return {}
-        return {
-            k: v
-            for k, v in entries.items()
-            if isinstance(v, dict) and isinstance(v.get("plan"), dict)
-        }
-    except (OSError, ValueError):
+    except FileNotFoundError:
         return {}
+    except (OSError, ValueError) as e:  # PlanCacheError is an OSError
+        guard.record_event("plan_cache_rebuild", guard.PlanCacheError(str(e)))
+        guard.warn_once(
+            ("plan_cache_load", path),
+            f"kron guard: plan cache at {path!r} unreadable "
+            f"({type(e).__name__}: {e}) — rebuilding from scratch",
+        )
+        return {}
+    if not isinstance(data, dict) or data.get("version") != PLAN_CACHE_VERSION:
+        return {}
+    entries = data.get("entries", {})
+    if not isinstance(entries, dict):
+        return {}
+    return {
+        k: v
+        for k, v in entries.items()
+        if isinstance(v, dict) and isinstance(v.get("plan"), dict)
+    }
 
 
-def save_plan_cache(path: str, entries: dict) -> None:
+PLAN_CACHE_SAVE_RETRIES = 3
+
+
+def save_plan_cache(
+    path: str, entries: dict, *, retries: int = PLAN_CACHE_SAVE_RETRIES
+) -> None:
     """Atomic write: temp file in the target directory + ``os.replace`` so a
     reader never sees a partial file and concurrent benchmark/CI runs can't
     poison each other.  On-disk entries written since our load are merged in
     (ours win on key conflict) so parallel tuners lose at most a race, not
-    their work."""
+    their work.  Lock/rename contention (heavy on network filesystems) gets a
+    bounded retry with exponential backoff; exhausting it warns once per path
+    (``PlanCacheError`` bookkeeping) instead of silently dropping entries."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     merged = {**load_plan_cache(path), **entries}
     payload = {"version": PLAN_CACHE_VERSION, "entries": merged}
-    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
-    try:
-        with os.fdopen(fd, "w") as f:
-            json.dump(payload, f, indent=1, sort_keys=True)
-        os.replace(tmp, path)
-    except OSError:
+    last: OSError | None = None
+    for attempt in range(max(1, retries)):
+        tmp = None
         try:
-            os.unlink(tmp)
-        except OSError:
-            pass
+            chaos.maybe_fail("plan_cache_save")
+            fd, tmp = tempfile.mkstemp(
+                dir=os.path.dirname(path) or ".", suffix=".tmp"
+            )
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+            return
+        except OSError as e:  # PlanCacheError is an OSError
+            last = e
+            if tmp is not None:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+            if attempt + 1 < max(1, retries):
+                time.sleep(0.01 * (2 ** attempt))
+    guard.record_event("plan_cache_save_failed", last)
+    guard.warn_once(
+        ("plan_cache_save", path),
+        f"kron guard: plan-cache save to {path!r} failed after "
+        f"{max(1, retries)} attempts ({type(last).__name__}: {last}) — "
+        "tuning results not persisted",
+    )
 
 
 def _plan_vmem_legal(plan: KronPlan, prob: KronProblem, batched: bool) -> bool:
@@ -932,7 +971,7 @@ def _measured_plan(
 
     try:
         best, seconds = measure_best(fn_of_plan, cands, warmup=1, iters=3)
-    except RuntimeError:
+    except (RuntimeError, guard.PlanError):
         # No candidate executed (e.g. unsupported backend/dtype combination):
         # fall back to the analytic plan and don't poison the cache.
         return base

@@ -57,6 +57,7 @@ def _shard_map(fn, *, mesh, in_specs, out_specs):
     return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
 
 from ..kernels import emit
+from ..runtime import chaos, guard
 
 
 # ---------------------------------------------------------------------------
@@ -95,7 +96,7 @@ def plan_rounds(
                 if minimal:
                     break
         if best == 0:
-            raise ValueError(
+            raise guard.PlanError(
                 f"cannot relocate: need G_K={g_k} | prod(Q) for some prefix "
                 f"with prod(P) | K_loc={k_loc}; got ps={ps[i:]}, qs={qs[i:]}"
             )
@@ -167,14 +168,23 @@ def _local_multiply_round(
         t_b=None if t_b is None else tb,
     )
     try:
+        chaos.maybe_fail("round_chain")
         return emit.run_stage(y, fs, instr, backend=backend)
-    except ValueError:
+    except guard.KronError as e:
         # Round chain cannot fit VMEM even at the degenerate tile (huge
         # Q-growth rounds): fall back to per-factor multiplies — the
         # pre-refactor behavior of the single-problem rounds, batch-
-        # polymorphic through the engine's conservative fallback.
+        # polymorphic through the engine's conservative fallback.  Same
+        # contraction, same one-collective-per-round schedule (the fallback
+        # is strictly local) — the property pinned by the chaos driver.
         from .engine import _sliced_batched
 
+        guard.record_event("round_per_factor", e)
+        guard.warn_once(
+            ("round_per_factor", tuple(ps), tuple(qs)),
+            f"kron guard: round chain {ps}x{qs} degraded to per-factor "
+            f"multiplies ({type(e).__name__}: {e})",
+        )
         for f in fs:
             y = _sliced_batched(y, f, backend)
         return y
@@ -216,6 +226,7 @@ def _relocate_batched(y: jax.Array, q_prod: int, g_k: int, model_axis: str) -> j
 
     The collective moves one ``(B, M_loc, C)`` slab per round instead of B
     separate ``(M_loc, C)`` payloads — same bytes, 1/B the latency."""
+    chaos.maybe_fail("collective")
     b, m_loc, c = y.shape
     u = c // q_prod
     chunk = q_prod // g_k

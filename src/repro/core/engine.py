@@ -61,6 +61,7 @@ from jax.extend.core import Primitive
 from jax.interpreters import batching, mlir
 
 from ..kernels import emit, ops
+from ..runtime import chaos, guard
 from . import autotune
 from .autotune import KronPlan, Stage, TileConfig
 from .kron import KronProblem
@@ -242,14 +243,16 @@ def _program_bwd(plan: KronPlan, backend: str, x, factors, g, f_pert: bool,
                         u, g, (fk,), dataclasses.replace(pk_ins, t_m=t_ins.t_m),
                         backend=backend,
                     )
-                except ValueError:
+                except guard.KronError as e:
+                    guard.record_event("bwd_per_factor", e)
                     g, (dk,) = _stage_bwd_per_factor(u, g, (fk,), backend)
                 for fid, d in zip(f_ins.factor_ids, _prekron_vjp(dk, sf)):
                     dfs_by_id[fid] = d
             else:
                 try:
                     g = emit.run_stage(g, (fk,), pk_ins.transpose(), backend=backend)
-                except ValueError:
+                except guard.KronError as e:
+                    guard.record_event("bwd_per_factor", e)
                     g = _sliced_t_batched(g, fk, backend)
         elif f_pert:
             try:
@@ -259,20 +262,22 @@ def _program_bwd(plan: KronPlan, backend: str, x, factors, g, f_pert: bool,
                     u, g, sf, dataclasses.replace(f_ins, t_m=t_ins.t_m),
                     backend=backend,
                 )
-            except ValueError:
+            except guard.KronError as e:
                 # Fused backward tile exceeds VMEM (Q-tiled forward stages
                 # have no Q relief on the gradient-pair side) — run the
                 # stage per factor, still through planned dispatch.
+                guard.record_event("bwd_per_factor", e)
                 g, dfs = _stage_bwd_per_factor(u, g, sf, backend)
             for fid, d in zip(f_ins.factor_ids, dfs):
                 dfs_by_id[fid] = d
         else:
             try:
                 g = emit.run_stage(g, sf, t_ins, backend=backend)
-            except ValueError:
+            except guard.KronError as e:
                 # The planner validated tiles against FORWARD block sizes;
                 # the transposed shapes can overflow — walk the stage per
                 # factor with fitted tiles instead.
+                guard.record_event("bwd_per_factor", e)
                 for f in reversed(sf):
                     g = _sliced_t_batched(g, f, backend)
     return g, (dfs_by_id if f_pert else None)
@@ -370,6 +375,57 @@ kron_matmul_p = Primitive("kron_matmul")
 kron_matmul_batched_p = Primitive("kron_matmul_batched")
 
 
+def _fwd_ladder(x, factors, plan, backend, batched):
+    """The per-op forward degradation ladder (docs/robustness.md):
+
+      rung 0  planned     the lowered StageProgram (fused pallas chain / tuned
+                          XLA scan — whatever the plan says)
+      rung 1  per-factor  one conservatively-tiled sliced multiply per factor
+      rung 2  xla-scan    the whole chain through the lax.scan executor
+
+    Run under ``guard.run_ladder``: a typed failure degrades THE CALL with a
+    once-per-process warning; ``patience`` consecutive degraded calls pin the
+    op's signature to the surviving rung.  All rungs compute the identical
+    contraction (tiles never split the reduction dim), so degradation is
+    numerically invisible — the bitwise-parity property pinned by
+    tests/test_guard.py.  Health is trace-time state: under jit the rung is
+    chosen when the call is traced.
+
+    Only CAPACITY failures degrade (VMEM overflow, illegal lowering): a
+    ``NumericsError`` means the DATA is bad — every rung would compute the
+    same non-finite values, so it propagates immediately instead of paying
+    for three doomed attempts.
+    """
+    ps, qs = _signature(factors)
+    prog = _lowered(plan, ps, qs, batched)
+    rev = tuple(reversed(factors))
+    key = ("kron", ps, qs, backend, batched)
+
+    def _planned():
+        return emit.run_program(x, factors, prog, backend=backend)
+
+    def _per_factor():
+        chaos.maybe_fail("per_factor")
+        y = x
+        for f in rev:
+            y = _sliced_batched(y, f, backend)
+        return guard.check_finite(y, "per_factor")
+
+    def _xla_scan():
+        y = emit._chain_xla(x, rev, t_b=1 if batched else None)
+        return guard.check_finite(y, "xla_scan")
+
+    return guard.run_ladder(
+        key,
+        (
+            ("planned", _planned),
+            ("per-factor", _per_factor),
+            ("xla-scan", _xla_scan),
+        ),
+        catch=(guard.VmemOverflowError, guard.LoweringError),
+    )
+
+
 def _kron_impl(x, *factors, plan, backend, pctx):
     if plan is None:
         # Paper-faithful unfused loop (the C1 baseline): application order is
@@ -378,9 +434,7 @@ def _kron_impl(x, *factors, plan, backend, pctx):
         for f in reversed(factors):
             y = ops.sliced_multiply(y, f, backend=backend)
         return y
-    ps, qs = _signature(factors)
-    prog = _lowered(plan, ps, qs, False)
-    return emit.run_program(x, factors, prog, backend=backend)
+    return _fwd_ladder(x, factors, plan, backend, batched=False)
 
 
 def _kron_abstract(x, *factors, plan, backend, pctx):
@@ -389,9 +443,7 @@ def _kron_abstract(x, *factors, plan, backend, pctx):
 
 
 def _kron_batched_impl(x, *factors, plan, backend, pctx):
-    ps, qs = _signature(factors)
-    prog = _lowered(plan, ps, qs, True)
-    return emit.run_program(x, factors, prog, backend=backend)
+    return _fwd_ladder(x, factors, plan, backend, batched=True)
 
 
 def _kron_batched_abstract(x, *factors, plan, backend, pctx):
@@ -884,10 +936,31 @@ class KronOp:
             pdesc = f"rounds{list(self.rounds)}"  # mesh path: the schedule IS the plan
         else:
             pdesc = "unfused"
-        return (
+        base = (
             f"KronOp(ps={list(self.ps)}, qs={list(self.qs)}, {mode}"
             f"{shared}, {where}, backend={self.backend}) :: {pdesc}"
         )
+        return base + self._health_suffix()
+
+    def _health_suffix(self) -> str:
+        """Guard-layer health for this op's signature — empty while healthy,
+        a `:: guard[...]` tail once any ladder keyed on (ps, qs) degraded."""
+        parts = []
+        for key, h in guard.health_entries():
+            if (
+                isinstance(key, tuple)
+                and len(key) >= 3
+                and key[1] == self.ps
+                and key[2] == self.qs
+                and (h.degraded_calls or h.pinned or h.errors)
+            ):
+                rung = f"rung={h.rung}{' pinned' if h.pinned else ''}"
+                errs = ",".join(f"{k}x{v}" for k, v in sorted(h.errors.items()))
+                parts.append(
+                    f"{key[0]}: {rung} degraded={h.degraded_calls}/{h.calls}"
+                    + (f" [{errs}]" if errs else "")
+                )
+        return f" :: guard[{'; '.join(parts)}]" if parts else ""
 
     def __repr__(self) -> str:
         return self.describe()
@@ -960,10 +1033,25 @@ class KronOp:
 
         if x.ndim != 2:
             raise ValueError(f"distributed op expects x (M, K), got {x.shape}")
-        return distributed.run_distributed_rounds(
-            x, factors, self.mesh,
-            data_axis=self.data_axis, model_axis=self.model_axis,
-            backend=self.backend, per_iteration=self.per_iteration,
+
+        def _mesh():
+            return distributed.run_distributed_rounds(
+                x, factors, self.mesh,
+                data_axis=self.data_axis, model_axis=self.model_axis,
+                backend=self.backend, per_iteration=self.per_iteration,
+            )
+
+        def _local():
+            fn = self._ensure_single(int(x.shape[0]), x.dtype.itemsize)
+            return fn(x, factors)
+
+        # Mesh ladder: a failed relocation round degrades to single-host
+        # execution on the (replicated) operands — same contraction, no
+        # collectives.  Only CollectiveError degrades; anything else is a bug.
+        return guard.run_ladder(
+            ("mesh", self.ps, self.qs, self.backend, "single"),
+            (("mesh-rounds", _mesh), ("local", _local)),
+            catch=(guard.CollectiveError,),
         )
 
     def _run_mesh_batched(self, x, factors):
@@ -977,10 +1065,22 @@ class KronOp:
                 self._plans, key,
                 self._batched_plan(b, max(1, m // self.g_m), x.dtype.itemsize),
             )
-        return distributed.run_batched_distributed_rounds(
-            x, factors, self.mesh, t_b=plan.t_b,
-            data_axis=self.data_axis, model_axis=self.model_axis,
-            backend=self.backend, per_iteration=self.per_iteration,
+
+        def _mesh():
+            return distributed.run_batched_distributed_rounds(
+                x, factors, self.mesh, t_b=plan.t_b,
+                data_axis=self.data_axis, model_axis=self.model_axis,
+                backend=self.backend, per_iteration=self.per_iteration,
+            )
+
+        def _local():
+            fn = self._ensure_batched(b, m, x.dtype.itemsize)
+            return fn(x, factors)
+
+        return guard.run_ladder(
+            ("mesh", self.ps, self.qs, self.backend, "batched"),
+            (("mesh-rounds", _mesh), ("local", _local)),
+            catch=(guard.CollectiveError,),
         )
 
 

@@ -38,6 +38,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.runtime import chaos, guard
+from repro.runtime.guard import LoweringError, VmemOverflowError
+
 # Conservative usable-VMEM budget (f32 elements): ~16 MiB VMEM, keep half for
 # double buffering / Mosaic temporaries.
 VMEM_BUDGET_ELEMS = 2 * 1024 * 1024
@@ -465,16 +468,18 @@ def chain_pallas(
     qs = tuple(int(f.shape[2]) for f in factors)
     for f in factors:
         if int(f.shape[0]) != b:
-            raise ValueError(f"factor batch {f.shape[0]} != x batch {b}")
+            raise LoweringError(f"factor batch {f.shape[0]} != x batch {b}")
     pprod = math.prod(ps)
     qprod = math.prod(qs)
     if direction == "fwd":
         if cols % pprod:
-            raise ValueError(f"K={cols} not divisible by prod(P)={pprod}")
+            raise LoweringError(f"K={cols} not divisible by prod(P)={pprod}")
         k = cols
     else:
         if cols % qprod:
-            raise ValueError(f"dY cols {cols} not divisible by prod(Q)={qprod}")
+            raise LoweringError(
+                f"dY cols {cols} not divisible by prod(Q)={qprod}"
+            )
         k = cols // qprod * pprod
     s_out = k // pprod
     t_b = min(t_b, b)
@@ -484,21 +489,21 @@ def chain_pallas(
         t_qs = qs
     t_qs = tuple(min(t, q) for t, q in zip(t_qs, qs))
     if len(t_qs) != n:
-        raise ValueError(f"t_qs needs one entry per factor: {t_qs} vs {n}")
+        raise LoweringError(f"t_qs needs one entry per factor: {t_qs} vs {n}")
     if any(q % t for q, t in zip(qs, t_qs)):
-        raise ValueError(f"t_qs must divide factor Q dims: {t_qs} vs {qs}")
+        raise LoweringError(f"t_qs must divide factor Q dims: {t_qs} vs {qs}")
     # Fusion validity: every slice of every fused stage stays inside the tile.
     if t_k % pprod:
-        raise ValueError(f"T_K={t_k} must be a multiple of prod(P)={pprod}")
+        raise LoweringError(f"T_K={t_k} must be a multiple of prod(P)={pprod}")
     growth_fn = fused_growth if direction == "fwd" else transposed_growth
     growth = growth_fn(ps, qs, t_qs)
     if t_b * t_m * t_k * growth > vmem_budget_elems:
-        raise ValueError(
+        raise VmemOverflowError(
             f"tile {t_b}x{t_m}x{t_k} (growth {growth:.2f}) exceeds VMEM "
             f"budget; reduce t_b / t_m / t_k or tile Q via t_qs"
         )
     if b % t_b or m % t_m or k % t_k:
-        raise ValueError(
+        raise LoweringError(
             f"tiles must divide dims: {(b, m, k)} vs {(t_b, t_m, t_k)}"
         )
 
@@ -669,19 +674,19 @@ def grad_pallas(
     qs = tuple(int(f.shape[2]) for f in factors)
     for f in factors:
         if int(f.shape[0]) != b:
-            raise ValueError(f"factor batch {f.shape[0]} != x batch {b}")
+            raise LoweringError(f"factor batch {f.shape[0]} != x batch {b}")
     pprod = math.prod(ps)
     qprod = math.prod(qs)
     if k % pprod:
-        raise ValueError(f"K={k} not divisible by prod(P)={pprod}")
+        raise LoweringError(f"K={k} not divisible by prod(P)={pprod}")
     s_out = k // pprod
     if dy.shape != (b, m, qprod * s_out):
-        raise ValueError(f"dy shape {dy.shape} != {(b, m, qprod * s_out)}")
+        raise LoweringError(f"dy shape {dy.shape} != {(b, m, qprod * s_out)}")
     t_b = min(t_b, b)
     t_m = min(t_m, m)
     t_k = min(t_k or k, k)
     if t_k % pprod:
-        raise ValueError(f"T_K={t_k} must be a multiple of prod(P)={pprod}")
+        raise LoweringError(f"T_K={t_k} must be a multiple of prod(P)={pprod}")
     # Live set: all forward intermediates of the tile chain plus the gradient
     # tile — a sum over chain states, not just the max.
     cols = float(t_k)
@@ -690,13 +695,13 @@ def grad_pallas(
         cols = cols / p * q
         live += cols
     if t_b * t_m * (live + cols) > vmem_budget_elems:
-        raise ValueError(
+        raise VmemOverflowError(
             f"bwd tile {t_b}x{t_m}x{t_k} live set "
             f"{int(t_b * t_m * (live + cols))} elems exceeds VMEM budget; "
             f"reduce t_b / t_k or split the stage"
         )
     if b % t_b or m % t_m or k % t_k:
-        raise ValueError(
+        raise LoweringError(
             f"tiles must divide dims: {(b, m, k)} vs {(t_b, t_m, t_k)}"
         )
 
@@ -973,9 +978,10 @@ def run_stage(
 
     ``stage_factors`` are the stage's factor arrays in application order —
     2-D when ``instr.t_b is None``, per-sample 3-D otherwise.  Raises
-    ``ValueError`` when the Pallas tiling cannot hold the stage in VMEM
-    (callers fall back to per-factor execution).
+    ``VmemOverflowError`` (a ``ValueError``) when the Pallas tiling cannot
+    hold the stage in VMEM (callers fall back to per-factor execution).
     """
+    chaos.maybe_fail("stage_execute")
     fs = tuple(stage_factors)
     direction, fs, t_qs = _effective(instr, fs)
     b = resolve_backend(backend)
@@ -984,6 +990,7 @@ def run_stage(
             y, fs, t_m=instr.t_m, t_b=instr.t_b, direction=direction,
             acc_dtype=instr.acc_dtype,
         )
+    chaos.maybe_fail("pallas_lowering")
     ip = _interpret_default(interpret)
     if instr.t_b is None:
         out = chain_pallas(
@@ -1014,16 +1021,18 @@ def run_stage_grad(
     ``u`` is the stage input, ``g`` the stage output cotangent; ``instr`` is
     the FORWARD instruction (its transpose is implied).  Factor grads are
     returned in application order, accumulated in the stage's acc dtype
-    (callers cast).  Raises ``ValueError`` when the one-kernel Pallas
-    backward cannot hold the stage's live set in VMEM.
+    (callers cast).  Raises ``VmemOverflowError`` (a ``ValueError``) when
+    the one-kernel Pallas backward cannot hold the stage's live set in VMEM.
     """
+    chaos.maybe_fail("stage_execute")
     fs = tuple(stage_factors)
     b = resolve_backend(backend)
     if b == "xla":
         dx, dfs = _grad_xla(
             u, g, fs, t_m=instr.t_m, t_b=instr.t_b, acc_dtype=instr.acc_dtype
         )
-        return dx, dfs
+        return guard.check_finite(dx, "run_stage_grad"), dfs
+    chaos.maybe_fail("pallas_lowering")
     ip = _interpret_default(interpret)
     if instr.t_b is None:
         dx, dfs = grad_pallas(
@@ -1031,12 +1040,14 @@ def run_stage_grad(
             t_k=instr.t_k, interpret=ip, acc_dtype=instr.acc_dtype,
             vmem_budget_elems=vmem_budget_elems,
         )
-        return dx[0], tuple(d[0] for d in dfs)
+        return guard.check_finite(dx[0], "run_stage_grad"), tuple(
+            d[0] for d in dfs
+        )
     dx, dfs = grad_pallas(
         u, g, *fs, t_b=instr.t_b, t_m=instr.t_m, t_k=instr.t_k, interpret=ip,
         acc_dtype=instr.acc_dtype, vmem_budget_elems=vmem_budget_elems,
     )
-    return dx, dfs
+    return guard.check_finite(dx, "run_stage_grad"), dfs
 
 
 def run_program(
@@ -1067,7 +1078,9 @@ def run_program(
             y, tuple(rev[i] for i in instr.factor_ids), instr,
             backend=backend, interpret=interpret,
         )
-    return y
+    # Non-finite guard on the program's output — the value downstream layers
+    # consume, after every stage's acc_dtype downcast (policy off|warn|raise).
+    return guard.check_finite(y, "run_program")
 
 
 def emit(

@@ -19,7 +19,8 @@ import jax.numpy as jnp
 from ..configs import get_config
 from ..data import SyntheticLM
 from ..models.config import reduced as reduce_cfg
-from ..runtime.fault import elastic_mesh
+from ..runtime import guard
+from ..runtime.fault import StragglerMonitor, elastic_mesh
 from ..train import make_prefill_step, make_serve_step, prebuild_kron_ops
 
 
@@ -45,10 +46,18 @@ def main() -> None:
                          "serving mesh (one collective round per projection "
                          "stage for the whole batch; shapes the mesh cannot "
                          "host fall back to the local batched path)")
+    ap.add_argument("--numerics", choices=list(guard.NUMERICS_POLICIES),
+                    default=None,
+                    help="non-finite guard at StageProgram boundaries "
+                         "(default: FASTKRON_NUMERICS or off); serving "
+                         "typically wants warn — degraded tokens are better "
+                         "than a dead replica")
     args = ap.parse_args()
     if args.distributed and not args.kron_ffn:
         ap.error("--distributed requires --kron-ffn (it distributes the "
                  "batched Kron-FFN prefill)")
+    if args.numerics is not None:
+        guard.set_numerics_policy(args.numerics)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -104,13 +113,19 @@ def main() -> None:
         key = jax.random.PRNGKey(1)
         tok = sample(logits, key)[:, None]
         out_tokens = [tok]
+        # Straggler monitor on the decode loop: a persistently slow token
+        # step on a serving replica is the same signal as a slow train step
+        # on a pod — log it, don't kill the replica.
+        mon = StragglerMonitor(action="log")
         t0 = time.time()
         for i in range(args.gen - 1):
             key = jax.random.fold_in(key, i)
+            mon.start()
             logits, cache = step(params, cache, tok, jnp.int32(args.prompt_len + i))
             tok = sample(logits, key)[:, None]
+            jax.block_until_ready(tok)
+            mon.stop(i)
             out_tokens.append(tok)
-        jax.block_until_ready(tok)
         t_decode = time.time() - t0
 
     gen = jnp.concatenate(out_tokens, axis=1)
@@ -120,6 +135,13 @@ def main() -> None:
     dec_tps = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
     print(f"prefill: {t_prefill:.2f}s ({pre_tps:.0f} tok/s)  "
           f"decode: {t_decode:.2f}s ({dec_tps:.0f} tok/s)")
+    if mon.flagged_steps:
+        print(f"stragglers: {len(mon.flagged_steps)} decode step(s) flagged")
+    report = guard.health_report()
+    if report["events"] or any(
+        h["degraded_calls"] or h["errors"] for h in report["ops"].values()
+    ):
+        print(f"guard health: {report}")
 
 
 if __name__ == "__main__":

@@ -26,6 +26,7 @@ from ..configs import get_config
 from ..data import SyntheticLM
 from ..models.config import reduced as reduce_cfg
 from ..optim import OptConfig
+from ..runtime import guard
 from ..runtime.fault import StragglerMonitor, elastic_mesh
 from ..runtime.sharding import param_shardings, token_sharding
 from ..train import TrainState, make_train_step, train_state_init
@@ -48,7 +49,15 @@ def main() -> None:
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--kron-ffn", action="store_true",
                     help="enable the paper's Kron-compressed FFN projections")
+    ap.add_argument("--numerics", choices=list(guard.NUMERICS_POLICIES),
+                    default=None,
+                    help="non-finite guard at StageProgram boundaries "
+                         "(default: FASTKRON_NUMERICS or off); training "
+                         "typically wants raise — fail fast and restart from "
+                         "the last checkpoint before the divergence")
     args = ap.parse_args()
+    if args.numerics is not None:
+        guard.set_numerics_policy(args.numerics)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -125,6 +134,11 @@ def main() -> None:
     dt = time.time() - t_start
     tok_s = args.steps * args.batch * args.seq / max(dt, 1e-9)
     print(f"done: {args.steps} steps in {dt:.1f}s ({tok_s:.0f} tok/s)")
+    report = guard.health_report()
+    if report["events"] or any(
+        h["degraded_calls"] or h["errors"] for h in report["ops"].values()
+    ):
+        print(f"guard health: {report}")
 
 
 if __name__ == "__main__":

@@ -1,1 +1,3 @@
-"""Runtime substrate: mesh/sharding helpers, HLO analysis, fault tolerance."""
+"""Runtime substrate: mesh/sharding helpers, HLO analysis, fault tolerance,
+the execution guard layer (``guard``: error taxonomy + degradation ladder +
+numerics policy) and its deterministic fault-injection harness (``chaos``)."""

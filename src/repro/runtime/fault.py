@@ -62,6 +62,11 @@ class StragglerMonitor:
             self._consecutive += 1
             self.flagged_steps.append((step, dt))
             if self._consecutive >= self.patience:
+                # Re-arm BEFORE acting: the action fires once per patience
+                # window, not on every slow step after the first window
+                # (a raise would otherwise re-raise, a reschedule callback
+                # would storm the cluster manager).
+                self._consecutive = 0
                 msg = (
                     f"straggler: step {step} took {dt:.3f}s "
                     f"(mean {self._mean:.3f}s +{self.threshold_sigma} sigma)"

@@ -1,0 +1,354 @@
+"""Execution guard layer: error taxonomy, degradation ladder, numerics guards.
+
+This module is the runtime's failure story for the whole Kron-Matmul
+execution spine (docs/robustness.md).  Three pieces:
+
+* **Error taxonomy** — ``KronError`` and its typed subclasses replace the
+  ad-hoc ``ValueError``/``RuntimeError``/silent-``except`` sites across
+  ``core/engine.py``, ``core/autotune.py``, ``core/distributed.py`` and
+  ``kernels/emit.py``.  Every subclass ALSO derives from the builtin type
+  the old code raised (``VmemOverflowError`` is a ``ValueError``,
+  ``PlanCacheError`` is an ``OSError``, ...), so pre-existing ``except``
+  clauses and caller contracts keep working while new code can catch the
+  typed hierarchy.
+
+* **Degradation ladder + circuit breaker** — ``run_ladder`` executes a
+  sequence of rungs (for a ``KronOp``: pallas/planned chain -> per-factor
+  sliced -> XLA scan executor) with per-key health state: the first failure
+  degrades THE CALL with a once-per-process warning; ``patience`` repeated
+  degraded calls PIN the key to the degraded rung so later calls skip the
+  failing rung entirely.  Counters are exposed via ``health_report()`` and
+  surfaced by ``KronOp.describe()``.  Health is process-local trace-time
+  state: under ``jax.jit`` the decision is taken when the call is traced
+  and baked into the compiled function.
+
+* **Numerics guards** — ``check_finite`` instruments the ``StageProgram``
+  boundary (both the Pallas and XLA executors run through it) with policy
+  ``off | warn | raise`` (``FASTKRON_NUMERICS`` or
+  ``set_numerics_policy``).  ``off`` is a single string compare — the
+  guards-off overhead budget in EXPERIMENTS.md §Robustness.  Eager calls
+  raise ``NumericsError`` synchronously; traced calls report through
+  ``jax.debug.callback`` (a ``raise`` policy then surfaces when the
+  computation is consumed).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import warnings
+from typing import Callable, Sequence
+
+
+# ---------------------------------------------------------------------------
+# Error taxonomy
+# ---------------------------------------------------------------------------
+
+
+class KronError(Exception):
+    """Base of every typed Kron-Matmul runtime error (docs/robustness.md)."""
+
+
+class PlanError(KronError, ValueError):
+    """Planning failed: invalid plan inputs, no legal round schedule, an
+    unknown tune mode, or no measurable candidate."""
+
+
+class VmemOverflowError(KronError, ValueError):
+    """A kernel tile's live set exceeds the VMEM budget.  The signal the
+    degradation ladder and the per-factor fallbacks key on."""
+
+
+class LoweringError(KronError, ValueError):
+    """A stage cannot be lowered to the kernel template: illegal tiling,
+    non-dividing dims, malformed instruction."""
+
+
+class CollectiveError(KronError, RuntimeError):
+    """A distributed relocation round failed (or was chaos-injected to
+    fail).  The mesh ladder degrades to local execution."""
+
+
+class PlanCacheError(KronError, OSError):
+    """Plan-cache IO failed: corrupt entry, lock/rename contention, or an
+    injected fault.  Always degraded (warn + rebuild/retry), never fatal."""
+
+
+class NumericsError(KronError, FloatingPointError):
+    """A non-finite value crossed a guarded StageProgram boundary under
+    policy ``raise``."""
+
+
+class GuardWarning(UserWarning):
+    """Warning category for every degradation the guard layer performs."""
+
+
+# ---------------------------------------------------------------------------
+# Once-per-process warning bookkeeping
+# ---------------------------------------------------------------------------
+
+_WARNED: set = set()
+_LOCK = threading.Lock()
+
+
+def warn_once(token, message: str) -> None:
+    """Emit ``GuardWarning`` once per process per ``token``."""
+    with _LOCK:
+        if token in _WARNED:
+            return
+        _WARNED.add(token)
+    warnings.warn(message, GuardWarning, stacklevel=3)
+
+
+# ---------------------------------------------------------------------------
+# Health state (circuit breaker)
+# ---------------------------------------------------------------------------
+
+DEFAULT_PATIENCE = 3
+
+
+@dataclasses.dataclass
+class OpHealth:
+    """Mutable per-key circuit-breaker state (see ``run_ladder``)."""
+
+    rung: int = 0            # rung calls currently START at
+    pinned: bool = False     # True once patience pinned the key to ``rung``
+    calls: int = 0
+    degraded_calls: int = 0  # calls that completed below their start rung
+    consecutive: int = 0     # consecutive calls that had to degrade
+    errors: dict = dataclasses.field(default_factory=dict)  # type name -> n
+    last_error: str | None = None
+
+    def record(self, exc: BaseException) -> None:
+        name = type(exc).__name__
+        self.errors[name] = self.errors.get(name, 0) + 1
+        self.last_error = f"{name}: {exc}"
+
+    def summary(self) -> dict:
+        return {
+            "rung": self.rung,
+            "pinned": self.pinned,
+            "calls": self.calls,
+            "degraded_calls": self.degraded_calls,
+            "errors": dict(self.errors),
+            "last_error": self.last_error,
+        }
+
+
+_HEALTH: dict = {}
+_EVENTS: dict = {}  # free-form degradation counters (plan cache, rounds, ...)
+
+
+def health(key) -> OpHealth:
+    """Get-or-create the circuit-breaker state for ``key``."""
+    h = _HEALTH.get(key)
+    if h is None:
+        h = _HEALTH[key] = OpHealth()
+    return h
+
+
+def health_entries():
+    """Raw (key, OpHealth) items — for callers that filter by key structure
+    (``KronOp.describe`` matches its own signature prefix)."""
+    return list(_HEALTH.items())
+
+
+def record_event(name: str, exc: BaseException | None = None) -> None:
+    """Count a degradation event outside any ladder (plan-cache rebuilds,
+    per-round fallbacks inside shard_map bodies, ...)."""
+    _EVENTS[name] = _EVENTS.get(name, 0) + 1
+    if exc is not None:
+        ename = f"{name}:{type(exc).__name__}"
+        _EVENTS[ename] = _EVENTS.get(ename, 0) + 1
+
+
+def health_report() -> dict:
+    """Snapshot of every guarded key's counters plus free-form event counts.
+
+    ``{"ops": {str(key): summary_dict}, "events": {name: count}}`` — the
+    process-wide answer to "has anything degraded, and why".
+    """
+    return {
+        "ops": {repr(k): h.summary() for k, h in _HEALTH.items()},
+        "events": dict(_EVENTS),
+    }
+
+
+def reset_health() -> None:
+    """Clear all health state and once-per-process warning tokens (tests)."""
+    _HEALTH.clear()
+    _EVENTS.clear()
+    with _LOCK:
+        _WARNED.clear()
+
+
+# ---------------------------------------------------------------------------
+# The degradation ladder
+# ---------------------------------------------------------------------------
+
+
+def run_ladder(
+    key,
+    rungs: Sequence[tuple[str, Callable[[], object]]],
+    *,
+    patience: int = DEFAULT_PATIENCE,
+    catch: tuple = (KronError,),
+):
+    """Execute ``rungs`` (ordered most- to least-performant) under the
+    circuit breaker keyed by ``key``.
+
+    Starts at the key's current rung; a ``catch``-matching failure records
+    the typed error, warns once per process, and falls through to the next
+    rung.  A call that completes below its start rung counts as degraded;
+    ``patience`` consecutive degraded calls pin the key to the completing
+    rung (later calls skip the failing rung without retrying it).  A call
+    that completes at its start rung resets the consecutive counter.  If
+    every rung fails the LAST error is re-raised — the ladder never
+    swallows a total failure.
+    """
+    h = health(key)
+    h.calls += 1
+    start = h.rung
+    last_exc = None
+    for i in range(start, len(rungs)):
+        name, fn = rungs[i]
+        try:
+            out = fn()
+        except catch as e:  # typed failures only: real bugs propagate
+            h.record(e)
+            last_exc = e
+            if i + 1 < len(rungs):
+                warn_once(
+                    (key, i),
+                    f"kron guard: {key} failed on rung {i} ({name}): "
+                    f"{type(e).__name__}: {e} — degrading to rung {i + 1} "
+                    f"({rungs[i + 1][0]})",
+                )
+            continue
+        if i > start:
+            h.degraded_calls += 1
+            h.consecutive += 1
+            if h.consecutive >= patience:
+                h.rung = i
+                h.pinned = True
+                h.consecutive = 0
+                warn_once(
+                    (key, "pinned", i),
+                    f"kron guard: {key} degraded {patience} consecutive "
+                    f"calls — pinned to rung {i} ({name})",
+                )
+        else:
+            h.consecutive = 0
+        return out
+    assert last_exc is not None
+    raise last_exc
+
+
+# ---------------------------------------------------------------------------
+# Numerics guards (StageProgram boundary)
+# ---------------------------------------------------------------------------
+
+NUMERICS_POLICIES = ("off", "warn", "raise")
+_numerics_policy: str | None = None  # None -> env -> "off"
+
+
+def numerics_policy() -> str:
+    """The active non-finite-guard policy: ``off`` | ``warn`` | ``raise``."""
+    if _numerics_policy is not None:
+        return _numerics_policy
+    env = os.environ.get("FASTKRON_NUMERICS", "off")
+    return env if env in NUMERICS_POLICIES else "off"
+
+
+def set_numerics_policy(policy: str | None) -> None:
+    """Set the process-wide policy (``None`` re-reads ``FASTKRON_NUMERICS``)."""
+    global _numerics_policy
+    if policy is not None and policy not in NUMERICS_POLICIES:
+        raise PlanError(
+            f"unknown numerics policy {policy!r}: want one of {NUMERICS_POLICIES}"
+        )
+    _numerics_policy = policy
+
+
+class numerics(object):
+    """Context manager scoping a numerics policy (tests, launchers)."""
+
+    def __init__(self, policy: str):
+        self._policy = policy
+        self._prev: str | None = None
+
+    def __enter__(self):
+        global _numerics_policy
+        self._prev = _numerics_policy
+        set_numerics_policy(self._policy)
+        return self
+
+    def __exit__(self, *exc):
+        global _numerics_policy
+        _numerics_policy = self._prev
+        return False
+
+
+def _handle_nonfinite(where: str, policy: str) -> None:
+    msg = f"non-finite values at guarded boundary {where!r}"
+    record_event("nonfinite", NumericsError(msg))
+    if policy == "raise":
+        raise NumericsError(msg)
+    warn_once(("nonfinite", where), f"kron guard: {msg}")
+
+
+def check_finite(y, where: str):
+    """Non-finite guard at a StageProgram boundary; returns ``y`` unchanged.
+
+    Policy ``off`` costs one string compare.  On a concrete (eager) array
+    the check is synchronous: ``raise`` raises ``NumericsError`` on the
+    spot.  On a traced value the reduced ``isfinite`` flag is inspected via
+    ``jax.debug.callback``; a ``raise`` policy then surfaces when the jitted
+    computation is consumed.  Runs identically for the Pallas and XLA
+    executors because it guards their shared output, after any
+    ``acc_dtype`` downcast — exactly the value the next stage consumes.
+    """
+    policy = numerics_policy()
+    if policy == "off":
+        return y
+    import jax
+    import jax.numpy as jnp
+
+    ok = jnp.isfinite(y).all()
+    if isinstance(ok, jax.core.Tracer):
+        jax.debug.callback(
+            lambda ok_, w=where, p=policy: None
+            if bool(ok_)
+            else _handle_nonfinite(w, p),
+            ok,
+        )
+        return y
+    if not bool(ok):
+        _handle_nonfinite(where, policy)
+    return y
+
+
+__all__ = [
+    "KronError",
+    "PlanError",
+    "VmemOverflowError",
+    "LoweringError",
+    "CollectiveError",
+    "PlanCacheError",
+    "NumericsError",
+    "GuardWarning",
+    "OpHealth",
+    "run_ladder",
+    "health",
+    "health_entries",
+    "health_report",
+    "record_event",
+    "reset_health",
+    "warn_once",
+    "check_finite",
+    "numerics",
+    "numerics_policy",
+    "set_numerics_policy",
+    "DEFAULT_PATIENCE",
+    "NUMERICS_POLICIES",
+]

@@ -36,6 +36,17 @@ def test_distributed_driver_all_checks():
 
 
 @pytest.mark.slow
+def test_chaos_distributed_driver_all_checks():
+    """Fault-injected distributed rounds (PR 6): chaos forces the per-factor
+    VMEM fallback in ``_local_multiply_round`` (bitwise parity + still one
+    all-to-all per round) and a failed collective degrades the KronOp mesh
+    ladder to local execution with the CollectiveError recorded in health."""
+    out = _run_driver("chaos_distributed_driver.py")
+    assert "OK round-chain-fallback" in out
+    assert "OK mesh-ladder-local-fallback" in out
+
+
+@pytest.mark.slow
 def test_distributed_batched_driver_all_checks():
     """Batched distributed rounds (PR 3): shared + per-sample correctness
     (fwd + grads) vs the looped per-problem reference, one collective per

@@ -117,6 +117,37 @@ def test_straggler_monitor_raises_after_patience():
         mon.observe(11, 5.0)
 
 
+def test_straggler_monitor_rearms_after_firing():
+    """Regression: the consecutive counter must reset when the action fires.
+    Before the fix, every slow step past the first patience window re-fired
+    the action — a callback storm (or an immediate re-raise) instead of one
+    action per window."""
+    fired = []
+    mon = StragglerMonitor(threshold_sigma=2.0, patience=2, warmup_steps=3,
+                           action="callback",
+                           callback=lambda step, dt: fired.append(step))
+    for i in range(10):
+        mon.observe(i, 0.1)
+    mon.observe(10, 5.0)          # slow 1/2: below patience
+    mon.observe(11, 5.0)          # slow 2/2: fires, must re-arm
+    assert fired == [11]
+    mon.observe(12, 5.0)          # slow 1/2 of the NEXT window: no re-fire
+    assert fired == [11]
+    mon.observe(13, 5.0)          # slow 2/2 again: second window fires
+    assert fired == [11, 13]
+    # a raise-action monitor survives to raise AGAIN a full window later
+    mon2 = StragglerMonitor(threshold_sigma=2.0, patience=2, warmup_steps=3,
+                            action="raise")
+    for i in range(10):
+        mon2.observe(i, 0.1)
+    mon2.observe(10, 5.0)
+    with pytest.raises(RuntimeError):
+        mon2.observe(11, 5.0)
+    mon2.observe(12, 5.0)         # re-armed: 1/2, no raise
+    with pytest.raises(RuntimeError):
+        mon2.observe(13, 5.0)
+
+
 @pytest.mark.parametrize("n,model,want", [
     (512, 16, (32, 16)),
     (256, 16, (16, 16)),

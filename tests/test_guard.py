@@ -1,0 +1,444 @@
+"""Execution guard layer: taxonomy, chaos harness, degradation ladder,
+numerics guards, plan-cache robustness (docs/robustness.md).
+
+The ladder tests assert the PR's acceptance triple for every rung: (a) the
+typed error is recorded in health state, (b) execution completes on the
+fallback rung, (c) the output is BITWISE-identical to the unfaulted
+reference — degradation must be numerically invisible.
+"""
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune, engine
+from repro.kernels import emit
+from repro.runtime import chaos, guard
+
+
+@pytest.fixture(autouse=True)
+def _fresh_guard_state():
+    guard.reset_health()
+    guard.set_numerics_policy(None)
+    yield
+    guard.reset_health()
+    guard.set_numerics_policy(None)
+
+
+def _problem(ps, qs, m=16, seed=0):
+    rng = np.random.RandomState(seed)
+    k = int(np.prod(ps))
+    x = jnp.asarray(rng.randn(m, k), jnp.float32)
+    fs = tuple(
+        jnp.asarray(rng.randn(p, q), jnp.float32) for p, q in zip(ps, qs)
+    )
+    return x, fs
+
+
+def _batched_problem(ps, qs, b=2, m=8, seed=0):
+    rng = np.random.RandomState(seed)
+    k = int(np.prod(ps))
+    x = jnp.asarray(rng.randn(b, m, k), jnp.float32)
+    fs = tuple(
+        jnp.asarray(rng.randn(b, p, q), jnp.float32) for p, q in zip(ps, qs)
+    )
+    return x, fs
+
+
+# ---------------------------------------------------------------------------
+# Taxonomy
+# ---------------------------------------------------------------------------
+
+
+def test_taxonomy_subclasses_builtin_types():
+    """Every typed error still satisfies the except-clause contract of the
+    ad-hoc error it replaced — old callers keep working."""
+    assert issubclass(guard.PlanError, ValueError)
+    assert issubclass(guard.VmemOverflowError, ValueError)
+    assert issubclass(guard.LoweringError, ValueError)
+    assert issubclass(guard.CollectiveError, RuntimeError)
+    assert issubclass(guard.PlanCacheError, OSError)
+    assert issubclass(guard.NumericsError, FloatingPointError)
+    for t in (
+        guard.PlanError, guard.VmemOverflowError, guard.LoweringError,
+        guard.CollectiveError, guard.PlanCacheError, guard.NumericsError,
+    ):
+        assert issubclass(t, guard.KronError)
+
+
+def test_emit_raises_typed_errors():
+    x, fs = _problem((4, 4), (4, 4))
+    with pytest.raises(guard.VmemOverflowError):
+        emit.chain_pallas(
+            x[None], *(f[None] for f in fs), t_m=16, t_k=16,
+            vmem_budget_elems=8,
+        )
+    with pytest.raises(guard.LoweringError):
+        emit.chain_pallas(x[None], *(f[None] for f in fs), t_m=16, t_k=6)
+    with pytest.raises(guard.PlanError):
+        autotune.make_plan(
+            autotune.KronProblem(16, (4, 4), (4, 4)), tune="nonsense"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Chaos harness
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_spec_parsing():
+    specs = chaos.parse_spec("stage_execute,collective:p=0.5:seed=7:times=2")
+    assert specs[0].site == "stage_execute" and specs[0].p == 1.0
+    assert specs[1].site == "collective"
+    assert (specs[1].p, specs[1].seed, specs[1].times) == (0.5, 7, 2)
+    with pytest.raises(guard.PlanError):
+        chaos.parse_spec("not_a_site")
+    with pytest.raises(guard.PlanError):
+        chaos.parse_spec("collective:frequency=2")
+
+
+def test_chaos_inject_fires_typed_error_and_counts():
+    with chaos.inject("plan_cache_load:times=1") as specs:
+        with pytest.raises(guard.PlanCacheError):
+            chaos.maybe_fail("plan_cache_load")
+        chaos.maybe_fail("plan_cache_load")  # times=1 exhausted: no-op
+        chaos.maybe_fail("collective")  # different site: no-op
+    assert specs[0].seen == 2 and specs[0].fired == 1
+    chaos.maybe_fail("plan_cache_load")  # outside the block: inactive
+
+
+def test_chaos_probabilistic_firing_is_deterministic():
+    def pattern():
+        hits = []
+        with chaos.inject("collective:p=0.5:seed=11"):
+            for _ in range(32):
+                try:
+                    chaos.maybe_fail("collective")
+                    hits.append(0)
+                except guard.CollectiveError:
+                    hits.append(1)
+        return hits
+
+    first = pattern()
+    assert pattern() == first  # same seed -> identical replay
+    assert 0 < sum(first) < 32  # actually probabilistic
+
+
+def test_chaos_after_skips_initial_hits():
+    with chaos.inject("stage_execute:after=2"):
+        chaos.maybe_fail("stage_execute")
+        chaos.maybe_fail("stage_execute")
+        with pytest.raises(guard.VmemOverflowError):
+            chaos.maybe_fail("stage_execute")
+
+
+def test_chaos_env_layer(monkeypatch):
+    monkeypatch.setenv("FASTKRON_CHAOS", "collective:times=1")
+    chaos.reload_env()
+    try:
+        with pytest.raises(guard.CollectiveError):
+            chaos.maybe_fail("collective")
+        chaos.maybe_fail("collective")
+    finally:
+        monkeypatch.delenv("FASTKRON_CHAOS")
+        chaos.reload_env()
+
+
+# ---------------------------------------------------------------------------
+# run_ladder unit behavior (no jax)
+# ---------------------------------------------------------------------------
+
+
+def _flaky(fail_first_n, calls=[0]):
+    def fn():
+        calls[0] += 1
+        if calls[0] <= fail_first_n:
+            raise guard.VmemOverflowError("boom")
+        return "ok"
+
+    return fn
+
+
+def test_run_ladder_degrades_and_reraises():
+    with pytest.warns(guard.GuardWarning, match="degrading to rung 1"):
+        out = guard.run_ladder(
+            "k1",
+            (("a", _flaky(99, [0])), ("b", lambda: "fallback")),
+        )
+    assert out == "fallback"
+    h = guard.health("k1")
+    assert h.degraded_calls == 1 and h.errors == {"VmemOverflowError": 1}
+    # every rung failing re-raises the last typed error
+    with pytest.raises(guard.VmemOverflowError):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            guard.run_ladder(
+                "k2", (("a", _flaky(99, [0])), ("b", _flaky(99, [0])))
+            )
+
+
+def test_run_ladder_pins_after_patience_and_recovers_counter():
+    def failing():
+        raise guard.VmemOverflowError("no vmem")
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        for _ in range(3):
+            out = guard.run_ladder(
+                "k3", (("a", failing), ("b", lambda: "ok")), patience=3
+            )
+            assert out == "ok"
+    h = guard.health("k3")
+    assert h.pinned and h.rung == 1
+    # pinned: the failing rung is skipped entirely (no new error recorded)
+    n_err = h.errors["VmemOverflowError"]
+    assert guard.run_ladder("k3", (("a", failing), ("b", lambda: "ok"))) == "ok"
+    assert guard.health("k3").errors["VmemOverflowError"] == n_err
+    # success at the start rung resets the consecutive counter
+    assert guard.health("k3").consecutive == 0
+
+
+def test_run_ladder_success_resets_consecutive():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        guard.run_ladder("k4", (("a", _flaky(1, [0])), ("b", lambda: "ok")),
+                         patience=3)
+    assert guard.health("k4").consecutive == 1
+    guard.run_ladder("k4", (("a", lambda: "ok"), ("b", lambda: "ok")))
+    assert guard.health("k4").consecutive == 0 and not guard.health("k4").pinned
+
+
+def test_non_kron_errors_propagate_through_ladder():
+    def buggy():
+        raise TypeError("a real bug, not a capacity failure")
+
+    with pytest.raises(TypeError):
+        guard.run_ladder("k5", (("a", buggy), ("b", lambda: "ok")))
+    assert guard.health("k5").degraded_calls == 0
+
+
+# ---------------------------------------------------------------------------
+# The KronOp degradation ladder (rungs 0 -> 1 -> 2, bitwise parity)
+# ---------------------------------------------------------------------------
+
+
+def test_ladder_rung1_per_factor_bitwise():
+    op = engine.kron_op_for((4, 4, 4), (4, 4, 4), m=16)
+    x, fs = _problem((4, 4, 4), (4, 4, 4))
+    ref = op(x, fs)
+    guard.reset_health()
+    with pytest.warns(guard.GuardWarning, match="degrading to rung 1"):
+        with chaos.inject("stage_execute:times=1"):
+            y = op(x, fs)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(y))  # (c)
+    [(key, h)] = [
+        (k, h) for k, h in guard.health_entries() if k[0] == "kron"
+    ]
+    assert h.errors.get("VmemOverflowError") == 1  # (a) typed error recorded
+    assert h.degraded_calls == 1 and h.calls == 1  # (b) completed degraded
+    assert "guard[" in op.describe() and "VmemOverflowError" in op.describe()
+
+
+def test_ladder_rung2_xla_scan_bitwise():
+    op = engine.kron_op_for((2, 4, 8), (2, 4, 8), m=16)
+    x, fs = _problem((2, 4, 8), (2, 4, 8), seed=1)
+    ref = op(x, fs)
+    guard.reset_health()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", guard.GuardWarning)
+        with chaos.inject("stage_execute,per_factor"):
+            y = op(x, fs)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(y))
+    [h] = [h for k, h in guard.health_entries() if k[0] == "kron"]
+    assert h.errors.get("VmemOverflowError", 0) >= 2  # both rungs recorded
+    assert h.degraded_calls == 1
+
+
+def test_ladder_batched_per_sample_bitwise():
+    op = engine.kron_op_for(
+        (4, 4), (4, 4), batch=2, m=8, shared_factors=False
+    )
+    x, fs = _batched_problem((4, 4), (4, 4))
+    ref = op(x, fs)
+    guard.reset_health()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", guard.GuardWarning)
+        with chaos.inject("stage_execute:times=1"):
+            y1 = op(x, fs)  # rung 1: per-factor batched
+        with chaos.inject("stage_execute:times=1,per_factor"):
+            y2 = op(x, fs)  # rung 2: xla chain
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(y1))
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(y2))
+    [h] = [h for k, h in guard.health_entries() if k[0] == "kron"]
+    assert h.degraded_calls == 2
+
+
+def test_ladder_pins_op_after_patience():
+    op = engine.kron_op_for((8, 8), (8, 8), m=16)
+    x, fs = _problem((8, 8), (8, 8), seed=2)
+    ref = op(x, fs)
+    guard.reset_health()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", guard.GuardWarning)
+        with chaos.inject("stage_execute:times=%d" % guard.DEFAULT_PATIENCE):
+            for _ in range(guard.DEFAULT_PATIENCE):
+                np.testing.assert_array_equal(
+                    np.asarray(ref), np.asarray(op(x, fs))
+                )
+    [(key, h)] = [(k, h) for k, h in guard.health_entries() if k[0] == "kron"]
+    assert h.pinned and h.rung == 1
+    assert "pinned" in op.describe()
+    # pinned: later calls start at rung 1 (no chaos active, still correct)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(op(x, fs)))
+    assert guard.health(key).errors.get("VmemOverflowError") == 3
+
+
+def test_gradients_survive_stage_chaos():
+    """The backward per-factor fallbacks (now KronError-typed) still produce
+    correct grads when the fused stage backward is chaos-failed."""
+    op = engine.kron_op_for((4, 4), (4, 4), m=8)
+    x, fs = _problem((4, 4), (4, 4), m=8, seed=3)
+
+    def loss(x, fs):
+        return jnp.sum(op(x, fs) ** 2)
+
+    ref = jax.grad(loss, argnums=(0, 1))(x, fs)
+    guard.reset_health()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", guard.GuardWarning)
+        with chaos.inject("stage_execute:times=1"):
+            got = jax.grad(loss, argnums=(0, 1))(x, fs)
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Numerics guards
+# ---------------------------------------------------------------------------
+
+
+def test_numerics_policy_resolution(monkeypatch):
+    assert guard.numerics_policy() == "off"
+    monkeypatch.setenv("FASTKRON_NUMERICS", "warn")
+    assert guard.numerics_policy() == "warn"
+    guard.set_numerics_policy("raise")
+    assert guard.numerics_policy() == "raise"
+    guard.set_numerics_policy(None)
+    assert guard.numerics_policy() == "warn"  # back to env
+    with pytest.raises(guard.PlanError):
+        guard.set_numerics_policy("maybe")
+    with guard.numerics("off"):
+        assert guard.numerics_policy() == "off"
+    assert guard.numerics_policy() == "warn"
+
+
+@pytest.mark.parametrize("policy", ["off", "warn", "raise"])
+def test_numerics_guard_at_program_boundary(policy):
+    op = engine.kron_op_for((4, 4), (4, 4), m=8)
+    x, fs = _problem((4, 4), (4, 4), m=8, seed=4)
+    x = x.at[0, 0].set(jnp.inf)
+    with guard.numerics(policy):
+        if policy == "raise":
+            with pytest.raises(guard.NumericsError):
+                op(x, fs)
+        elif policy == "warn":
+            with pytest.warns(guard.GuardWarning, match="non-finite"):
+                y = op(x, fs)
+            assert not bool(jnp.isfinite(y).all())
+            assert guard.health_report()["events"].get("nonfinite")
+        else:
+            y = op(x, fs)  # off: no check, inf flows through silently
+            assert not bool(jnp.isfinite(y).all())
+
+
+def test_numerics_guard_finite_inputs_clean():
+    op = engine.kron_op_for((4, 4), (4, 4), m=8)
+    x, fs = _problem((4, 4), (4, 4), m=8, seed=5)
+    with guard.numerics("raise"):
+        y = op(x, fs)
+    assert bool(jnp.isfinite(y).all())
+    assert not guard.health_report()["events"]
+
+
+def test_numerics_guard_under_jit_smoke():
+    """Traced values route through jax.debug.callback — the jitted call must
+    still complete and produce the same output as eager."""
+    op = engine.kron_op_for((4, 4), (4, 4), m=8)
+    x, fs = _problem((4, 4), (4, 4), m=8, seed=6)
+    ref = op(x, fs)
+    with guard.numerics("warn"):
+        y = jax.jit(lambda x, fs: op(x, fs))(x, fs)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Plan-cache robustness (satellite: retry + PlanCacheError routing)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_corruption_warns_and_rebuilds(tmp_path):
+    path = str(tmp_path / "plans.json")
+    with open(path, "w") as f:
+        f.write('{"version": 1, "entries": {truncated')
+    with pytest.warns(guard.GuardWarning, match="rebuilding"):
+        assert autotune.load_plan_cache(path) == {}
+    assert guard.health_report()["events"].get("plan_cache_rebuild") == 1
+    # warn-once: a second load of the same path stays quiet
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert autotune.load_plan_cache(path) == {}
+
+
+def test_plan_cache_missing_file_is_silent(tmp_path):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert autotune.load_plan_cache(str(tmp_path / "nope.json")) == {}
+    assert not guard.health_report()["events"]
+
+
+def test_plan_cache_save_retries_through_contention(tmp_path):
+    path = str(tmp_path / "plans.json")
+    entries = {"k": {"plan": {"stages": [], "t_b": 1}}}
+    # two injected failures, three attempts: the save must land
+    with chaos.inject("plan_cache_save:times=2") as specs:
+        autotune.save_plan_cache(path, entries)
+    assert specs[0].fired == 2
+    assert autotune.load_plan_cache(path) == entries
+
+
+def test_plan_cache_save_exhausted_warns_not_raises(tmp_path):
+    path = str(tmp_path / "plans.json")
+    with chaos.inject("plan_cache_save"):  # every attempt fails
+        with pytest.warns(guard.GuardWarning, match="not persisted"):
+            autotune.save_plan_cache(path, {"k": {"plan": {}}})
+    assert not os.path.exists(path)
+    assert guard.health_report()["events"].get("plan_cache_save_failed") == 1
+
+
+def test_chaos_cache_load_routes_through_rebuild(tmp_path):
+    path = str(tmp_path / "plans.json")
+    autotune.save_plan_cache(path, {"k": {"plan": {"stages": [], "t_b": 1}}})
+    with chaos.inject("plan_cache_load:times=1"):
+        with pytest.warns(guard.GuardWarning, match="rebuilding"):
+            assert autotune.load_plan_cache(path) == {}
+    # injection exhausted: the intact on-disk file reads back fine
+    assert autotune.load_plan_cache(path) != {}
+
+
+# ---------------------------------------------------------------------------
+# Health report plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_health_report_shape_and_reset():
+    guard.record_event("nonfinite")
+    guard.health("some-op").record(guard.PlanError("x"))
+    rep = guard.health_report()
+    assert rep["events"]["nonfinite"] == 1
+    assert rep["ops"]["'some-op'"]["errors"] == {"PlanError": 1}
+    guard.reset_health()
+    rep = guard.health_report()
+    assert not rep["events"] and not rep["ops"]

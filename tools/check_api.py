@@ -36,6 +36,8 @@ LOCKED = [
     "repro.gp.ski",
     "repro.kernels.ops",
     "repro.kernels.emit",
+    "repro.runtime.guard",
+    "repro.runtime.chaos",
 ]
 
 _IDENT = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
