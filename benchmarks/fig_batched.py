@@ -28,7 +28,7 @@ from repro.core import autotune
 from repro.core.fastkron import kron_matmul, kron_matmul_batched
 from repro.core.kron import KronProblem
 
-from .util import csv_row
+from .util import bench_meta, csv_row
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 OUT_JSON = ROOT / "BENCH_batched.json"
@@ -144,6 +144,7 @@ def run(quick: bool = False):
     best = max(("shared", "per_sample"), key=lambda k: record[k]["speedup"])
     record["speedup"] = record[best]["speedup"]
     record["headline_mode"] = best
+    record["meta"] = bench_meta()
     with open(OUT_JSON, "w") as f:
         json.dump(record, f, indent=1)
     yield csv_row(

@@ -25,7 +25,7 @@ from repro.core import autotune
 from repro.core.fastkron import kron_matmul
 from repro.core.kron import KronProblem
 
-from .util import csv_row, make_inputs
+from .util import bench_meta, csv_row, make_inputs
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 OUT_JSON = ROOT / "BENCH_bwd.json"
@@ -105,6 +105,7 @@ def run(quick: bool = False):
             "planned_s": tx_plan,
             "speedup": tx_seed / tx_plan,
         },
+        "meta": bench_meta(),
     }
     with open(OUT_JSON, "w") as f:
         json.dump(record, f, indent=1)

@@ -27,7 +27,7 @@ import pathlib
 import subprocess
 import sys
 
-from .util import csv_row
+from .util import bench_meta, csv_row
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 OUT_JSON = ROOT / "BENCH_dist_batched.json"
@@ -156,6 +156,7 @@ def _child(quick: bool) -> None:
     best = max(("shared", "per_sample"), key=lambda k: record[k]["speedup"])
     record["speedup"] = record[best]["speedup"]
     record["headline_mode"] = best
+    record["meta"] = bench_meta()
     with open(OUT_JSON, "w") as f:
         json.dump(record, f, indent=1)
 

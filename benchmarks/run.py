@@ -24,7 +24,15 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(ALL))
+    ap.add_argument("--telemetry", metavar="OUT.jsonl", default=None,
+                    help="KronScope JSONL event sink for the whole run")
+    ap.add_argument("--trace", metavar="OUT.trace.json", default=None,
+                    help="Chrome-trace export of host-side spans at exit")
     args = ap.parse_args()
+    if args.telemetry or args.trace:
+        from repro.runtime import telemetry
+
+        telemetry.configure(jsonl=args.telemetry, trace=args.trace)
     names = args.only.split(",") if args.only else ALL
     failures = []
     for name in names:
@@ -38,6 +46,10 @@ def main() -> None:
             failures.append(name)
             traceback.print_exc()
             print(f"# {name} FAILED: {e}", flush=True)
+    if args.telemetry or args.trace:
+        from repro.runtime import telemetry
+
+        telemetry.shutdown()
     if failures:
         print(f"# FAILURES: {failures}")
         sys.exit(1)

@@ -7,7 +7,10 @@ bytes/comm which are hardware-independent.
 """
 from __future__ import annotations
 
+import datetime
+import json
 import math
+import subprocess
 import time
 from typing import Callable, Sequence
 
@@ -60,4 +63,52 @@ def largest_n(m: int, p: int, q: int, budget_elems: int = 3 * 10**7) -> int:
         n += 1
 
 
-__all__ = ["timeit", "gflops", "make_inputs", "csv_row", "largest_n"]
+def _git_sha() -> str | None:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=5,
+        ).stdout.strip() or None
+    except Exception:
+        return None
+
+
+def bench_meta() -> dict:
+    """Provenance block stamped into every ``BENCH_*.json`` record.
+
+    A number without the software stack and hardware it ran on is not
+    comparable run-to-run — nightly CI archives these files, so each one
+    carries enough to explain a regression: versions, device kind,
+    platform, date, and the git SHA that produced it.
+    """
+    dev = jax.devices()[0]
+    return {
+        "jax": jax.__version__,
+        "jaxlib": getattr(
+            __import__("jaxlib"), "__version__", jax.__version__
+        ),
+        "device_kind": dev.device_kind,
+        "platform": dev.platform,
+        "date": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "git_sha": _git_sha(),
+    }
+
+
+def load_bench(path: str) -> dict:
+    """Read a ``BENCH_*.json`` record, tolerating the pre-meta schema.
+
+    Returns the record with a ``"meta"`` key always present (``{}`` for
+    files written before provenance stamping) so comparison scripts can
+    index it unconditionally.
+    """
+    with open(path) as f:
+        record = json.load(f)
+    if not isinstance(record.get("meta"), dict):
+        record["meta"] = {}
+    return record
+
+
+__all__ = [
+    "timeit", "gflops", "make_inputs", "csv_row", "largest_n",
+    "bench_meta", "load_bench",
+]

@@ -47,7 +47,7 @@ import jax.numpy as jnp
 
 from ..kernels import emit as emit_mod
 from ..kernels.emit import StageInstr, StageProgram, fused_growth
-from ..runtime import chaos, guard
+from ..runtime import chaos, guard, telemetry
 from .kron import KronProblem
 
 # TPU v5e hardware model (same constants as EXPERIMENTS.md).
@@ -932,7 +932,9 @@ def _measured_plan(
     entries = load_plan_cache(path)
     hit = entries.get(key)
     if hit is not None:
+        telemetry.counter_inc("plan_cache.hit")
         return plan_from_json(hit["plan"])
+    telemetry.counter_inc("plan_cache.miss")
 
     base = make_plan(
         prob, dtype_bytes=dtype_bytes, tune="analytic", backend=backend,
@@ -970,7 +972,8 @@ def _measured_plan(
         return lambda: f(x, factors)
 
     try:
-        best, seconds = measure_best(fn_of_plan, cands, warmup=1, iters=3)
+        with telemetry.span("measure_plan", candidates=len(cands)):
+            best, seconds = measure_best(fn_of_plan, cands, warmup=1, iters=3)
     except (RuntimeError, guard.PlanError):
         # No candidate executed (e.g. unsupported backend/dtype combination):
         # fall back to the analytic plan and don't poison the cache.

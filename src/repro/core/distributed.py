@@ -57,7 +57,7 @@ def _shard_map(fn, *, mesh, in_specs, out_specs):
     return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
 
 from ..kernels import emit
-from ..runtime import chaos, guard
+from ..runtime import chaos, guard, telemetry
 
 
 # ---------------------------------------------------------------------------
@@ -141,6 +141,16 @@ def comm_elems_per_device(
 # ---------------------------------------------------------------------------
 
 
+def _record_round_comm(shape, g_k: int, k: int) -> None:
+    """Per-round all_to_all payload metrics — static trace-time ints, so the
+    one-truthiness-check contract holds and nothing enters the traced HLO."""
+    if not telemetry.active():
+        return
+    elems = math.prod(int(d) for d in shape) * (g_k - 1) // g_k
+    telemetry.observe("comm_elems_per_device", elems)
+    telemetry.gauge_set(f"comm.round{k}.elems_per_device", elems)
+
+
 def _relocate(y: jax.Array, q_prod: int, g_k: int, model_axis: str) -> jax.Array:
     """One all_to_all relocation (see module docstring).  The index
     arithmetic lives in ``_relocate_batched``; the single-problem case is
@@ -205,12 +215,14 @@ def _dist_body(
     rounds = plan_rounds(k_loc, ps, qs, g_k, minimal=per_iteration)
     y = x_loc
     i = 0
-    for r in rounds:
+    for k, r in enumerate(rounds):
         fs = factors_rev[i : i + r]
-        y = _local_multiply_round(y, fs, backend, None)
-        if g_k > 1:
-            qprod = math.prod(int(f.shape[1]) for f in fs)
-            y = _relocate(y, qprod, g_k, model_axis)
+        with telemetry.span("round", k=k, n_factors=r):
+            y = _local_multiply_round(y, fs, backend, None)
+            if g_k > 1:
+                qprod = math.prod(int(f.shape[1]) for f in fs)
+                _record_round_comm(y.shape, g_k, k)
+                y = _relocate(y, qprod, g_k, model_axis)
         i += r
     return y
 
@@ -284,12 +296,14 @@ def _dist_body_batched(
     rounds = plan_rounds(k_loc, ps, qs, g_k, minimal=per_iteration)
     y = x_loc
     i = 0
-    for r in rounds:
+    for k, r in enumerate(rounds):
         fs = factors_rev[i : i + r]
-        y = _local_multiply_round(y, fs, backend, t_b)
-        if g_k > 1:
-            qprod = math.prod(int(f.shape[2]) for f in fs)
-            y = _relocate_batched(y, qprod, g_k, model_axis)
+        with telemetry.span("round", k=k, n_factors=r, batched=True):
+            y = _local_multiply_round(y, fs, backend, t_b)
+            if g_k > 1:
+                qprod = math.prod(int(f.shape[2]) for f in fs)
+                _record_round_comm(y.shape, g_k, k)
+                y = _relocate_batched(y, qprod, g_k, model_axis)
         i += r
     return y
 

@@ -52,6 +52,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import time
 import warnings
 from typing import NamedTuple, Sequence
 
@@ -61,7 +62,7 @@ from jax.extend.core import Primitive
 from jax.interpreters import batching, mlir
 
 from ..kernels import emit, ops
-from ..runtime import chaos, guard
+from ..runtime import chaos, guard, telemetry
 from . import autotune
 from .autotune import KronPlan, Stage, TileConfig
 from .kron import KronProblem
@@ -321,14 +322,15 @@ def _resolve_plan(
     tune: str,
     cache_path: str | None,
 ) -> KronPlan:
-    return autotune.make_plan(
-        KronProblem(m, ps, qs),
-        dtype_bytes=dtype_bytes,
-        enable_prekron=enable_prekron,
-        tune=tune,
-        backend=backend,
-        cache_path=cache_path,
-    )
+    with telemetry.span("plan", m=m, ps=ps, qs=qs, tune=tune):
+        return autotune.make_plan(
+            KronProblem(m, ps, qs),
+            dtype_bytes=dtype_bytes,
+            enable_prekron=enable_prekron,
+            tune=tune,
+            backend=backend,
+            cache_path=cache_path,
+        )
 
 
 @functools.lru_cache(maxsize=_PLAN_MEMO_SIZE)
@@ -344,17 +346,18 @@ def _resolve_batched_plan(
     cache_path: str | None,
     g_k: int,
 ) -> KronPlan:
-    return autotune.make_batched_plan(
-        KronProblem(m, ps, qs),
-        batch,
-        shared_factors=False,
-        dtype_bytes=dtype_bytes,
-        enable_prekron=enable_prekron,
-        tune=tune,
-        backend=backend,
-        cache_path=cache_path,
-        g_k=g_k,
-    )
+    with telemetry.span("plan", m=m, ps=ps, qs=qs, tune=tune, batch=batch):
+        return autotune.make_batched_plan(
+            KronProblem(m, ps, qs),
+            batch,
+            shared_factors=False,
+            dtype_bytes=dtype_bytes,
+            enable_prekron=enable_prekron,
+            tune=tune,
+            backend=backend,
+            cache_path=cache_path,
+            g_k=g_k,
+        )
 
 
 class _PlanCtx(NamedTuple):
@@ -634,6 +637,61 @@ class KronCost:
     flops: int
     comm_elems_per_device: int  # all_to_all payload; 0 for local ops
     rounds: int  # collective rounds; 0 for local ops
+
+
+def _stage_flops_bytes(
+    y_shape: Sequence[int], instr: emit.StageInstr, dtype_bytes: int
+) -> tuple[int, int]:
+    """Analytic (flops, hbm_bytes) of one stage launch on input ``y_shape``.
+
+    Flops follow the sliced-multiply count (KronProblem.flops, per chained
+    factor); bytes are the input + output intermediates plus the factor
+    panels — the same two quantities the planner's analytic model trades off,
+    so ``profile()`` drift is measured against the model that CHOSE the plan.
+    """
+    rows = math.prod(int(d) for d in y_shape[:-1]) or 1
+    k = int(y_shape[-1])
+    flops = 0
+    factor_elems = 0
+    if instr.kind == emit.PREKRON:
+        pairs = [(instr.pprod, instr.qprod)]
+        factor_elems = sum(p * q for p, q in zip(instr.ps, instr.qs))
+    else:
+        pairs = list(zip(instr.ps, instr.qs))
+        factor_elems = sum(p * q for p, q in pairs)
+    cur = k
+    for p, q in pairs:
+        out = (cur // p) * q
+        flops += 2 * rows * out * p
+        cur = out
+    bytes_ = (rows * k + rows * cur + factor_elems) * dtype_bytes
+    return flops, bytes_
+
+
+def _stage_drift(
+    measured: Sequence[float], predicted: Sequence[float], threshold: float
+) -> list[bool]:
+    """Per-stage cost-model drift flags for ``KronOp.profile()``.
+
+    Absolute measured/predicted ratios are hardware-calibration, not drift —
+    the model's PEAK/BW constants are TPU numbers and the host may be
+    anything.  What the model does promise is the SPLIT of time across
+    stages, so each stage's ratio is normalised by the whole-program ratio
+    and flagged when it deviates by more than ``threshold``x either way.
+    """
+    total_m = sum(measured)
+    total_p = sum(predicted)
+    if total_m <= 0 or total_p <= 0 or threshold <= 0:
+        return [False] * len(list(measured))
+    overall = total_m / total_p
+    flags = []
+    for m_i, p_i in zip(measured, predicted):
+        if p_i <= 0:
+            flags.append(m_i > 0)
+            continue
+        drift = (m_i / p_i) / overall
+        flags.append(drift > threshold or drift < 1.0 / threshold)
+    return flags
 
 
 _OP_STATE_SIZE = 8  # per-op (rows, dtype) -> plan/fn entries kept
@@ -921,6 +979,173 @@ class KronOp:
         )
         return KronCost(flops, comm, len(self.rounds))
 
+    def profile(
+        self,
+        x: jax.Array,
+        factors: Sequence[jax.Array],
+        *,
+        warmup: int = 1,
+        iters: int = 3,
+        drift_threshold: float | None = None,
+    ) -> dict:
+        """Measure the lowered StageProgram stage by stage and compare the
+        wall-clock split against the planner's analytic cost model.
+
+        Each stage of the op's forward program is executed eagerly (the same
+        ``emit.run_stage`` calls ``run_program`` chains) with
+        ``jax.block_until_ready`` timing — min over ``iters`` runs after
+        ``warmup`` discarded ones.  The analytic prediction per stage is the
+        planner's own two-term model (flops/peak + bytes/bandwidth); a stage
+        whose measured share deviates from its predicted share by more than
+        ``drift_threshold`` (default ``telemetry.DRIFT_THRESHOLD``) in either
+        direction is flagged as cost-model drift (see ``_stage_drift`` for
+        why the SPLIT, not the absolute ratio, is the contract).
+
+        Mesh ops profile their local-equivalent plan — per-stage timing
+        inside a ``shard_map`` body is not observable from the host — and the
+        report carries the analytic collective cost as predicted-only under
+        ``"comm"``.  ``plan=None`` (paper-faithful unfused) ops have no
+        StageProgram and raise ``PlanError``.
+
+        When telemetry is active the report is stamped into the registry
+        (``telemetry.mark_profile``) and each flagged stage emits a
+        ``cost_model_drift`` event; with telemetry off the dict is simply
+        returned.
+        """
+        factors = tuple(factors)
+        self._check_factors(factors)
+        threshold = (
+            telemetry.DRIFT_THRESHOLD
+            if drift_threshold is None
+            else float(drift_threshold)
+        )
+        op = self._derive(mesh=None, m=None) if self.mesh is not None else self
+        report = op._profile_stages(
+            x, factors, warmup=int(warmup), iters=int(iters), threshold=threshold
+        )
+        if self.mesh is not None:
+            cost = self.cost(report["signature"]["m"])
+            report["signature"]["mesh"] = [self.g_m, self.g_k]
+            report["comm"] = {
+                "elems_per_device": cost.comm_elems_per_device,
+                "rounds": cost.rounds,
+                "predicted_s": cost.comm_elems_per_device
+                * self._dtype_bytes
+                / autotune.HBM_BW,
+                "measured_s": None,  # rounds run inside shard_map bodies
+            }
+        telemetry.mark_profile(report)
+        for i in report["drift_flagged"]:
+            st = report["stages"][i]
+            telemetry.event(
+                "cost_model_drift",
+                stage=i,
+                drift=st["drift"],
+                instr=st["instr"],
+            )
+        return report
+
+    def _profile_stages(
+        self, x: jax.Array, factors: tuple, *, warmup: int, iters: int,
+        threshold: float,
+    ) -> dict:
+        dtype_bytes = x.dtype.itemsize
+        if self.batch is not None and not self.shared_factors:
+            b = self.batch
+            m_rows = math.prod(int(d) for d in x.shape[1:-1]) or 1
+            plan = self._batched_plan(b, m_rows, dtype_bytes)
+            batched = True
+            y = x.reshape(b, m_rows, self.k)
+        else:
+            rows = math.prod(int(d) for d in x.shape[:-1]) or 1
+            plan = self._single_plan(rows, dtype_bytes)
+            batched = False
+            y = x.reshape(rows, self.k)
+            m_rows = rows // (self.batch or 1)
+        if plan is None:
+            raise guard.PlanError(
+                "profile() needs a planned op (plan='auto' or an explicit "
+                "KronPlan): plan=None runs the paper-faithful unfused loop, "
+                "which has no StageProgram to time stage by stage"
+            )
+        prog = _lowered(plan, self.ps, self.qs, batched)
+        rev = tuple(reversed(factors))
+        peak = (
+            autotune.PEAK_FLOPS if dtype_bytes <= 2 else autotune.PEAK_FLOPS_F32
+        )
+        stages: list[dict] = []
+        measured: list[float] = []
+        predicted: list[float] = []
+        with telemetry.span("profile", ps=self.ps, qs=self.qs):
+            for idx, instr in enumerate(prog.instrs):
+                sf = tuple(rev[i] for i in instr.factor_ids)
+                y_in = y
+
+                def run(y_in=y_in, sf=sf, instr=instr):
+                    return emit.run_stage(y_in, sf, instr, backend=self.backend)
+
+                for _ in range(max(0, warmup)):
+                    jax.block_until_ready(run())
+                best = float("inf")
+                out = None
+                for _ in range(max(1, iters)):
+                    t0 = time.perf_counter()
+                    out = run()
+                    jax.block_until_ready(out)
+                    best = min(best, time.perf_counter() - t0)
+                flops, nbytes = _stage_flops_bytes(y.shape, instr, dtype_bytes)
+                pred = flops / peak + nbytes / autotune.HBM_BW
+                measured.append(best)
+                predicted.append(pred)
+                stages.append(
+                    {
+                        "stage": idx,
+                        "instr": instr.describe(),
+                        "factor_ids": list(instr.factor_ids),
+                        "measured_s": best,
+                        "predicted_s": pred,
+                        "flops": flops,
+                        "bytes": nbytes,
+                    }
+                )
+                y = out
+        flags = _stage_drift(measured, predicted, threshold)
+        total_m = sum(measured)
+        total_p = sum(predicted)
+        overall = total_m / total_p if total_p > 0 else float("nan")
+        for st, m_i, p_i, flag in zip(stages, measured, predicted, flags):
+            st["share_measured"] = m_i / total_m if total_m > 0 else 0.0
+            st["share_predicted"] = p_i / total_p if total_p > 0 else 0.0
+            st["drift"] = (
+                (m_i / p_i) / overall
+                if p_i > 0 and overall == overall
+                else float("inf")
+            )
+            st["drift_flagged"] = flag
+        cost = self.cost(m_rows)
+        return {
+            "signature": {
+                "ps": list(self.ps),
+                "qs": list(self.qs),
+                "m": m_rows,
+                "batch": self.batch,
+                "backend": self.backend,
+            },
+            "plan": plan.describe(),
+            "program": prog.describe(),
+            "stages": stages,
+            "measured_s": total_m,
+            "predicted_s": total_p,
+            "cost_flops": cost.flops,
+            "measured_gflops_s": (
+                cost.flops / total_m / 1e9 if total_m > 0 else 0.0
+            ),
+            "drift_threshold": threshold,
+            "drift_flagged": [i for i, f in enumerate(flags) if f],
+            "warmup": warmup,
+            "iters": iters,
+        }
+
     def describe(self) -> str:
         mode = "batched" if self.batch is not None else "single"
         shared = "" if self.batch is None else (
@@ -940,7 +1165,14 @@ class KronOp:
             f"KronOp(ps={list(self.ps)}, qs={list(self.qs)}, {mode}"
             f"{shared}, {where}, backend={self.backend}) :: {pdesc}"
         )
-        return base + self._health_suffix()
+        return base + self._health_suffix() + self._telemetry_suffix()
+
+    def _telemetry_suffix(self) -> str:
+        """One-line KronScope state when telemetry is live — empty when off,
+        so ``describe()`` stays byte-stable for untelemetered processes."""
+        if not telemetry.active():
+            return ""
+        return " :: " + telemetry.summary_line()
 
     def _health_suffix(self) -> str:
         """Guard-layer health for this op's signature — empty while healthy,

@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.runtime import chaos, guard
+from repro.runtime import chaos, guard, telemetry
 from repro.runtime.guard import LoweringError, VmemOverflowError
 
 # Conservative usable-VMEM budget (f32 elements): ~16 MiB VMEM, keep half for
@@ -982,28 +982,31 @@ def run_stage(
     hold the stage in VMEM (callers fall back to per-factor execution).
     """
     chaos.maybe_fail("stage_execute")
-    fs = tuple(stage_factors)
-    direction, fs, t_qs = _effective(instr, fs)
-    b = resolve_backend(backend)
-    if b == "xla":
-        return _chain_xla(
-            y, fs, t_m=instr.t_m, t_b=instr.t_b, direction=direction,
-            acc_dtype=instr.acc_dtype,
+    # One truthiness check when telemetry is off (span() returns a shared
+    # no-op): no named_scope enters the trace, compiled HLO is unchanged.
+    with telemetry.span("stage", kind=instr.kind, direction=instr.direction):
+        fs = tuple(stage_factors)
+        direction, fs, t_qs = _effective(instr, fs)
+        b = resolve_backend(backend)
+        if b == "xla":
+            return _chain_xla(
+                y, fs, t_m=instr.t_m, t_b=instr.t_b, direction=direction,
+                acc_dtype=instr.acc_dtype,
+            )
+        chaos.maybe_fail("pallas_lowering")
+        ip = _interpret_default(interpret)
+        if instr.t_b is None:
+            out = chain_pallas(
+                y[None], *(f[None] for f in fs), t_b=1, t_m=instr.t_m,
+                t_k=instr.t_k, t_qs=t_qs, direction=direction, interpret=ip,
+                acc_dtype=instr.acc_dtype, vmem_budget_elems=vmem_budget_elems,
+            )
+            return out[0]
+        return chain_pallas(
+            y, *fs, t_b=instr.t_b, t_m=instr.t_m, t_k=instr.t_k, t_qs=t_qs,
+            direction=direction, interpret=ip, acc_dtype=instr.acc_dtype,
+            vmem_budget_elems=vmem_budget_elems,
         )
-    chaos.maybe_fail("pallas_lowering")
-    ip = _interpret_default(interpret)
-    if instr.t_b is None:
-        out = chain_pallas(
-            y[None], *(f[None] for f in fs), t_b=1, t_m=instr.t_m,
-            t_k=instr.t_k, t_qs=t_qs, direction=direction, interpret=ip,
-            acc_dtype=instr.acc_dtype, vmem_budget_elems=vmem_budget_elems,
-        )
-        return out[0]
-    return chain_pallas(
-        y, *fs, t_b=instr.t_b, t_m=instr.t_m, t_k=instr.t_k, t_qs=t_qs,
-        direction=direction, interpret=ip, acc_dtype=instr.acc_dtype,
-        vmem_budget_elems=vmem_budget_elems,
-    )
 
 
 def run_stage_grad(
@@ -1025,29 +1028,33 @@ def run_stage_grad(
     the one-kernel Pallas backward cannot hold the stage's live set in VMEM.
     """
     chaos.maybe_fail("stage_execute")
-    fs = tuple(stage_factors)
-    b = resolve_backend(backend)
-    if b == "xla":
-        dx, dfs = _grad_xla(
-            u, g, fs, t_m=instr.t_m, t_b=instr.t_b, acc_dtype=instr.acc_dtype
-        )
-        return guard.check_finite(dx, "run_stage_grad"), dfs
-    chaos.maybe_fail("pallas_lowering")
-    ip = _interpret_default(interpret)
-    if instr.t_b is None:
+    with telemetry.span("stage_grad", kind=instr.kind):
+        fs = tuple(stage_factors)
+        b = resolve_backend(backend)
+        if b == "xla":
+            dx, dfs = _grad_xla(
+                u, g, fs, t_m=instr.t_m, t_b=instr.t_b,
+                acc_dtype=instr.acc_dtype,
+            )
+            return guard.check_finite(dx, "run_stage_grad"), dfs
+        chaos.maybe_fail("pallas_lowering")
+        ip = _interpret_default(interpret)
+        if instr.t_b is None:
+            dx, dfs = grad_pallas(
+                u[None], g[None], *(f[None] for f in fs), t_b=1,
+                t_m=instr.t_m, t_k=instr.t_k, interpret=ip,
+                acc_dtype=instr.acc_dtype,
+                vmem_budget_elems=vmem_budget_elems,
+            )
+            return guard.check_finite(dx[0], "run_stage_grad"), tuple(
+                d[0] for d in dfs
+            )
         dx, dfs = grad_pallas(
-            u[None], g[None], *(f[None] for f in fs), t_b=1, t_m=instr.t_m,
-            t_k=instr.t_k, interpret=ip, acc_dtype=instr.acc_dtype,
+            u, g, *fs, t_b=instr.t_b, t_m=instr.t_m, t_k=instr.t_k,
+            interpret=ip, acc_dtype=instr.acc_dtype,
             vmem_budget_elems=vmem_budget_elems,
         )
-        return guard.check_finite(dx[0], "run_stage_grad"), tuple(
-            d[0] for d in dfs
-        )
-    dx, dfs = grad_pallas(
-        u, g, *fs, t_b=instr.t_b, t_m=instr.t_m, t_k=instr.t_k, interpret=ip,
-        acc_dtype=instr.acc_dtype, vmem_budget_elems=vmem_budget_elems,
-    )
-    return guard.check_finite(dx, "run_stage_grad"), dfs
+        return guard.check_finite(dx, "run_stage_grad"), dfs
 
 
 def run_program(
@@ -1072,12 +1079,13 @@ def run_program(
             f"program expects {prog.n_factors} factors, got {len(factors)}"
         )
     rev = tuple(reversed(factors))
-    y = x
-    for instr in prog.instrs:
-        y = run_stage(
-            y, tuple(rev[i] for i in instr.factor_ids), instr,
-            backend=backend, interpret=interpret,
-        )
+    with telemetry.span("program", stages=len(prog.instrs)):
+        y = x
+        for instr in prog.instrs:
+            y = run_stage(
+                y, tuple(rev[i] for i in instr.factor_ids), instr,
+                backend=backend, interpret=interpret,
+            )
     # Non-finite guard on the program's output — the value downstream layers
     # consume, after every stage's acc_dtype downcast (policy off|warn|raise).
     return guard.check_finite(y, "run_program")

@@ -19,7 +19,8 @@ import jax.numpy as jnp
 from ..configs import get_config
 from ..data import SyntheticLM
 from ..models.config import reduced as reduce_cfg
-from ..runtime import guard
+from ..runtime import guard, telemetry
+from ..runtime.events import get_logger
 from ..runtime.fault import StragglerMonitor, elastic_mesh
 from ..train import make_prefill_step, make_serve_step, prebuild_kron_ops
 
@@ -52,12 +53,21 @@ def main() -> None:
                          "(default: FASTKRON_NUMERICS or off); serving "
                          "typically wants warn — degraded tokens are better "
                          "than a dead replica")
+    ap.add_argument("--telemetry", metavar="OUT.jsonl", default=None,
+                    help="KronScope JSONL event sink: spans, guard/chaos "
+                         "events, per-round comm metrics, tokens/s gauges")
+    ap.add_argument("--trace", metavar="OUT.trace.json", default=None,
+                    help="Chrome-trace (Perfetto) export of the host-side "
+                         "spans, written at exit")
     args = ap.parse_args()
     if args.distributed and not args.kron_ffn:
         ap.error("--distributed requires --kron-ffn (it distributes the "
                  "batched Kron-FFN prefill)")
     if args.numerics is not None:
         guard.set_numerics_policy(args.numerics)
+    if args.telemetry or args.trace:
+        telemetry.configure(jsonl=args.telemetry, trace=args.trace)
+    log = get_logger("repro.serve")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -98,8 +108,10 @@ def main() -> None:
         step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
 
         t0 = time.time()
-        logits, cache = prefill(params, prompts)
-        jax.block_until_ready(logits)
+        with telemetry.span("prefill", batch=args.batch,
+                            prompt_len=args.prompt_len):
+            logits, cache = prefill(params, prompts)
+            jax.block_until_ready(logits)
         t_prefill = time.time() - t0
 
         def sample(logits, key):
@@ -121,27 +133,34 @@ def main() -> None:
         for i in range(args.gen - 1):
             key = jax.random.fold_in(key, i)
             mon.start()
-            logits, cache = step(params, cache, tok, jnp.int32(args.prompt_len + i))
-            tok = sample(logits, key)[:, None]
-            jax.block_until_ready(tok)
+            with telemetry.span("decode_step", step=i):
+                logits, cache = step(params, cache, tok,
+                                     jnp.int32(args.prompt_len + i))
+                tok = sample(logits, key)[:, None]
+                jax.block_until_ready(tok)
             mon.stop(i)
             out_tokens.append(tok)
         t_decode = time.time() - t0
 
     gen = jnp.concatenate(out_tokens, axis=1)
-    print(f"generated shape: {gen.shape}")
-    print(f"sample row: {gen[0, :12].tolist()}")
+    log.info(f"generated shape: {gen.shape}")
+    log.info(f"sample row: {gen[0, :12].tolist()}")
     pre_tps = args.batch * args.prompt_len / max(t_prefill, 1e-9)
     dec_tps = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
-    print(f"prefill: {t_prefill:.2f}s ({pre_tps:.0f} tok/s)  "
-          f"decode: {t_decode:.2f}s ({dec_tps:.0f} tok/s)")
+    telemetry.gauge_set("prefill.tokens_per_s", pre_tps)
+    telemetry.gauge_set("decode.tokens_per_s", dec_tps)
+    log.info(f"prefill: {t_prefill:.2f}s ({pre_tps:.0f} tok/s)  "
+             f"decode: {t_decode:.2f}s ({dec_tps:.0f} tok/s)")
     if mon.flagged_steps:
-        print(f"stragglers: {len(mon.flagged_steps)} decode step(s) flagged")
+        log.info(f"stragglers: {len(mon.flagged_steps)} decode step(s) flagged")
+    # ONE merged exit report: guard health carries the telemetry snapshot
+    # (counters, gauges, histogram percentiles) when KronScope is live.
     report = guard.health_report()
-    if report["events"] or any(
+    if telemetry.active() or report["events"] or any(
         h["degraded_calls"] or h["errors"] for h in report["ops"].values()
     ):
-        print(f"guard health: {report}")
+        log.info(f"health: {report}")
+    telemetry.shutdown()
 
 
 if __name__ == "__main__":

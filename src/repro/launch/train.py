@@ -26,7 +26,8 @@ from ..configs import get_config
 from ..data import SyntheticLM
 from ..models.config import reduced as reduce_cfg
 from ..optim import OptConfig
-from ..runtime import guard
+from ..runtime import guard, telemetry
+from ..runtime.events import get_logger
 from ..runtime.fault import StragglerMonitor, elastic_mesh
 from ..runtime.sharding import param_shardings, token_sharding
 from ..train import TrainState, make_train_step, train_state_init
@@ -55,9 +56,18 @@ def main() -> None:
                          "(default: FASTKRON_NUMERICS or off); training "
                          "typically wants raise — fail fast and restart from "
                          "the last checkpoint before the divergence")
+    ap.add_argument("--telemetry", metavar="OUT.jsonl", default=None,
+                    help="KronScope JSONL event sink: spans, guard/chaos "
+                         "events, step-latency histograms, tokens/s gauges")
+    ap.add_argument("--trace", metavar="OUT.trace.json", default=None,
+                    help="Chrome-trace (Perfetto) export of the host-side "
+                         "spans, written at exit")
     args = ap.parse_args()
     if args.numerics is not None:
         guard.set_numerics_policy(args.numerics)
+    if args.telemetry or args.trace:
+        telemetry.configure(jsonl=args.telemetry, trace=args.trace)
+    log = get_logger("repro.train")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -116,8 +126,13 @@ def main() -> None:
                 "labels": jax.device_put(labels, tok_sh),
             }
             mon.start()
-            state, metrics = step_fn(state, batch)
-            jax.block_until_ready(metrics["loss"])
+            t_step = time.perf_counter()
+            with telemetry.span("train_step", step=i):
+                state, metrics = step_fn(state, batch)
+                jax.block_until_ready(metrics["loss"])
+            telemetry.observe(
+                "train.step_seconds", time.perf_counter() - t_step
+            )
             mon.stop(i)
             if i % args.log_every == 0 or i == args.steps - 1:
                 print(
@@ -133,12 +148,16 @@ def main() -> None:
             mgr.wait()
     dt = time.time() - t_start
     tok_s = args.steps * args.batch * args.seq / max(dt, 1e-9)
-    print(f"done: {args.steps} steps in {dt:.1f}s ({tok_s:.0f} tok/s)")
+    telemetry.gauge_set("train.tokens_per_s", tok_s)
+    log.info(f"done: {args.steps} steps in {dt:.1f}s ({tok_s:.0f} tok/s)")
+    # ONE merged exit report: guard health carries the telemetry snapshot
+    # (counters, gauges, histogram percentiles) when KronScope is live.
     report = guard.health_report()
-    if report["events"] or any(
+    if telemetry.active() or report["events"] or any(
         h["degraded_calls"] or h["errors"] for h in report["ops"].values()
     ):
-        print(f"guard health: {report}")
+        log.info(f"health: {report}")
+    telemetry.shutdown()
 
 
 if __name__ == "__main__":

@@ -1,3 +1,5 @@
 """Runtime substrate: mesh/sharding helpers, HLO analysis, fault tolerance,
 the execution guard layer (``guard``: error taxonomy + degradation ladder +
-numerics policy) and its deterministic fault-injection harness (``chaos``)."""
+numerics policy), its deterministic fault-injection harness (``chaos``),
+and the KronScope telemetry spine (``telemetry``: spans, metrics, per-stage
+profiling, cost-model drift; ``events``: JSONL sink + shared logger)."""

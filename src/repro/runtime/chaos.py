@@ -42,7 +42,7 @@ import random
 import threading
 from contextlib import contextmanager
 
-from repro.runtime import guard
+from repro.runtime import guard, telemetry
 
 # site -> error type raised when the site fires
 SITE_ERRORS = {
@@ -169,6 +169,7 @@ def maybe_fail(site: str) -> None:
     for layer in list(_ACTIVE) + ([_ENV] if _ENV else []):
         for spec in layer:
             if spec.site == site and spec.should_fire():
+                telemetry.event("chaos_injected", site=site, fired=spec.fired)
                 raise SITE_ERRORS[site](
                     f"chaos-injected fault at site {site!r} "
                     f"(firing {spec.fired}/{spec.times or 'inf'})"

@@ -1,0 +1,95 @@
+"""Structured event output: the JSONL sink + the shared ``repro`` logger.
+
+This is the thin I/O half of the KronScope telemetry spine
+(``repro.runtime.telemetry``): telemetry decides WHAT to record, this module
+decides WHERE it goes.  Two destinations:
+
+* ``EventSink`` — an append-only JSONL file (one JSON object per line), the
+  ``--telemetry out.jsonl`` target of the launchers and benchmark driver.
+  Opened lazily on the first emit so configuring telemetry without ever
+  recording costs no filesystem work; every write is a single line so a
+  killed process leaves a valid prefix, never a torn file.
+
+* ``get_logger`` — the shared ``repro`` logger hierarchy.  The root
+  ``repro`` logger gets ONE stdout handler with a bare ``%(message)s``
+  format, so routing the launchers' prints through it keeps their stdout
+  byte-identical while making the stream capturable/redirectable like any
+  stdlib logger (docs/observability.md).
+"""
+from __future__ import annotations
+
+import json
+import logging
+import sys
+import threading
+
+
+class EventSink:
+    """Append-only JSONL sink: one JSON object per ``emit``, one per line."""
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        self._f = None
+        self._lock = threading.Lock()
+        self.emitted = 0
+
+    def emit(self, record: dict) -> None:
+        line = json.dumps(record, default=str, sort_keys=True)
+        with self._lock:
+            if self._f is None:
+                self._f = open(self.path, "a")
+            self._f.write(line + "\n")
+            self.emitted += 1
+
+    def flush(self) -> None:
+        with self._lock:
+            if self._f is not None:
+                self._f.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            if self._f is not None:
+                self._f.close()
+                self._f = None
+
+
+_LOGGER_LOCK = threading.Lock()
+
+
+class _StdoutHandler(logging.StreamHandler):
+    """StreamHandler that resolves ``sys.stdout`` at emit time, not at
+    construction — so the logger follows stdout redirection exactly like the
+    ``print`` calls it replaced (the byte-identical-output promise)."""
+
+    def __init__(self):
+        super().__init__(sys.stdout)
+
+    @property
+    def stream(self):
+        return sys.stdout
+
+    @stream.setter
+    def stream(self, value):  # base __init__/setStream assign; late-bound
+        pass
+
+
+def get_logger(name: str = "repro") -> logging.Logger:
+    """The shared ``repro`` logger (or a child, e.g. ``repro.fault``).
+
+    The root ``repro`` logger is configured once per process with a single
+    stdout handler and a bare message format — callers that previously
+    ``print``-ed keep identical stdout output, but operators can now raise
+    the level, add handlers, or silence the hierarchy wholesale.
+    """
+    root = logging.getLogger("repro")
+    with _LOGGER_LOCK:
+        if not root.handlers:
+            handler = _StdoutHandler()
+            handler.setFormatter(logging.Formatter("%(message)s"))
+            root.addHandler(handler)
+            root.setLevel(logging.INFO)
+            root.propagate = False
+    return logging.getLogger(name) if name else root
+
+
+__all__ = ["EventSink", "get_logger"]

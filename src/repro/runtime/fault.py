@@ -21,6 +21,9 @@ from typing import Callable
 
 import jax
 
+from . import telemetry
+from .events import get_logger
+
 
 @dataclass
 class StragglerMonitor:
@@ -61,6 +64,9 @@ class StragglerMonitor:
         if is_slow:
             self._consecutive += 1
             self.flagged_steps.append((step, dt))
+            telemetry.event(
+                "straggler", step=step, seconds=dt, mean_seconds=self._mean
+            )
             if self._consecutive >= self.patience:
                 # Re-arm BEFORE acting: the action fires once per patience
                 # window, not on every slow step after the first window
@@ -76,7 +82,12 @@ class StragglerMonitor:
                 if self.action == "callback" and self.callback:
                     self.callback(step, dt)
                 else:
-                    print(f"[straggler-monitor] {msg}")
+                    # shared ``repro`` logger: same stdout line as the old
+                    # bare print (bare-message formatter), but a handler swap
+                    # or level change now governs every subsystem at once
+                    get_logger("repro.fault").warning(
+                        f"[straggler-monitor] {msg}"
+                    )
         else:
             self._consecutive = 0
             # EWMA update only on healthy steps (stragglers don't poison it)

@@ -39,6 +39,8 @@ import threading
 import warnings
 from typing import Callable, Sequence
 
+from . import telemetry
+
 
 # ---------------------------------------------------------------------------
 # Error taxonomy
@@ -97,6 +99,7 @@ def warn_once(token, message: str) -> None:
         if token in _WARNED:
             return
         _WARNED.add(token)
+    telemetry.event("guard_warning", token=str(token), message=message)
     warnings.warn(message, GuardWarning, stacklevel=3)
 
 
@@ -155,23 +158,33 @@ def health_entries():
 
 def record_event(name: str, exc: BaseException | None = None) -> None:
     """Count a degradation event outside any ladder (plan-cache rebuilds,
-    per-round fallbacks inside shard_map bodies, ...)."""
+    per-round fallbacks inside shard_map bodies, ...).  Active telemetry
+    (``repro.runtime.telemetry``) receives the same event on its sink."""
     _EVENTS[name] = _EVENTS.get(name, 0) + 1
     if exc is not None:
         ename = f"{name}:{type(exc).__name__}"
         _EVENTS[ename] = _EVENTS.get(ename, 0) + 1
+        telemetry.event(name, error=type(exc).__name__, detail=str(exc))
+    else:
+        telemetry.event(name)
 
 
 def health_report() -> dict:
     """Snapshot of every guarded key's counters plus free-form event counts.
 
     ``{"ops": {str(key): summary_dict}, "events": {name: count}}`` — the
-    process-wide answer to "has anything degraded, and why".
+    process-wide answer to "has anything degraded, and why".  While
+    telemetry is active a ``"telemetry"`` key carries its ``snapshot()``
+    (counters, gauges, histogram percentiles) so launchers print ONE merged
+    report instead of a guard dump plus a telemetry dump.
     """
-    return {
+    report = {
         "ops": {repr(k): h.summary() for k, h in _HEALTH.items()},
         "events": dict(_EVENTS),
     }
+    if telemetry.active():
+        report["telemetry"] = telemetry.snapshot()
+    return report
 
 
 def reset_health() -> None:
@@ -217,6 +230,10 @@ def run_ladder(
         except catch as e:  # typed failures only: real bugs propagate
             h.record(e)
             last_exc = e
+            telemetry.event(
+                "rung_fallback", key=repr(key), rung=i, rung_name=name,
+                error=type(e).__name__,
+            )
             if i + 1 < len(rungs):
                 warn_once(
                     (key, i),
@@ -232,6 +249,9 @@ def run_ladder(
                 h.rung = i
                 h.pinned = True
                 h.consecutive = 0
+                telemetry.event(
+                    "rung_pinned", key=repr(key), rung=i, rung_name=name
+                )
                 warn_once(
                     (key, "pinned", i),
                     f"kron guard: {key} degraded {patience} consecutive "

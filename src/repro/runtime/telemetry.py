@@ -1,0 +1,418 @@
+"""KronScope: the process-local tracing/metrics spine (docs/observability.md).
+
+One telemetry layer for the whole Kron-Matmul execution path — plan →
+emit → execute → collectives — so every later perf PR starts from measured
+evidence instead of scattered prints.  Three pieces:
+
+* **Spans** — ``span("round", k=2)`` times a region host-side
+  (``perf_counter``) and, while telemetry is active, wraps it in
+  ``jax.named_scope`` + ``jax.profiler.TraceAnnotation`` so the region is
+  attributable in compiled HLO metadata and XLA device profiles.  Spans
+  nest; each completed span also feeds the ``span.<name>`` histogram.
+
+* **Metrics** — a registry of counters (``counter_inc``), gauges
+  (``gauge_set``) and histograms (``observe``, with p50/p95/p99 via
+  ``percentiles``), fed by the existing subsystems: plan-cache hit/miss
+  (autotune), ladder rung transitions and chaos injections (guard/chaos),
+  straggler flags (runtime.fault), per-round ``comm_elems_per_device``
+  (distributed), decode tokens/s and step latency (the launchers).
+
+* **Export** — every span and event streams to a JSONL sink
+  (``repro.runtime.events.EventSink``) and completed spans export as a
+  Chrome-trace JSON (``chrome://tracing`` / Perfetto) via
+  ``write_chrome_trace``; ``--telemetry out.jsonl --trace out.trace.json``
+  on the launchers and ``benchmarks/run.py`` wires both.
+
+Disabled (the default) the layer is inert: every instrumentation site costs
+one module-global truthiness check, NO ``named_scope``/``TraceAnnotation``
+enters traced code, and compiled HLO is bitwise-identical to a build without
+telemetry — pinned by ``tests/test_telemetry.py`` exactly like the guard
+layer's zero-overhead pin (EXPERIMENTS.md §Robustness).  Like guard health,
+activation is trace-time state: functions compiled before ``configure()``
+keep their un-annotated executables.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+from .events import EventSink
+
+# Bounded in-memory buffers: telemetry must never become the memory leak it
+# exists to find.  Oldest entries drop first; drops are counted, not silent.
+SPAN_BUFFER = 65536
+HIST_BUFFER = 8192
+
+DRIFT_THRESHOLD = 2.0  # default measured/predicted per-stage drift ratio flag
+
+
+class _Telemetry:
+    """The live telemetry state; exists only while telemetry is active."""
+
+    def __init__(self, jsonl=None, trace=None, annotate: bool = True):
+        self.t0 = time.perf_counter()
+        self.started_at = time.strftime("%Y-%m-%dT%H:%M:%S")
+        self.annotate = bool(annotate)
+        self.sink = EventSink(jsonl) if jsonl else None
+        self.trace_path = str(trace) if trace else None
+        self.lock = threading.RLock()
+        self.tls = threading.local()
+        self.counters: dict[str, int] = {}
+        self.gauges: dict[str, float] = {}
+        self.hists: dict[str, list[float]] = {}
+        self.spans: list[dict] = []
+        self.dropped_spans = 0
+        self.n_events = 0
+        self.last_profile: dict | None = None
+
+    def stack(self) -> list:
+        s = getattr(self.tls, "stack", None)
+        if s is None:
+            s = self.tls.stack = []
+        return s
+
+
+_STATE: _Telemetry | None = None
+
+
+def active() -> bool:
+    """True while telemetry is configured — the one check every site pays."""
+    return _STATE is not None
+
+
+def configure(jsonl=None, trace=None, *, annotate: bool = True) -> None:
+    """Activate telemetry for the process.
+
+    ``jsonl``: path for the JSONL event stream (None = in-memory only).
+    ``trace``: path ``shutdown()`` writes the Chrome trace to.
+    ``annotate``: wrap spans in ``jax.named_scope``/``TraceAnnotation``
+    (disable to keep compiled HLO pristine while still timing host-side).
+    Reconfiguring replaces the previous state (its sink is closed).
+    """
+    global _STATE
+    old, _STATE = _STATE, _Telemetry(jsonl, trace, annotate=annotate)
+    if old is not None and old.sink is not None:
+        old.sink.close()
+
+
+def disable() -> None:
+    """Deactivate without exporting; the sink is closed, buffers dropped."""
+    global _STATE
+    old, _STATE = _STATE, None
+    if old is not None and old.sink is not None:
+        old.sink.close()
+
+
+def reset() -> None:
+    """Tests: drop all telemetry state and deactivate."""
+    disable()
+
+
+def shutdown() -> dict | None:
+    """Finalize: write the Chrome trace (if configured), flush and close the
+    JSONL sink, deactivate.  Returns the final ``snapshot()`` (None if
+    telemetry was not active) — the launchers print it as their one merged
+    exit report through ``guard.health_report()``."""
+    st = _STATE
+    if st is None:
+        return None
+    snap = snapshot()
+    if st.trace_path:
+        write_chrome_trace(st.trace_path)
+    disable()
+    return snap
+
+
+# ---------------------------------------------------------------------------
+# Spans
+# ---------------------------------------------------------------------------
+
+
+class _NullSpan:
+    """Shared no-op span: the entire off-path cost of a ``span()`` site."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    __slots__ = ("state", "name", "attrs", "depth", "t_start", "_ns", "_ta")
+
+    def __init__(self, state: _Telemetry, name: str, attrs: dict):
+        self.state = state
+        self.name = name
+        self.attrs = attrs
+
+    def __enter__(self):
+        st = self.state
+        stack = st.stack()
+        self.depth = len(stack)
+        stack.append(self.name)
+        if st.annotate:
+            import jax
+
+            self._ns = jax.named_scope(f"kronscope.{self.name}")
+            self._ns.__enter__()
+            self._ta = jax.profiler.TraceAnnotation(f"kronscope.{self.name}")
+            self._ta.__enter__()
+        else:
+            self._ns = self._ta = None
+        self.t_start = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        dur = time.perf_counter() - self.t_start
+        st = self.state
+        if self._ta is not None:
+            self._ta.__exit__(*exc)
+            self._ns.__exit__(*exc)
+        stack = st.stack()
+        if stack and stack[-1] == self.name:
+            stack.pop()
+        rec = {
+            "name": self.name,
+            "ts": self.t_start - st.t0,
+            "dur": dur,
+            "depth": self.depth,
+            "tid": threading.get_ident(),
+        }
+        if self.attrs:
+            rec["attrs"] = self.attrs
+        with st.lock:
+            st.spans.append(rec)
+            if len(st.spans) > SPAN_BUFFER:
+                del st.spans[0]
+                st.dropped_spans += 1
+            _observe_locked(st, f"span.{self.name}", dur)
+        if st.sink is not None:
+            st.sink.emit({"kind": "span", **rec})
+        return False
+
+
+def span(name: str, **attrs):
+    """Context manager timing a region; a shared no-op when inactive.
+
+    Active: records host wall time, nests (depth tracked per thread), wraps
+    the region in ``jax.named_scope`` + ``jax.profiler.TraceAnnotation``
+    (prefix ``kronscope.``), streams to the JSONL sink, and feeds the
+    ``span.<name>`` histogram.
+    """
+    st = _STATE
+    if st is None:
+        return _NULL_SPAN
+    return _Span(st, name, attrs)
+
+
+# ---------------------------------------------------------------------------
+# Events
+# ---------------------------------------------------------------------------
+
+
+def event(name: str, **fields) -> None:
+    """Record a structured event: counted (``event.<name>``) and streamed to
+    the JSONL sink.  One truthiness check when inactive."""
+    st = _STATE
+    if st is None:
+        return
+    with st.lock:
+        st.n_events += 1
+        key = f"event.{name}"
+        st.counters[key] = st.counters.get(key, 0) + 1
+    if st.sink is not None:
+        st.sink.emit(
+            {"kind": "event", "name": name,
+             "ts": time.perf_counter() - st.t0, **fields}
+        )
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+
+def counter_inc(name: str, n: int = 1) -> None:
+    """Add ``n`` to counter ``name`` (no-op while inactive)."""
+    st = _STATE
+    if st is None:
+        return
+    with st.lock:
+        st.counters[name] = st.counters.get(name, 0) + n
+
+
+def gauge_set(name: str, value) -> None:
+    """Set gauge ``name`` to ``value`` (last write wins; no-op inactive)."""
+    st = _STATE
+    if st is None:
+        return
+    with st.lock:
+        st.gauges[name] = value
+
+
+def observe(name: str, value: float) -> None:
+    """Record one sample into histogram ``name`` (no-op while inactive)."""
+    st = _STATE
+    if st is None:
+        return
+    with st.lock:
+        _observe_locked(st, name, float(value))
+
+
+def _observe_locked(st: _Telemetry, name: str, value: float) -> None:
+    h = st.hists.get(name)
+    if h is None:
+        h = st.hists[name] = []
+    h.append(value)
+    if len(h) > HIST_BUFFER:
+        del h[0]
+
+
+def _pcts(values: list[float]) -> dict:
+    v = sorted(values)
+    n = len(v)
+
+    def at(q: float) -> float:
+        return v[min(n - 1, int(q * (n - 1)))]
+
+    return {
+        "count": n,
+        "min": v[0],
+        "max": v[-1],
+        "mean": sum(v) / n,
+        "p50": at(0.50),
+        "p95": at(0.95),
+        "p99": at(0.99),
+    }
+
+
+def percentiles(name: str) -> dict | None:
+    """``{count, min, max, mean, p50, p95, p99}`` for histogram ``name``
+    (index-based percentiles on the retained samples), or None."""
+    st = _STATE
+    if st is None:
+        return None
+    with st.lock:
+        h = st.hists.get(name)
+        return _pcts(h) if h else None
+
+
+def snapshot() -> dict:
+    """The full registry as plain data: counters, gauges, histogram
+    summaries, span/event totals, and the last ``KronOp.profile`` stamp.
+    ``guard.health_report()`` embeds this so launchers print ONE report."""
+    st = _STATE
+    if st is None:
+        return {}
+    with st.lock:
+        return {
+            "started_at": st.started_at,
+            "counters": dict(st.counters),
+            "gauges": dict(st.gauges),
+            "histograms": {k: _pcts(v) for k, v in st.hists.items() if v},
+            "spans": len(st.spans) + st.dropped_spans,
+            "events": st.n_events,
+            "last_profile": st.last_profile,
+        }
+
+
+def summary_line() -> str:
+    """One-line state summary (``KronOp.describe()`` appends this while
+    telemetry is active)."""
+    st = _STATE
+    if st is None:
+        return "kronscope[off]"
+    with st.lock:
+        prof = st.last_profile["at"] if st.last_profile else "never"
+        return (
+            f"kronscope[spans={len(st.spans) + st.dropped_spans} "
+            f"events={st.n_events} last_profile={prof}]"
+        )
+
+
+def mark_profile(report: dict) -> None:
+    """Stamp the latest ``KronOp.profile`` run (timestamp + headline fields)
+    into the registry and emit a ``profile`` event."""
+    st = _STATE
+    if st is None:
+        return
+    stamp = {
+        "at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "signature": report.get("signature"),
+        "measured_s": report.get("measured_s"),
+        "stages": len(report.get("stages", ())),
+        "drift_flagged": report.get("drift_flagged"),
+    }
+    with st.lock:
+        st.last_profile = stamp
+    event("profile", **stamp)
+
+
+# ---------------------------------------------------------------------------
+# Chrome-trace (Perfetto) export
+# ---------------------------------------------------------------------------
+
+
+def write_chrome_trace(path: str | None = None) -> str | None:
+    """Export completed spans as Chrome trace-event JSON (``chrome://tracing``
+    / Perfetto: ``{"traceEvents": [{"ph": "X", ...}]}``, timestamps in µs).
+    ``path=None`` uses the ``trace=`` path from ``configure``.  Returns the
+    written path (None if inactive or no path is known)."""
+    st = _STATE
+    if st is None:
+        return None
+    path = str(path) if path else st.trace_path
+    if not path:
+        return None
+    pid = os.getpid()
+    with st.lock:
+        events = [
+            {
+                "name": s["name"],
+                "ph": "X",
+                "ts": s["ts"] * 1e6,
+                "dur": s["dur"] * 1e6,
+                "pid": pid,
+                "tid": s["tid"],
+                "args": {**s.get("attrs", {}), "depth": s["depth"]},
+            }
+            for s in st.spans
+        ]
+    payload = {
+        "traceEvents": events,
+        "displayTimeUnit": "ms",
+        "otherData": {"producer": "kronscope", "started_at": st.started_at},
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    return path
+
+
+__all__ = [
+    "active",
+    "configure",
+    "disable",
+    "reset",
+    "shutdown",
+    "span",
+    "event",
+    "counter_inc",
+    "gauge_set",
+    "observe",
+    "percentiles",
+    "snapshot",
+    "summary_line",
+    "mark_profile",
+    "write_chrome_trace",
+    "DRIFT_THRESHOLD",
+    "SPAN_BUFFER",
+    "HIST_BUFFER",
+]

@@ -38,6 +38,7 @@ LOCKED = [
     "repro.kernels.emit",
     "repro.runtime.guard",
     "repro.runtime.chaos",
+    "repro.runtime.telemetry",
 ]
 
 _IDENT = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
