@@ -234,38 +234,71 @@ def attn_decode(
     p: dict,
     x: jax.Array,          # (B, 1, D)
     cache: KVCache,
-    pos: jax.Array,        # scalar int32: index of the incoming token
+    pos: jax.Array,        # int32 scalar, or (B,) for per-slot positions
 ) -> tuple[jax.Array, KVCache]:
+    """One incremental token against the KV cache.
+
+    Two position modes.  Scalar ``pos`` (the one-shot path): every row is
+    at the same position and ``cache.pos`` is shared, shape (L,).  Vector
+    ``pos`` of shape (B,) (the continuous-batching path, docs/serving.md):
+    each decode slot runs its OWN clock — requests admitted mid-flight sit
+    at different positions — and ``cache.pos`` must be per-row, (B, L)
+    (see ``model.cache_to_slots``).  Positions are request-relative in
+    that mode, so RoPE numerics match a batch-of-one run exactly.
+    """
     b = x.shape[0]
     l = cache.k.shape[1]
     pos = jnp.asarray(pos, jnp.int32)
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    per_slot = pos.ndim == 1
+    positions = pos[:, None] if per_slot else jnp.full((b, 1), pos, jnp.int32)
     q, k_new, v_new = _project_qkv(cfg, p, x, positions)
     slot = (pos % l).astype(jnp.int32)  # ring buffer (== pos w/o SWA)
     zero = jnp.int32(0)
     quant = isinstance(cache, QuantKVCache)
+
+    if per_slot:
+        rows = jnp.arange(b)
+
+        def scatter(buf, new):
+            # row i writes its own slot: (B, L, ...)[i, slot[i]] = new[i, 0]
+            return buf.at[rows, slot].set(new[:, 0].astype(buf.dtype))
+
+    else:
+
+        def scatter(buf, new):
+            return jax.lax.dynamic_update_slice(
+                buf, new.astype(buf.dtype), (zero, slot) + (zero,) * (buf.ndim - 2)
+            )
+
     if quant:
         kq, ks = _quantize_kv(k_new)
         vq, vs = _quantize_kv(v_new)
-        kk = jax.lax.dynamic_update_slice(cache.k, kq, (zero, slot, zero, zero))
-        vv = jax.lax.dynamic_update_slice(cache.v, vq, (zero, slot, zero, zero))
-        kss = jax.lax.dynamic_update_slice(
-            cache.k_scale, ks, (zero, slot, zero, zero))
-        vss = jax.lax.dynamic_update_slice(
-            cache.v_scale, vs, (zero, slot, zero, zero))
+        kk = scatter(cache.k, kq)
+        vv = scatter(cache.v, vq)
+        kss = scatter(cache.k_scale, ks)
+        vss = scatter(cache.v_scale, vs)
         k = _dequantize_kv(kk, kss, x.dtype)
         v = _dequantize_kv(vv, vss, x.dtype)
     else:
-        k = jax.lax.dynamic_update_slice(cache.k, k_new, (zero, slot, zero, zero))
-        v = jax.lax.dynamic_update_slice(cache.v, v_new, (zero, slot, zero, zero))
-    cpos = jax.lax.dynamic_update_slice(
-        cache.pos, jnp.full((1,), pos, jnp.int32), (slot,)
-    )
+        kk = vv = kss = vss = None
+        k = scatter(cache.k, k_new)
+        v = scatter(cache.v, v_new)
+    if per_slot:
+        cpos = cache.pos.at[rows, slot].set(pos)        # (B, L)
+        valid = (cpos >= 0) & (cpos <= pos[:, None])
+        if cfg.sliding_window:
+            valid &= cpos > pos[:, None] - cfg.sliding_window
+        vmask = valid[:, None, None, None, :]
+    else:
+        cpos = jax.lax.dynamic_update_slice(
+            cache.pos, jnp.full((1,), pos, jnp.int32), (slot,)
+        )
+        valid = (cpos >= 0) & (cpos <= pos)
+        if cfg.sliding_window:
+            valid &= cpos > pos - cfg.sliding_window
+        vmask = valid[None, None, None, None, :]
     scores = _grouped_scores(q, k)  # (B,Hkv,G,1,L)
-    valid = (cpos >= 0) & (cpos <= pos)
-    if cfg.sliding_window:
-        valid &= cpos > pos - cfg.sliding_window
-    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    scores = jnp.where(vmask, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = _grouped_out(probs, v).astype(x.dtype)  # (B,1,H,hd)
     y = out.reshape(b, 1, -1) @ p["wo"]

@@ -230,6 +230,97 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     return {"prelude": prelude, "stack": stack}
 
 
+# ---------------------------------------------------------------------------
+# Slot-form caches (continuous batching, docs/serving.md)
+#
+# ``prefill``/``init_cache`` build caches whose attention ``pos`` leaf is
+# SHARED across the batch, shape (L,) — every row at the same position.
+# Continuous batching mixes requests at different positions in one decode
+# batch, so the serving engine converts to "slot form": pos per-row, (B, L),
+# after which EVERY cache leaf carries the batch on one uniform axis
+# (prelude: axis 0; scanned stack: axis 1, behind the n_periods axis) and
+# whole requests can be moved between caches with a gather + scatter.
+# ---------------------------------------------------------------------------
+
+
+def _is_cache(x) -> bool:
+    return isinstance(x, (attn.KVCache, attn.QuantKVCache))
+
+
+def cache_to_slots(cache: dict, true_lens: jax.Array | None = None) -> dict:
+    """Broadcast shared attention ``pos`` leaves to per-row (B, L).
+
+    ``true_lens`` (B,) marks each row's real prompt length: a bucketed
+    prefill pads every prompt to the bucket, and the pad tokens' K/V land
+    in cache entries with position >= true_len — those entries are masked
+    to pos = -1 (empty) so later decode steps never attend to pad keys.
+    """
+
+    def one(c, stacked: bool):
+        if not _is_cache(c):
+            return c  # MambaCache: batch-leading already, nothing shared
+        pos = c.pos
+        if stacked:  # (n_periods, L) -> (n_periods, B, L)
+            b, l = c.k.shape[1], c.k.shape[2]
+            if pos.ndim == 2:
+                pos = jnp.broadcast_to(pos[:, None, :], (pos.shape[0], b, l))
+        else:  # (L,) -> (B, L)
+            b, l = c.k.shape[0], c.k.shape[1]
+            if pos.ndim == 1:
+                pos = jnp.broadcast_to(pos[None, :], (b, l))
+        if true_lens is not None:
+            tl = jnp.asarray(true_lens, jnp.int32)  # (B,)
+            keep = pos < (tl[None, :, None] if stacked else tl[:, None])
+            pos = jnp.where(keep, pos, -1)
+        return c._replace(pos=pos.astype(jnp.int32))
+
+    return {
+        "prelude": [one(c, False) for c in cache["prelude"]],
+        "stack": {
+            k: jax.tree.map(lambda c: one(c, True), v, is_leaf=_is_cache)
+            for k, v in cache["stack"].items()
+        },
+    }
+
+
+def cache_take(cache: dict, row) -> dict:
+    """Extract one request's cache rows as a batch-1 slot-form cache.
+    Requires slot form (``cache_to_slots``); ``row`` may be traced."""
+    row = jnp.asarray(row, jnp.int32)
+    return {
+        "prelude": jax.tree.map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, row, 1, axis=0),
+            cache["prelude"],
+        ),
+        "stack": jax.tree.map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, row, 1, axis=1),
+            cache["stack"],
+        ),
+    }
+
+
+def cache_put(dst: dict, src: dict, slot) -> dict:
+    """Write a batch-1 slot-form cache (``cache_take`` of a prefill) into
+    decode slot ``slot`` of ``dst`` — the admission primitive of the
+    continuous-batching engine.  Cache lengths L must match (both sides
+    built with the same ``max_len``)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    return {
+        "prelude": jax.tree.map(
+            lambda d, s: jax.lax.dynamic_update_slice_in_dim(
+                d, s.astype(d.dtype), slot, axis=0
+            ),
+            dst["prelude"], src["prelude"],
+        ),
+        "stack": jax.tree.map(
+            lambda d, s: jax.lax.dynamic_update_slice_in_dim(
+                d, s.astype(d.dtype), slot, axis=1
+            ),
+            dst["stack"], src["stack"],
+        ),
+    }
+
+
 def prefill(
     cfg: ModelConfig,
     params: dict,
@@ -276,9 +367,13 @@ def decode_step(
     params: dict,
     cache: dict,
     tokens: jax.Array,   # (B, 1)
-    pos: jax.Array,      # scalar int32 — position of this token
+    pos: jax.Array,      # scalar int32, or (B,) per-slot (slot-form cache)
 ):
-    """One incremental token.  Returns (logits (B,1,V), new_cache)."""
+    """One incremental token.  Returns (logits (B,1,V), new_cache).
+
+    Scalar ``pos``: all rows at the same position (one-shot serving).
+    Vector ``pos`` (B,): each decode slot on its own clock — requires the
+    cache in slot form (``cache_to_slots``); see ``attn.attn_decode``."""
     x = _embed(cfg, params, tokens, None)
     plan = cfg.layer_plan()
 
@@ -305,4 +400,13 @@ def decode_step(
     return _head(cfg, params, x), {"prelude": new_prelude, "stack": new_stack}
 
 
-__all__ = ["init_params", "forward", "prefill", "decode_step", "init_cache"]
+__all__ = [
+    "init_params",
+    "forward",
+    "prefill",
+    "decode_step",
+    "init_cache",
+    "cache_to_slots",
+    "cache_take",
+    "cache_put",
+]

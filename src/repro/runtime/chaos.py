@@ -51,6 +51,10 @@ SITE_ERRORS = {
     "per_factor": guard.VmemOverflowError,
     "round_chain": guard.VmemOverflowError,
     "collective": guard.CollectiveError,
+    # Serving: fires inside the engine's bucketed prefill, before a group
+    # is admitted to decode slots — the guard ladder must degrade to a
+    # smaller prefill chunk, never drop the request (docs/serving.md).
+    "serve_admit": guard.VmemOverflowError,
     "plan_cache_load": guard.PlanCacheError,
     "plan_cache_save": guard.PlanCacheError,
 }

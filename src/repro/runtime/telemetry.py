@@ -213,6 +213,38 @@ def span(name: str, **attrs):
     return _Span(st, name, attrs)
 
 
+def record_span(name: str, start: float, dur: float, **attrs) -> None:
+    """Inject a completed span directly, bypassing the nesting stack.
+
+    ``span()`` assumes strictly nested regions (one per-thread stack) —
+    per-REQUEST lifetimes in the serving engine overlap arbitrarily (a
+    request admitted mid-decode outlives requests that started before it),
+    so the engine times them itself and injects the finished interval here.
+    ``start`` is an absolute ``time.perf_counter()`` stamp; the span lands
+    in the same buffer/sink/histogram pipeline as ``span()`` (depth 0).
+    No-op while inactive."""
+    st = _STATE
+    if st is None:
+        return
+    rec = {
+        "name": name,
+        "ts": float(start) - st.t0,
+        "dur": float(dur),
+        "depth": 0,
+        "tid": threading.get_ident(),
+    }
+    if attrs:
+        rec["attrs"] = attrs
+    with st.lock:
+        st.spans.append(rec)
+        if len(st.spans) > SPAN_BUFFER:
+            del st.spans[0]
+            st.dropped_spans += 1
+        _observe_locked(st, f"span.{name}", float(dur))
+    if st.sink is not None:
+        st.sink.emit({"kind": "span", **rec})
+
+
 # ---------------------------------------------------------------------------
 # Events
 # ---------------------------------------------------------------------------
@@ -403,6 +435,7 @@ __all__ = [
     "reset",
     "shutdown",
     "span",
+    "record_span",
     "event",
     "counter_inc",
     "gauge_set",

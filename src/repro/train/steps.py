@@ -10,7 +10,7 @@ memory lever that lets 100B+ configs fit the 256-chip dry-run mesh.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +29,8 @@ class TrainState(NamedTuple):
 
 def prebuild_kron_ops(
     cfg: ModelConfig, *, batch: int | None = None, seq_len: int | None = None,
-    mesh=None,
+    mesh=None, prefill_shapes: Sequence[tuple[int, int]] = (),
+    decode_batch: int | None = None,
 ) -> tuple:
     """Construct the ``KronOp`` handles behind every Kron-compressed
     projection in ``cfg`` before the first jitted step.
@@ -44,6 +45,12 @@ def prebuild_kron_ops(
     ``mesh``: also pre-validate the distributed ops a ``kron_distributed``
     scope would route to (shapes the mesh cannot host are skipped — the
     scope falls back to the local path for those).
+
+    ``prefill_shapes``: extra ``(batch, seq_len)`` pairs to pre-resolve —
+    the continuous-batching engine prefills each padding bucket at its own
+    shape, and a shape missing here re-plans at trace time mid-serve (the
+    PR-8 fix; tests/test_serve_engine.py pins zero steady-state misses).
+    ``decode_batch``: also resolve the decode-step shape (rows = slots*1).
     """
     if not getattr(cfg, "kron_ffn", False):
         return ()
@@ -55,16 +62,22 @@ def prebuild_kron_ops(
     )
     up = KronLinearSpec.balanced(cfg.d_model, cfg.d_ff, cfg.kron_factors)
     down = KronLinearSpec.balanced(cfg.d_ff, cfg.d_model, cfg.kron_factors)
+    shapes: list[tuple[int, int]] = []
+    if batch is not None and seq_len is not None:
+        shapes.append((int(batch), int(seq_len)))
+    shapes.extend((int(b), int(s)) for b, s in prefill_shapes)
+    if decode_batch is not None:
+        shapes.append((int(decode_batch), 1))
     ops = []
     for spec in (up, down):
-        if batch is not None and seq_len is not None:
-            # The serving shape: (B, T, d) collapses to B*T rows — resolve
+        for b, s in dict.fromkeys(shapes):
+            # A serving shape: (B, T, d) collapses to B*T rows — resolve
             # that plan now (m is rows per sample for a batched op).
             ops.append(kron_op_for(
-                spec.ps, spec.qs, m=seq_len, batch=batch,
+                spec.ps, spec.qs, m=s, batch=b,
                 shared_factors=True, dtype_bytes=dtype_bytes,
             ))
-        else:
+        if not shapes:
             ops.append(kron_op_for(spec.ps, spec.qs))
         if mesh is not None:
             try:

@@ -178,3 +178,95 @@ def test_program_transpose_is_vjp_pallas_interpret(case):
     (want,) = vjp(dy)
     got = emit.emit(emit.transpose(prog), backend="pallas")(dy, factors)
     np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching scheduler invariants (launch/scheduler.py — pure,
+# device-free; see tests/test_scheduler.py for the example-based suite)
+# ---------------------------------------------------------------------------
+
+from repro.launch import scheduler as S  # noqa: E402
+
+
+@st.composite
+def sched_configs(draw):
+    n_buckets = draw(st.integers(1, 3))
+    base = draw(st.sampled_from([4, 8, 16]))
+    buckets = tuple(base * (2 ** i) for i in range(n_buckets))
+    return S.SchedulerConfig(
+        buckets=buckets,
+        max_slots=draw(st.integers(1, 6)),
+        max_prefill=draw(st.integers(1, 4)),
+        max_wait=draw(st.integers(0, 6)),
+    )
+
+
+@st.composite
+def arrival_traces(draw, cfg=None):
+    if cfg is None:
+        cfg = draw(sched_configs())
+    n = draw(st.integers(1, 20))
+    reqs = []
+    t = 0
+    for rid in range(n):
+        t += draw(st.integers(0, 3))
+        # some prompts deliberately overflow the largest bucket (rejects)
+        prompt_len = draw(st.integers(1, max(cfg.buckets) + 4))
+        reqs.append(S.Request(
+            rid=rid,
+            prompt_len=prompt_len,
+            max_new=draw(st.integers(1, 8)),
+            arrival=t,
+        ))
+    return cfg, tuple(reqs)
+
+
+@given(arrival_traces(), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_scheduler_conservation(case, seed):
+    """For ANY arrival trace: after every step each request is in exactly
+    one of queued/prefilling/decoding/finished/rejected (S.audit raises on
+    double-occupancy), nothing is lost, and the run terminates."""
+    cfg, reqs = case
+    res = S.simulate(cfg, reqs, seed=seed, check=True)  # audits every step
+    assert len(res.metrics) == len(reqs)
+    for rid, m in res.metrics.items():
+        assert "finish_step" in m, f"rid {rid} lost (never finished/rejected)"
+
+
+@given(arrival_traces(), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_scheduler_no_token_before_prefill(case, seed):
+    """No decode action may include a request before its prefill launched,
+    and the first token never precedes arrival."""
+    cfg, reqs = case
+    res = S.simulate(cfg, reqs, seed=seed)
+    prefilled_at: dict[int, int] = {}
+    for t, act in res.trace:
+        if act[0] == "prefill":
+            for rid in act[2]:
+                assert rid not in prefilled_at
+                prefilled_at[rid] = t
+        elif act[0] == "decode":
+            for rid in act[1]:
+                assert rid in prefilled_at and prefilled_at[rid] < t, (
+                    f"rid {rid} decoded at step {t} before its prefill"
+                )
+    for rid, m in res.metrics.items():
+        if "first_token_step" in m:
+            assert m["first_token_step"] >= m["arrival_step"]
+
+
+@given(arrival_traces(), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_scheduler_output_independent_of_cobatching(case, seed):
+    """Per-request output is independent of what it was co-batched with:
+    the same trace served with max_slots=1/max_prefill=1 (every request
+    effectively batch-of-one) yields identical per-request tokens."""
+    import dataclasses as dc
+
+    cfg, reqs = case
+    packed = S.simulate(cfg, reqs, seed=seed)
+    solo_cfg = dc.replace(cfg, max_slots=1, max_prefill=1)
+    solo = S.simulate(solo_cfg, reqs, seed=seed)
+    assert packed.tokens == solo.tokens

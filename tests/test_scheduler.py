@@ -1,0 +1,302 @@
+"""Deterministic simulation tests of the pure continuous-batching scheduler.
+
+Everything here runs device-free: ``repro.launch.scheduler`` imports no jax,
+and these tests import none either — the module IS importable and testable
+on a machine with no accelerator and no jax install.  The contracts pinned
+(docs/serving.md):
+
+  * bucket coalescing picks the smallest admissible bucket;
+  * no request starves beyond the bounded wait (``max_wait``);
+  * slots recycle on EOS and on ``max_new``;
+  * a prefill never preempts a decode batch mid-step (one action per step);
+  * seeded end-to-end replay is bit-identical (same seed => same trace).
+"""
+import dataclasses
+import sys
+
+import pytest
+
+from repro.launch.scheduler import (
+    Request,
+    SchedulerConfig,
+    SchedulerState,
+    audit,
+    new_state,
+    poisson_trace,
+    sim_token,
+    simulate,
+    step,
+)
+
+CFG = SchedulerConfig(buckets=(16, 32, 64), max_slots=4, max_prefill=2,
+                      max_wait=6)
+
+
+def drain(state, events=()):
+    """step() once with events, return (state, actions)."""
+    return step(state, list(events))
+
+
+def test_module_is_jax_free():
+    # The whole point of the pure core: simulation tests need no device.
+    mod = sys.modules["repro.launch.scheduler"]
+    src = open(mod.__file__).read()
+    assert "import jax" not in src
+    assert "jax" not in {m.split(".")[0] for m in sys.modules
+                         if sys.modules[m] is mod}
+
+
+# ---------------------------------------------------------------------------
+# Bucket policy
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_for_picks_smallest_admissible():
+    cfg = SchedulerConfig(buckets=(16, 32, 64))
+    assert cfg.bucket_for(1) == 16
+    assert cfg.bucket_for(16) == 16
+    assert cfg.bucket_for(17) == 32
+    assert cfg.bucket_for(64) == 64
+    assert cfg.bucket_for(65) is None
+
+
+def test_overlong_prompt_rejected_not_queued():
+    s = new_state(CFG)
+    s, acts = drain(s, [("arrive", Request(0, prompt_len=999, max_new=4))])
+    assert ("reject", 0, "prompt_too_long") in acts
+    assert audit(s)[0] == "rejected"
+
+
+def test_prefill_pads_to_smallest_bucket_of_group():
+    s = new_state(CFG)
+    reqs = [Request(0, 17, 4), Request(1, 30, 4)]
+    s, acts = drain(s, [("arrive", r) for r in reqs])
+    pre = [a for a in acts if a[0] == "prefill"]
+    assert pre == [("prefill", 32, (0, 1))]
+
+
+def test_mixed_buckets_are_not_coalesced_together():
+    # 4-token and 30-token prompts must go to separate prefill launches
+    # (bucket 16 vs bucket 32) — padding the short one to 32 would waste
+    # compute AND hit an unplanned shape.
+    s = new_state(CFG)
+    s, acts = drain(s, [("arrive", Request(0, 4, 8)),
+                        ("arrive", Request(1, 30, 8))])
+    pre = [a for a in acts if a[0] == "prefill"]
+    assert len(pre) == 1 and len(pre[0][2]) == 1
+    # The other bucket's singleton group coalesce-waits (decode is now
+    # busy) but must launch within the starvation bound — as its own
+    # prefill, never merged into the first bucket's shape.
+    pre2 = []
+    for _ in range(CFG.max_wait + 2):
+        s, acts = drain(s)
+        pre2 = [a for a in acts if a[0] == "prefill"]
+        if pre2:
+            break
+    assert len(pre2) == 1
+    assert {pre[0][1], pre2[0][1]} == {16, 32}
+
+
+def test_invalid_config_rejected():
+    with pytest.raises(ValueError):
+        SchedulerConfig(buckets=(32, 16))
+    with pytest.raises(ValueError):
+        SchedulerConfig(buckets=())
+    with pytest.raises(ValueError):
+        SchedulerConfig(max_slots=0)
+
+
+# ---------------------------------------------------------------------------
+# Coalescing vs starvation
+# ---------------------------------------------------------------------------
+
+
+def test_waits_to_coalesce_while_decode_busy():
+    # One request decoding, one queued: group of 1 < min(max_prefill, free)
+    # and the engine is busy, so the scheduler holds the prefill to coalesce.
+    s = new_state(CFG)
+    s, _ = drain(s, [("arrive", Request(0, 4, 8))])   # prefill fires (idle)
+    s, _ = drain(s)                                   # admit -> decoding
+    s, acts = drain(s, [("arrive", Request(1, 4, 8))])
+    assert [a[0] for a in acts] == ["decode"]
+    assert audit(s)[1] == "queued"
+
+
+def test_bounded_starvation_wait():
+    # A lone queued request must be scheduled within max_wait steps even
+    # though its group never fills, and even while decode stays busy.
+    cfg = dataclasses.replace(CFG, max_wait=3)
+    s = new_state(cfg)
+    s, _ = drain(s, [("arrive", Request(0, 4, 50))])
+    s, _ = drain(s)
+    arrive_t = s.step_idx
+    s, acts = drain(s, [("arrive", Request(1, 4, 50))])
+    waited = 0
+    while not any(a[0] == "prefill" and 1 in a[2] for a in acts):
+        s, acts = drain(s)
+        waited = s.step_idx - arrive_t
+        assert waited <= cfg.max_wait + 1, "request starved past max_wait"
+    assert waited >= cfg.max_wait - 1  # it did coalesce-wait, then gave up
+
+
+def test_idle_engine_prefills_immediately():
+    # Nothing decoding: waiting to coalesce would only add latency.
+    s = new_state(CFG)
+    s, acts = drain(s, [("arrive", Request(0, 4, 8))])
+    assert any(a[0] == "prefill" for a in acts)
+
+
+# ---------------------------------------------------------------------------
+# Slot recycling
+# ---------------------------------------------------------------------------
+
+
+def _admit_n(s, n, max_new=50, start_rid=0):
+    """Drive n requests into decode slots; returns state."""
+    events = [("arrive", Request(start_rid + k, 4, max_new))
+              for k in range(n)]
+    s, _ = drain(s, events)
+    for _ in range(n + s.cfg.max_wait + 2):
+        if sum(x is not None for x in s.slots) == n:
+            break
+        s, _ = drain(s)
+    return s
+
+
+def test_slot_recycles_on_eos():
+    s = _admit_n(new_state(CFG), 2)
+    occupied = {x.rid for x in s.slots if x is not None}
+    assert occupied == {0, 1}
+    s, acts = drain(s, [("eos", 0)])
+    assert ("finish", 0, "eos") in acts
+    assert audit(s)[0] == "finished"
+    # The freed slot is immediately reusable: a new arrival + forced
+    # schedule lands in a slot while rid 1 keeps decoding.
+    s, _ = drain(s, [("arrive", Request(7, 4, 50))])
+    for _ in range(CFG.max_wait + 2):
+        s, _ = drain(s)
+        if any(x is not None and x.rid == 7 for x in s.slots):
+            break
+    assert {x.rid for x in s.slots if x is not None} == {1, 7}
+
+
+def test_slot_recycles_on_max_new():
+    s = new_state(CFG)
+    s, _ = drain(s, [("arrive", Request(0, 4, 2))])  # prefill = token 1
+    s, acts = drain(s)  # admit; freshly admitted slot decodes same step
+    assert ("admit", 0, 0) in acts
+    assert ("decode", (0,)) in acts                  # token 2 == max_new
+    assert ("finish", 0, "max_new") in acts
+    assert all(x is None for x in s.slots)
+
+
+def test_max_new_one_finishes_at_admission():
+    s = new_state(CFG)
+    s, _ = drain(s, [("arrive", Request(0, 4, 1))])
+    s, acts = drain(s)
+    assert ("admit", 0, 0) in acts
+    assert ("finish", 0, "max_new") in acts
+    assert all(x is None for x in s.slots)
+
+
+def test_stale_eos_after_max_new_is_ignored():
+    s = new_state(CFG)
+    s, _ = drain(s, [("arrive", Request(0, 4, 2))])
+    s, _ = drain(s)
+    s, _ = drain(s)  # max_new finish
+    s, acts = drain(s, [("eos", 0)])  # late EOS for a finished request
+    assert not any(a[0] == "finish" for a in acts)
+    assert audit(s)[0] == "finished"
+
+
+# ---------------------------------------------------------------------------
+# Prefill/decode separation
+# ---------------------------------------------------------------------------
+
+
+def test_one_launch_per_step_prefill_xor_decode():
+    # Under sustained load, every step emits at most one prefill OR one
+    # decode — never both (a prefill can't preempt a decode mid-step).
+    cfg = SchedulerConfig(buckets=(16,), max_slots=2, max_prefill=1,
+                          max_wait=0)
+    reqs = [Request(i, 4, 6, arrival=i // 2) for i in range(10)]
+    res = simulate(cfg, reqs, seed=3)
+    by_step = {}
+    for t, a in res.trace:
+        if a[0] in ("prefill", "decode"):
+            by_step.setdefault(t, []).append(a[0])
+    assert by_step, "no launches recorded"
+    for t, kinds in by_step.items():
+        assert len(kinds) == 1, f"step {t} launched {kinds}"
+
+
+def test_admission_joins_inflight_decode_batch():
+    # Request 1 arrives while 0 is mid-decode and must join 0's batch
+    # (continuous batching) rather than wait for 0 to drain.
+    cfg = dataclasses.replace(CFG, max_wait=1)
+    s = _admit_n(new_state(cfg), 1)
+    s, _ = drain(s, [("arrive", Request(1, 4, 50))])
+    seen_joint = False
+    for _ in range(6):
+        s, acts = drain(s)
+        if ("decode", (0, 1)) in acts or ("decode", (1, 0)) in acts:
+            seen_joint = True
+            break
+    assert seen_joint, "new request never joined the in-flight decode batch"
+    assert audit(s)[0] == "decoding" and audit(s)[1] == "decoding"
+
+
+# ---------------------------------------------------------------------------
+# Seeded end-to-end replay
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_trace_deterministic():
+    a = poisson_trace(seed=11, rate=0.5, n=20)
+    b = poisson_trace(seed=11, rate=0.5, n=20)
+    assert a == b
+    c = poisson_trace(seed=12, rate=0.5, n=20)
+    assert a != c
+    assert all(x.arrival <= y.arrival for x, y in zip(a, a[1:]))
+
+
+def test_seeded_replay_bit_identical():
+    cfg = SchedulerConfig(buckets=(16, 32, 64), max_slots=4, max_prefill=2,
+                          max_wait=4)
+    reqs = poisson_trace(seed=42, rate=0.7, n=30, prompt_lens=(2, 60),
+                         max_new=(1, 10))
+    r1 = simulate(cfg, reqs, seed=42)
+    r2 = simulate(cfg, reqs, seed=42)
+    assert r1.trace == r2.trace          # the replay artifact, bit-for-bit
+    assert r1.tokens == r2.tokens
+    assert r1.metrics == r2.metrics
+    assert r1.queue_depth == r2.queue_depth
+    # And a different seed genuinely perturbs the run (gen lengths change).
+    r3 = simulate(cfg, reqs, seed=43)
+    assert r1.trace != r3.trace
+
+
+def test_simulation_completes_all_requests():
+    reqs = poisson_trace(seed=5, rate=1.5, n=40, prompt_lens=(1, 64),
+                         max_new=(1, 12))
+    res = simulate(CFG, reqs, seed=5)
+    assert len(res.metrics) == 40
+    for rid, m in res.metrics.items():
+        assert "finish_step" in m, f"rid {rid} never finished"
+        assert m["reason"] in ("eos", "max_new")
+        # TTFT ordering: arrive <= first token <= finish.
+        assert m["arrival_step"] <= m["first_token_step"] <= m["finish_step"]
+        assert len(res.tokens[rid]) >= 1
+
+
+def test_sim_tokens_depend_only_on_rid_and_index():
+    # Same requests, radically different co-batching (slots=1 vs slots=4):
+    # every request's token sequence must be identical.  This is the pure-
+    # layer version of the batch-independence property test_properties.py
+    # checks against the real model.
+    reqs = poisson_trace(seed=9, rate=1.0, n=16, max_new=(1, 8))
+    solo = simulate(dataclasses.replace(CFG, max_slots=1, max_prefill=1),
+                    reqs, seed=9)
+    packed = simulate(CFG, reqs, seed=9)
+    assert solo.tokens == packed.tokens
+    assert sim_token(3, 0) == sim_token(3, 0) != sim_token(4, 0)

@@ -36,6 +36,7 @@ LOCKED = [
     "repro.gp.ski",
     "repro.kernels.ops",
     "repro.kernels.emit",
+    "repro.launch.scheduler",
     "repro.runtime.guard",
     "repro.runtime.chaos",
     "repro.runtime.telemetry",
