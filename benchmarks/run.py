@@ -16,7 +16,7 @@ import time
 import traceback
 
 ALL = ["fig9", "fig_bwd", "fig_batched", "fig_dist_batched", "fig_serve",
-       "tab1", "tab2", "tab3", "fig10", "fig11", "tab5"]
+       "fig_optim", "tab1", "tab2", "tab3", "fig10", "fig11", "tab5"]
 
 
 def main() -> None:

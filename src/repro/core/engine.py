@@ -769,6 +769,7 @@ class KronOp:
         tune: str = "analytic",
         cache_path: str | None = None,
         dtype_bytes: int = 4,
+        enable_prekron: bool | None = None,
     ):
         self.ps = tuple(int(p) for p in ps)
         self.qs = tuple(int(q) for q in qs)
@@ -793,7 +794,12 @@ class KronOp:
         self._m = m
         self._dtype_bytes = dtype_bytes
         self._plan_arg = plan
-        self._ctx = _PlanCtx(plan == "auto", tune, cache_path, _auto_prekron())
+        # ``enable_prekron=None`` keeps the backend auto-gate (TPU on, else
+        # off); an explicit bool overrides it — e.g. the optimizer's
+        # preconditioner apply must NEVER densify kron(L, R) per layer.
+        self._enable_prekron = enable_prekron
+        prekron = _auto_prekron() if enable_prekron is None else bool(enable_prekron)
+        self._ctx = _PlanCtx(plan == "auto", tune, cache_path, prekron)
         if mesh is not None:
             from .distributed import _mesh_size, plan_rounds
 
@@ -908,6 +914,7 @@ class KronOp:
             model_axis=self.model_axis, per_iteration=self.per_iteration,
             backend=self.backend, plan=self._plan_arg, tune=self._ctx.tune,
             cache_path=self._ctx.cache_path, dtype_bytes=self._dtype_bytes,
+            enable_prekron=self._enable_prekron,
         )
         kw.update(changes)
         return KronOp(self.ps, self.qs, **kw)
@@ -1338,6 +1345,7 @@ def kron_op_for(
     tune: str = "analytic",
     cache_path: str | None = None,
     dtype_bytes: int = 4,
+    enable_prekron: bool | None = None,
 ) -> KronOp:
     """Shared, bounded ``KronOp`` factory: same signature -> same op object.
 
@@ -1351,6 +1359,34 @@ def kron_op_for(
         data_axis=data_axis, model_axis=model_axis,
         per_iteration=per_iteration, backend=backend, plan=plan, tune=tune,
         cache_path=cache_path, dtype_bytes=dtype_bytes,
+        enable_prekron=enable_prekron,
+    )
+
+
+def kron_precond_op(
+    p: int, q: int, batch: int, *, dtype_bytes: int = 4, backend: str = "auto"
+) -> KronOp:
+    """The op behind one Kron-factored-preconditioner shape group.
+
+    A Shampoo-style update ``P_l = A_l G_l B_l`` (per-layer root pairs
+    ``A_l = L_l^{-1/4}``, ``B_l = R_l^{-1/4}``) over ``batch`` same-shape
+    ``(p, q)`` layers is exactly ONE per-sample-factor batched Kron-Matmul:
+    ``x = vec_row(G)`` stacked to ``(B, 1, p*q)``, ``factors = (A, B)``
+    stacked to ``((B, p, p), (B, q, q))`` — ``row @ (A (x) B) ==
+    vec_row(A^T G B)``, and the roots are symmetric.  Resolved through the
+    shared bounded factory so constructing it at step-builder time IS the
+    prewarming: the traced update hits this op object, never a re-plan.
+
+    Pre-kronization is forced OFF: densifying ``kron(A_l, B_l)`` is a
+    ``(p*q)^2`` buffer per layer per step — the exact materialization the
+    Kron-factored preconditioner exists to avoid.
+    """
+    if batch <= 0:
+        raise ValueError(f"batch must be positive, got {batch}")
+    return kron_op_for(
+        (int(p), int(q)), (int(p), int(q)), m=1, batch=int(batch),
+        shared_factors=False, backend=backend, dtype_bytes=dtype_bytes,
+        enable_prekron=False,
     )
 
 
@@ -1375,6 +1411,7 @@ __all__ = [
     "KronOp",
     "KronCost",
     "kron_op_for",
+    "kron_precond_op",
     "signature_of",
     "kron_matmul_p",
     "kron_matmul_batched_p",

@@ -21,18 +21,22 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..configs import SHAPES, ShapeSpec, get_config
 from ..models import model as M
 from ..models.config import ModelConfig
-from ..optim.adamw import OptConfig, opt_init
+from ..optim.adamw import OptConfig
+from ..optim.shampoo import ShampooConfig, opt_for
 from ..runtime.sharding import cache_shardings, param_shardings, token_sharding
 from ..train.steps import (
     TrainState,
     make_prefill_step,
     make_serve_step,
     make_train_step,
+    opt_state_shardings,
 )
 
 # per-arch training overrides for the production meshes: activation memory
-# (microbatches) and optimizer-state dtype (100B+ models need bf16 m/v to
-# fit 256 chips; DESIGN.md §8)
+# (microbatches), optimizer-state dtype (100B+ models need bf16 m/v to
+# fit 256 chips; DESIGN.md §8), and optimizer selection
+# (``optimizer="shampoo"`` routes the cell through the Kron-factored
+# preconditioner + its ``precond_every`` cadence; docs/optim.md)
 TRAIN_OVERRIDES: dict[str, dict] = {
     "jamba-1.5-large-398b": dict(
         microbatches=16, state_dtype="bfloat16", acc_dtype="bfloat16"
@@ -116,14 +120,17 @@ def build_cell(arch: str, shape_name: str, mesh: Mesh) -> Cell:
                 mesh=dict(mesh.shape), fsdp_pods=fsdp_pods)
 
     if shape.kind == "train":
-        opt_cfg = OptConfig(state_dtype=state_dtype)
-        opt_shape = jax.eval_shape(partial(opt_init, cfg=opt_cfg), params)
-        opt_shard = jax.tree.map(
-            lambda s_, p_sh: NamedSharding(mesh, P())
-            if s_.ndim == 0
-            else p_sh,
-            opt_shape,
-            {"m": p_shard, "v": p_shard, "step": NamedSharding(mesh, P())},
+        if ov.get("optimizer") == "shampoo":
+            opt_cfg: OptConfig = ShampooConfig(
+                state_dtype=state_dtype,
+                precond_every=ov.get("precond_every", 20),
+            )
+        else:
+            opt_cfg = OptConfig(state_dtype=state_dtype)
+        init_fn, _ = opt_for(opt_cfg)
+        opt_shape = jax.eval_shape(partial(init_fn, cfg=opt_cfg), params)
+        opt_shard = opt_state_shardings(
+            opt_shape, p_shard, NamedSharding(mesh, P())
         )
         state = TrainState(
             params,
@@ -147,6 +154,8 @@ def build_cell(arch: str, shape_name: str, mesh: Mesh) -> Cell:
             acc_dtype=jnp.dtype(ov.get("acc_dtype", "float32")),
         )
         meta.update(microbatches=microbatches, state_dtype=state_dtype,
+                    optimizer=("shampoo" if isinstance(opt_cfg, ShampooConfig)
+                               else "adamw"),
                     params=cfg.param_count(),
                     params_active=cfg.param_count(active_only=True))
         return Cell(arch, shape, cfg, fn, (state, batch),

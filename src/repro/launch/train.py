@@ -25,12 +25,14 @@ from ..checkpoint import CheckpointManager
 from ..configs import get_config
 from ..data import SyntheticLM
 from ..models.config import reduced as reduce_cfg
-from ..optim import OptConfig
+from ..optim import OptConfig, ShampooConfig, state_memory_report
 from ..runtime import guard, telemetry
 from ..runtime.events import get_logger
 from ..runtime.fault import StragglerMonitor, elastic_mesh
 from ..runtime.sharding import param_shardings, token_sharding
-from ..train import TrainState, make_train_step, train_state_init
+from ..train import (
+    TrainState, make_train_step, opt_state_shardings, train_state_init,
+)
 
 
 def main() -> None:
@@ -50,6 +52,12 @@ def main() -> None:
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--kron-ffn", action="store_true",
                     help="enable the paper's Kron-compressed FFN projections")
+    ap.add_argument("--optimizer", choices=("adamw", "shampoo"),
+                    default="adamw",
+                    help="shampoo: Kron-factored preconditioning applied "
+                         "through batched KronOp shape groups (docs/optim.md)")
+    ap.add_argument("--precond-every", type=int, default=20,
+                    help="shampoo inverse-root refresh cadence (steps)")
     ap.add_argument("--numerics", choices=list(guard.NUMERICS_POLICIES),
                     default=None,
                     help="non-finite guard at StageProgram boundaries "
@@ -76,8 +84,14 @@ def main() -> None:
         from dataclasses import replace
 
         cfg = replace(cfg, kron_ffn=True)
-    opt_cfg = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 2),
-                        decay_steps=args.steps)
+    opt_kw = dict(lr=args.lr, warmup_steps=max(args.steps // 20, 2),
+                  decay_steps=args.steps)
+    if args.optimizer == "shampoo":
+        opt_cfg: OptConfig = ShampooConfig(
+            precond_every=args.precond_every, **opt_kw
+        )
+    else:
+        opt_cfg = OptConfig(**opt_kw)
 
     mesh = elastic_mesh(jax.device_count(),
                         want_model=args.want_model_parallel)
@@ -93,13 +107,9 @@ def main() -> None:
             jax.eval_shape(lambda: state.params), mesh,
             tied_embed=cfg.tie_embeddings,
         )
-        opt_shard = {
-            "m": p_shard, "v": p_shard,
-            "step": jax.sharding.NamedSharding(
-                mesh, jax.sharding.PartitionSpec()),
-        }
-        if "err" in state.opt:
-            opt_shard["err"] = p_shard
+        replicated = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec())
+        opt_shard = opt_state_shardings(state.opt, p_shard, replicated)
         state = TrainState(
             jax.device_put(state.params, p_shard),
             jax.device_put(state.opt, opt_shard),
@@ -118,6 +128,8 @@ def main() -> None:
         )
         tok_sh = token_sharding(mesh, args.batch)
         mon = StragglerMonitor(action="log")
+        shampoo_on = isinstance(opt_cfg, ShampooConfig)
+        base_step_s = None  # rolling min of non-refresh steps (see below)
         t_start = time.time()
         for i in range(start, args.steps):
             toks, labels = data.global_batch(i)
@@ -130,9 +142,31 @@ def main() -> None:
             with telemetry.span("train_step", step=i):
                 state, metrics = step_fn(state, batch)
                 jax.block_until_ready(metrics["loss"])
-            telemetry.observe(
-                "train.step_seconds", time.perf_counter() - t_step
-            )
+            dt_step = time.perf_counter() - t_step
+            telemetry.observe("train.step_seconds", dt_step)
+            if shampoo_on and telemetry.active():
+                telemetry.gauge_set(
+                    "optim.precond_stale_steps",
+                    int(metrics["precond_stale_steps"]),
+                )
+                # the refresh is fused into the jitted step (lax.cond), so
+                # its cost is observed as the refresh-step excess over the
+                # rolling minimum of plain steps
+                opt_step = int(state.opt["step"])
+                is_refresh = (
+                    opt_step == 1
+                    or opt_step % max(opt_cfg.precond_every, 1) == 0
+                )
+                if not is_refresh and i > start:
+                    base_step_s = (
+                        dt_step if base_step_s is None
+                        else min(base_step_s, dt_step)
+                    )
+                elif is_refresh and base_step_s is not None:
+                    telemetry.observe(
+                        "optim.root_refresh_seconds",
+                        max(0.0, dt_step - base_step_s),
+                    )
             mon.stop(i)
             if i % args.log_every == 0 or i == args.steps - 1:
                 print(
@@ -150,9 +184,19 @@ def main() -> None:
     tok_s = args.steps * args.batch * args.seq / max(dt, 1e-9)
     telemetry.gauge_set("train.tokens_per_s", tok_s)
     log.info(f"done: {args.steps} steps in {dt:.1f}s ({tok_s:.0f} tok/s)")
+    # Optimizer-state memory by dtype: makes the bf16 ``state_dtype``
+    # saving (and Shampoo's kron-statistics footprint) visible at exit.
+    mem = state_memory_report(state.opt)
+    log.info(
+        f"optimizer state: {mem['total_bytes'] / 1e6:.2f} MB "
+        + " ".join(
+            f"{k}={v / 1e6:.2f}MB" for k, v in sorted(mem["by_dtype"].items())
+        )
+    )
     # ONE merged exit report: guard health carries the telemetry snapshot
     # (counters, gauges, histogram percentiles) when KronScope is live.
     report = guard.health_report()
+    report["opt_state_memory"] = mem
     if telemetry.active() or report["events"] or any(
         h["degraded_calls"] or h["errors"] for h in report["ops"].values()
     ):

@@ -14,6 +14,7 @@ site               where ``maybe_fail`` is called
 ``collective``       ``core/distributed.py`` before the all_to_all
 ``plan_cache_load``  ``core/autotune.py`` cache read
 ``plan_cache_save``  ``core/autotune.py`` cache write attempt
+``root_refresh``     ``optim/shampoo.py`` inverse-root refresh
 =================  ========================================================
 
 Activation is layered: ``inject(spec)`` pushes a parsed spec onto a stack
@@ -55,6 +56,10 @@ SITE_ERRORS = {
     # is admitted to decode slots — the guard ladder must degrade to a
     # smaller prefill chunk, never drop the request (docs/serving.md).
     "serve_admit": guard.VmemOverflowError,
+    # Optimizer: fires inside the Shampoo inverse-root refresh — the
+    # affected layers must degrade to grafted AdamW for the interval, never
+    # crash the training step (docs/optim.md).
+    "root_refresh": guard.NumericsError,
     "plan_cache_load": guard.PlanCacheError,
     "plan_cache_save": guard.PlanCacheError,
 }

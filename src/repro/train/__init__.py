@@ -6,6 +6,7 @@ from .steps import (  # noqa: F401
     make_train_step,
     make_prefill_step,
     make_serve_step,
+    opt_state_shardings,
     prebuild_kron_ops,
     train_state_init,
 )

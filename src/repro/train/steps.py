@@ -17,7 +17,9 @@ import jax.numpy as jnp
 
 from ..models import model as M
 from ..models.config import ModelConfig
-from ..optim.adamw import OptConfig, opt_init, opt_update
+from ..optim.adamw import OptConfig
+from ..optim.shampoo import ShampooConfig, opt_for
+from ..optim import shampoo as _shampoo
 from ..runtime.sharding import constrain_like_params
 
 
@@ -30,7 +32,7 @@ class TrainState(NamedTuple):
 def prebuild_kron_ops(
     cfg: ModelConfig, *, batch: int | None = None, seq_len: int | None = None,
     mesh=None, prefill_shapes: Sequence[tuple[int, int]] = (),
-    decode_batch: int | None = None,
+    decode_batch: int | None = None, opt_cfg: OptConfig | None = None,
 ) -> tuple:
     """Construct the ``KronOp`` handles behind every Kron-compressed
     projection in ``cfg`` before the first jitted step.
@@ -51,9 +53,21 @@ def prebuild_kron_ops(
     shape, and a shape missing here re-plans at trace time mid-serve (the
     PR-8 fix; tests/test_serve_engine.py pins zero steady-state misses).
     ``decode_batch``: also resolve the decode-step shape (rows = slots*1).
+    ``opt_cfg``: with a ``ShampooConfig``, ALSO construct the optimizer's
+    shape-grouped preconditioner-apply ops (one batched per-sample op per
+    same-shape layer group, sized from ``jax.eval_shape`` of the params) —
+    the training analogue of the serving prewarm, so the first train step
+    never plans a preconditioner op mid-trace.
     """
+    opt_ops: tuple = ()
+    if isinstance(opt_cfg, ShampooConfig):
+        import functools
+        shapes = jax.eval_shape(
+            functools.partial(M.init_params, cfg), jax.random.PRNGKey(0)
+        )
+        opt_ops = _shampoo.prewarm(shapes, opt_cfg)
     if not getattr(cfg, "kron_ffn", False):
-        return ()
+        return opt_ops
     from ..core.engine import kron_op_for
     from ..core.layers import KronLinearSpec
 
@@ -84,12 +98,28 @@ def prebuild_kron_ops(
                 ops.append(kron_op_for(spec.ps, spec.qs, mesh=mesh))
             except ValueError:
                 pass  # no legal round schedule — scope will run local
-    return tuple(ops)
+    return tuple(ops) + opt_ops
 
 
 def train_state_init(cfg: ModelConfig, opt_cfg: OptConfig, key: jax.Array) -> TrainState:
     params = M.init_params(cfg, key)
-    return TrainState(params, opt_init(params, opt_cfg), jnp.zeros((), jnp.int32))
+    init_fn, _ = opt_for(opt_cfg)
+    return TrainState(params, init_fn(params, opt_cfg), jnp.zeros((), jnp.int32))
+
+
+def opt_state_shardings(opt_state: Any, param_shardings: Any, replicated) -> Any:
+    """Shardings for an optimizer-state pytree: ``m``/``v``/``err`` mirror
+    the parameter shardings (FSDP'd params => ZeRO-3 partitioned state),
+    everything else (``step``, Shampoo's ``kron`` statistics subtree) is
+    replicated — the kron subtree is ``O(p^2 + q^2)`` per layer, small next
+    to the ``p*q`` parameters it preconditions."""
+    out = {}
+    for key in opt_state:
+        if key in ("m", "v", "err"):
+            out[key] = param_shardings
+        else:
+            out[key] = jax.tree.map(lambda _: replicated, opt_state[key])
+    return out
 
 
 def loss_fn(
@@ -122,9 +152,12 @@ def make_train_step(
     ``acc_dtype``: gradient-accumulator dtype (bf16 halves the buffer for
     100B+ models; error < 2^-8 relative per add, fine for <=32 microbatches).
     """
-    # Construct the op handles up front; their plans resolve once through
-    # the shared bounded memo (the first trace reuses, not re-plans).
-    prebuild_kron_ops(cfg)
+    # Construct the op handles up front (model projections AND, for a
+    # ShampooConfig, the optimizer's shape-group preconditioner ops); their
+    # plans resolve once through the shared bounded memo (the first trace
+    # reuses, not re-plans).
+    prebuild_kron_ops(cfg, opt_cfg=opt_cfg)
+    _, update_fn = opt_for(opt_cfg)
 
     def grads_of(params, tokens, labels, embeds):
         (loss, parts), grads = jax.value_and_grad(
@@ -174,7 +207,7 @@ def make_train_step(
             loss = loss / microbatches
             parts = {"nll": loss, "aux": jnp.zeros((), jnp.float32)}
 
-        new_params, new_opt, opt_metrics = opt_update(
+        new_params, new_opt, opt_metrics = update_fn(
             grads, state.opt, params, opt_cfg
         )
         metrics = {"loss": loss, **parts, **opt_metrics}
@@ -205,6 +238,7 @@ __all__ = [
     "TrainState",
     "train_state_init",
     "prebuild_kron_ops",
+    "opt_state_shardings",
     "loss_fn",
     "make_train_step",
     "make_prefill_step",

@@ -37,6 +37,7 @@ LOCKED = [
     "repro.kernels.ops",
     "repro.kernels.emit",
     "repro.launch.scheduler",
+    "repro.optim.shampoo",
     "repro.runtime.guard",
     "repro.runtime.chaos",
     "repro.runtime.telemetry",
