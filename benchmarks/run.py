@@ -15,8 +15,9 @@ import sys
 import time
 import traceback
 
-ALL = ["fig9", "fig_bwd", "fig_batched", "fig_dist_batched", "fig_serve",
-       "fig_optim", "tab1", "tab2", "tab3", "fig10", "fig11", "tab5"]
+ALL = ["fig9", "fig_bwd", "fig_batched", "fig_dist_batched",
+       "fig_dist_overlap", "fig_serve", "fig_optim", "tab1", "tab2", "tab3",
+       "fig10", "fig11", "tab5"]
 
 
 def main() -> None:

@@ -58,6 +58,18 @@ VMEM_BYTES = 16 * 1024 * 1024
 MXU_DIM = 128
 SUBLANE = 8
 
+# Interconnect model for the distributed slab pipeline (TPU v5e ICI): the
+# per-device all_to_all streams at ICI_BW and each collective launch pays
+# A2A_LATENCY_S regardless of payload.  Slabbing a round multiplies the
+# latency term by n_slabs while letting up to (n-1)/n of the payload hide
+# under chain compute — so the analytic model only picks n_slabs > 1 once
+# per-round payloads clear the ~latency*BW product (~100 KB), which keeps
+# every small test problem on the serial schedule.  Host-mesh collectives
+# run at memcpy speed, so ``tune="measure"`` (not this model) owns the final
+# call on real fabrics — see ``make_batched_plan``.
+ICI_BW = 45e9  # bytes/s per device
+A2A_LATENCY_S = 1e-6
+
 PLAN_CACHE_VERSION = 1
 
 
@@ -207,6 +219,13 @@ class KronPlan:
     # M-tile against this axis.  1 == unbatched semantics (ignored by the
     # single-problem path).
     t_b: int = 1
+    # Slab-pipeline depth for the DISTRIBUTED rounds: how many row slabs each
+    # mesh round is split into so one slab's all_to_all overlaps the next
+    # slab's chain.  1 == the serial round schedule; only the mesh path reads
+    # it (local execution ignores it, like the single-problem path ignores
+    # t_b).  make_batched_plan(g_k>1) trades this axis against t_b under the
+    # VMEM budget: more slabs shrink the resident relocation payload.
+    n_slabs: int = 1
 
     def describe(self) -> str:
         parts = []
@@ -217,6 +236,8 @@ class KronPlan:
                 tag += f"/tq{list(st.t_qs)}"
             parts.append(tag)
         head = f"[t_b={self.t_b}] " if self.t_b != 1 else ""
+        if self.n_slabs != 1:
+            head += f"[slabs={self.n_slabs}] "
         return head + " -> ".join(parts)
 
 
@@ -486,6 +507,85 @@ def _dist_round_payload_elems(prob: KronProblem, g_k: int) -> int:
     return worst
 
 
+def _dist_round_costs(
+    prob: KronProblem, g_k: int, batch: int, dtype_bytes: int
+) -> list[tuple[float, float]]:
+    """Per-round ``(compute_s, comm_s)`` on one device of the mesh round
+    schedule: chain flops against the dtype's peak, all_to_all payload
+    against ``ICI_BW``.  ``prob`` is the LOCAL problem (``m = M_loc``).
+    Raises ``PlanError`` when no round schedule exists (callers fall back to
+    the serial schedule)."""
+    from .distributed import plan_rounds
+
+    ps = list(reversed(prob.ps))
+    qs = list(reversed(prob.qs))
+    k_loc = prob.k // g_k
+    rounds = plan_rounds(k_loc, ps, qs, g_k)
+    peak = PEAK_FLOPS if dtype_bytes <= 2 else PEAK_FLOPS_F32
+    costs = []
+    c = k_loc
+    i = 0
+    for r in rounds:
+        flops = 0.0
+        for j in range(i, i + r):
+            flops += 2.0 * batch * prob.m * c * qs[j]
+            c = c // ps[j] * qs[j]
+        payload = batch * prob.m * c * (g_k - 1) / g_k
+        costs.append((flops / peak, payload * dtype_bytes / ICI_BW))
+        i += r
+    return costs
+
+
+def _slab_schedule_seconds(
+    costs: Sequence[tuple[float, float]], n_slabs: int
+) -> float:
+    """Analytic time of the slab-pipelined round schedule: per round, up to
+    ``(n-1)/n`` of the overlappable ``min(compute, comm)`` hides, and every
+    slab's all_to_all pays the launch latency.  ``n_slabs=1`` recovers the
+    serial ``compute + comm + latency`` sum."""
+    total = 0.0
+    for comp, comm in costs:
+        hidden = min(comp, comm) * (n_slabs - 1) / n_slabs
+        total += comp + comm - hidden + n_slabs * A2A_LATENCY_S
+    return total
+
+
+def choose_n_slabs(
+    prob: KronProblem,
+    g_k: int,
+    *,
+    batch: int = 1,
+    dtype_bytes: int = 4,
+    candidates: Sequence[int] = (1, 2, 4),
+) -> int:
+    """Analytic slab count for the distributed round pipeline.
+
+    ``prob`` is the LOCAL problem (``m = M_loc`` — the slab axis; for the
+    shared-factors path that is the collapsed ``B*M/G_M`` row count).  Each
+    candidate is clamped to a divisor of the row axis, scored with
+    ``_slab_schedule_seconds``, and the serial schedule wins ties — the
+    latency term means slabbing only pays once per-round payloads clear
+    roughly ``A2A_LATENCY_S * ICI_BW`` (~100 KB per collective), so small
+    problems always plan serial.  This is the HBM-class analytic model;
+    ``make_batched_plan(tune="measure", mesh=...)`` overrules it with a wall
+    clock on the emitted program."""
+    if g_k <= 1 or prob.m <= 1:
+        return 1
+    try:
+        costs = _dist_round_costs(prob, g_k, batch, dtype_bytes)
+    except guard.PlanError:
+        return 1
+    best_n, best_t = 1, _slab_schedule_seconds(costs, 1)
+    for n in candidates:
+        n_eff = emit_mod.effective_slabs(prob.m, n)
+        if n_eff == best_n:
+            continue
+        t = _slab_schedule_seconds(costs, n_eff)
+        if t < best_t:
+            best_n, best_t = n_eff, t
+    return best_n
+
+
 def _batch_tiled(
     base: KronPlan,
     prob: KronProblem,
@@ -558,6 +658,9 @@ def make_batched_plan(
     cache_path: str | None = None,
     g_k: int = 1,
     acc_dtype: str | None = None,
+    mesh=None,
+    data_axis="data",
+    model_axis: str = "model",
 ) -> KronPlan:
     """Plan for ``batch`` independent copies of ``prob`` in one launch.
 
@@ -581,13 +684,22 @@ def make_batched_plan(
 
     ``g_k > 1`` selects DISTRIBUTED mode (``kron_matmul_batched_distributed``
     on a mesh with a ``G_K``-way model axis): ``prob`` is the per-device
-    LOCAL problem (``m = M_loc``), and the worst-round relocation slab
-    (``_dist_round_payload_elems``) shares the VMEM budget with the compute
-    blocks, so ``t_b`` is traded against the per-round payload:
-    ``t_b * (block + payload) <= budget``.  Distributed plans are analytic
-    only — a single-host wall clock cannot rank collective rounds, so
-    ``tune="measure"`` falls back to the analytic distributed plan and
-    nothing is written to the plan cache.  Distributed SHARED-factor plans
+    LOCAL problem (``m = M_loc``).  The plan gains TWO distributed axes,
+    traded jointly under the VMEM budget: the batch tile ``t_b`` and the
+    slab-pipeline depth ``n_slabs``.  For each candidate slab count the
+    worst-round relocation slab (``_dist_round_payload_elems``) SHRINKS by
+    the slab factor — only one slab's payload is resident at a time — so the
+    constraint is ``t_b * (block + payload/n) <= budget``: more slabs buy
+    back batch tiles.  Candidates are scored with the analytic overlap model
+    (``_slab_schedule_seconds``: hidden comm vs the per-slab collective
+    latency), which keeps small problems on the serial schedule.  With
+    ``tune="measure"`` AND a ``mesh``, candidates are instead wall-clock
+    ranked on the emitted program through the real mesh runner and persisted
+    in the plan cache under a key with a ``;gk=`` component
+    (``_measured_dist_plan``) — host-mesh collectives run at memcpy speed,
+    so measuring is the only honest way to rank slabbed vs serial schedules
+    off-fabric; without a mesh, measure falls back to the analytic
+    distributed plan and nothing is cached.  Distributed SHARED-factor plans
     do not exist: the shared path collapses B into the sharded row axis and
     needs no batched plan, so ``g_k > 1`` with ``shared_factors=True``
     raises rather than silently planning a single-device problem.
@@ -601,19 +713,28 @@ def make_batched_plan(
             "data-sharded row axis and takes no batched plan"
         )
     if g_k > 1 and not shared_factors:
-        base = make_plan(
-            prob,
+        if tune == "measure" and mesh is not None:
+            return _measured_dist_plan(
+                prob,
+                batch=batch,
+                g_k=g_k,
+                mesh=mesh,
+                data_axis=data_axis,
+                model_axis=model_axis,
+                dtype_bytes=dtype_bytes,
+                enable_fusion=enable_fusion,
+                vmem_budget_elems=vmem_budget_elems,
+                backend=backend,
+                cache_path=cache_path,
+                acc_dtype=acc_dtype,
+            )
+        return _analytic_dist_plan(
+            prob, batch, g_k,
             dtype_bytes=dtype_bytes,
             enable_fusion=enable_fusion,
-            enable_prekron=False,
             vmem_budget_elems=vmem_budget_elems,
-            tune="analytic",
             backend=backend,
             acc_dtype=acc_dtype,
-        )
-        return _batch_tiled(
-            base, prob, batch, vmem_budget_elems, dtype_bytes,
-            extra_per_sample_elems=_dist_round_payload_elems(prob, g_k),
         )
     if shared_factors:
         return make_plan(
@@ -660,6 +781,68 @@ def make_batched_plan(
     return _batch_tiled(base, prob, batch, vmem_budget_elems, dtype_bytes)
 
 
+def _dist_plan_candidates(
+    prob: KronProblem,
+    batch: int,
+    g_k: int,
+    *,
+    dtype_bytes: int,
+    enable_fusion: bool,
+    vmem_budget_elems: int,
+    backend: str,
+    acc_dtype: str | None,
+    slab_candidates: Sequence[int] = (1, 2, 4),
+) -> list[KronPlan]:
+    """One distributed plan per feasible slab count, serial first.  Each
+    candidate re-runs the t_b fit with the per-slab payload share
+    (``payload // n``) so deeper pipelines can legitimately carry bigger
+    batch tiles — the n_slabs-vs-t_b trade as an explicit candidate axis."""
+    base = make_plan(
+        prob,
+        dtype_bytes=dtype_bytes,
+        enable_fusion=enable_fusion,
+        enable_prekron=False,
+        vmem_budget_elems=vmem_budget_elems,
+        tune="analytic",
+        backend=backend,
+        acc_dtype=acc_dtype,
+    )
+    payload = _dist_round_payload_elems(prob, g_k)
+    cands = []
+    for n in sorted({emit_mod.effective_slabs(prob.m, n) for n in slab_candidates}):
+        plan_n = _batch_tiled(
+            base, prob, batch, vmem_budget_elems, dtype_bytes,
+            extra_per_sample_elems=payload // n,
+        )
+        cands.append(dataclasses.replace(plan_n, n_slabs=n))
+    return cands
+
+
+def _analytic_dist_plan(
+    prob: KronProblem, batch: int, g_k: int, *, dtype_bytes, enable_fusion,
+    vmem_budget_elems, backend, acc_dtype,
+) -> KronPlan:
+    """Analytic distributed batched plan: pick the candidate whose slab
+    schedule minimizes the overlap model's time; on a tie the BIGGER batch
+    tile wins (the whole point of trading the axes), then the shallower
+    pipeline (serial is listed first)."""
+    cands = _dist_plan_candidates(
+        prob, batch, g_k, dtype_bytes=dtype_bytes, enable_fusion=enable_fusion,
+        vmem_budget_elems=vmem_budget_elems, backend=backend,
+        acc_dtype=acc_dtype,
+    )
+    try:
+        costs = _dist_round_costs(prob, g_k, batch, dtype_bytes)
+    except guard.PlanError:
+        return cands[0]
+    best, best_t = cands[0], _slab_schedule_seconds(costs, cands[0].n_slabs)
+    for plan in cands[1:]:
+        t = _slab_schedule_seconds(costs, plan.n_slabs)
+        if t < best_t or (t == best_t and plan.t_b > best.t_b):
+            best, best_t = plan, t
+    return best
+
+
 # ---------------------------------------------------------------------------
 # Measured tuning + on-disk plan cache
 # ---------------------------------------------------------------------------
@@ -691,8 +874,11 @@ def plan_cache_key(
     ``batch > 0`` marks a batched-plan entry (keyed on B and the factor-
     sharing mode); 0 keeps the single-problem key format stable, and a
     non-default ``acc_dtype`` is appended only when set for the same reason.
-    Distributed batched plans (``make_batched_plan(g_k > 1)``) are analytic-
-    only and never cached, so the key carries no g_k field."""
+    Distributed MEASURED plans (``make_batched_plan(g_k > 1, tune="measure",
+    mesh=...)``) append a ``;gk=<G_K>`` component to this key — append-only
+    like ``;B=``/``;acc=``, so pre-slab cache files load unchanged and
+    single-host entries never collide with distributed ones; analytic
+    distributed plans are still never cached."""
     ps = ",".join(map(str, prob.ps))
     qs = ",".join(map(str, prob.qs))
     key = (
@@ -736,6 +922,7 @@ def plan_to_json(plan: KronPlan) -> dict:
             else None
         ),
         "t_b": plan.t_b,
+        "n_slabs": plan.n_slabs,
     }
 
 
@@ -748,6 +935,7 @@ def plan_from_json(d: dict) -> KronPlan:
             else None
         ),
         int(d.get("t_b", 1)),
+        int(d.get("n_slabs", 1)),  # pre-slab cache entries default to serial
     )
 
 
@@ -988,12 +1176,115 @@ def _measured_plan(
     return best
 
 
+def _measured_dist_plan(
+    prob: KronProblem,
+    *,
+    batch: int,
+    g_k: int,
+    mesh,
+    data_axis,
+    model_axis: str,
+    dtype_bytes: int,
+    enable_fusion: bool,
+    vmem_budget_elems: int,
+    backend: str,
+    cache_path: str | None,
+    acc_dtype: str | None,
+) -> KronPlan:
+    """Measured tuning for DISTRIBUTED batched plans: wall-clock rank the
+    slab-count candidates by running the real mesh runner (forward + full
+    VJP of the emitted round schedule) on the caller's mesh, so slabbed vs
+    serial is decided by what the fabric actually does — the analytic ICI
+    model cannot see that host-mesh collectives run at memcpy speed (and,
+    symmetrically, a real ICI's latency).  The winner is persisted under the
+    batched cache key plus a ``;gk=`` component: an APPEND-ONLY extension of
+    the key schema, so existing single-host entries keep their keys and old
+    cache files load unchanged (distributed entries simply never collide
+    with them)."""
+    path = cache_path or default_cache_path()
+    key = plan_cache_key(
+        prob, dtype_bytes, backend,
+        enable_fusion=enable_fusion,
+        enable_prekron=False,
+        vmem_budget_elems=vmem_budget_elems,
+        batch=batch,
+        shared_factors=False,
+        acc_dtype=acc_dtype,
+    ) + f";gk={g_k}"
+    entries = load_plan_cache(path)
+    hit = entries.get(key)
+    if hit is not None:
+        telemetry.counter_inc("plan_cache.hit")
+        return plan_from_json(hit["plan"])
+    telemetry.counter_inc("plan_cache.miss")
+
+    cands = _dist_plan_candidates(
+        prob, batch, g_k, dtype_bytes=dtype_bytes, enable_fusion=enable_fusion,
+        vmem_budget_elems=vmem_budget_elems, backend=backend,
+        acc_dtype=acc_dtype,
+    )
+    fallback = _analytic_dist_plan(
+        prob, batch, g_k, dtype_bytes=dtype_bytes, enable_fusion=enable_fusion,
+        vmem_budget_elems=vmem_budget_elems, backend=backend,
+        acc_dtype=acc_dtype,
+    )
+
+    from . import distributed
+
+    g_m = distributed._mesh_size(mesh, data_axis)
+    dtype = {2: jnp.bfloat16, 4: jnp.float32, 8: jnp.float64}.get(
+        dtype_bytes, jnp.float32
+    )
+    keys = jax.random.split(jax.random.PRNGKey(0), prob.n + 1)
+    x = jax.random.normal(keys[0], (batch, prob.m * g_m, prob.k)).astype(dtype)
+    x = distributed.sharded_input_batched(x, mesh, data_axis, model_axis)
+    factors = tuple(
+        jax.random.normal(kk, (batch, p, q)).astype(dtype)
+        for kk, p, q in zip(keys[1:], prob.ps, prob.qs)
+    )
+
+    def fn_of_plan(plan):
+        f = jax.jit(
+            jax.grad(
+                lambda x, fs: distributed.run_batched_distributed_rounds(
+                    x, fs, mesh,
+                    t_b=plan.t_b,
+                    data_axis=data_axis,
+                    model_axis=model_axis,
+                    backend=backend,
+                    n_slabs=plan.n_slabs,
+                ).sum().astype(jnp.float32),
+                argnums=(0, 1),
+            )
+        )
+        return lambda: f(x, factors)
+
+    try:
+        with telemetry.span(
+            "measure_dist_plan", candidates=len(cands), g_k=g_k
+        ):
+            best, seconds = measure_best(fn_of_plan, cands, warmup=1, iters=3)
+    except (RuntimeError, guard.PlanError):
+        # No candidate ran on this mesh (e.g. rows not shardable): analytic
+        # fallback, nothing cached.
+        return fallback
+    entries[key] = {
+        "plan": plan_to_json(best),
+        "seconds": seconds,
+        "measured_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "candidates": [c.describe() for c in cands],
+    }
+    save_plan_cache(path, entries)
+    return best
+
+
 __all__ = [
     "TileConfig",
     "Stage",
     "KronPlan",
     "make_plan",
     "make_batched_plan",
+    "choose_n_slabs",
     "lower",
     "mirror_bwd_stages",
     "tune_sliced",
@@ -1010,4 +1301,6 @@ __all__ = [
     "PEAK_FLOPS",
     "HBM_BW",
     "VMEM_BYTES",
+    "ICI_BW",
+    "A2A_LATENCY_S",
 ]

@@ -632,11 +632,27 @@ def _kron_fn(plan: KronPlan | None, backend: str, pctx: _PlanCtx, batched: bool)
 
 @dataclasses.dataclass(frozen=True)
 class KronCost:
-    """Analytic per-call cost of a KronOp (``KronOp.cost()``)."""
+    """Analytic per-call cost of a KronOp (``KronOp.cost()``).
+
+    The last three fields describe the slab-pipelined round schedule: with
+    ``n_slabs > 1`` each round's all_to_all is split into per-row-slab
+    collectives issued under the NEXT slab's chain compute, so of the
+    ``comm_elems_per_device`` total only the exposed remainder sits on the
+    critical path.  ``comm_hidden_elems`` is the analytic upper bound on the
+    hidden share (``distributed.comm_hidden_elems``) and
+    ``critical_path_s`` the resulting per-call wall-clock estimate —
+    compute at the dtype's peak plus the EXPOSED transfer at ``ICI_BW``
+    plus one launch latency per collective.  Defaults keep local ops (and
+    serial mesh schedules) at the historical ``KronCost(flops, comm,
+    rounds)`` shape: nothing hidden, one collective per round.
+    """
 
     flops: int
     comm_elems_per_device: int  # all_to_all payload; 0 for local ops
     rounds: int  # collective rounds; 0 for local ops
+    comm_hidden_elems: int = 0  # payload hidden under slab-pipelined compute
+    n_slabs: int = 1  # resolved slab count of the round schedule
+    critical_path_s: float = 0.0  # analytic wall-clock (0.0 for local ops)
 
 
 def _stage_flops_bytes(
@@ -745,6 +761,11 @@ class KronOp:
     backend / plan / tune / cache_path : as in the legacy entry points;
         ``plan`` may be ``"auto"``, ``None`` (paper-faithful unfused loop),
         or an explicit ``KronPlan``.
+    n_slabs : row-slab count for the mesh round pipeline.  ``"auto"`` lets
+        the planner decide (per-sample batched plans carry it as
+        ``KronPlan.n_slabs``; the shared/single path asks
+        ``autotune.choose_n_slabs``); an explicit int forces the schedule,
+        clamped to a divisor of the local row axis.  Ignored off-mesh.
 
     The dispatch spine is two orthogonal axes — (local | mesh) x (single |
     batched) — and every legacy ``kron_matmul*`` entry point is a shim over
@@ -770,6 +791,7 @@ class KronOp:
         cache_path: str | None = None,
         dtype_bytes: int = 4,
         enable_prekron: bool | None = None,
+        n_slabs: int | str = "auto",
     ):
         self.ps = tuple(int(p) for p in ps)
         self.qs = tuple(int(q) for q in qs)
@@ -781,6 +803,11 @@ class KronOp:
             raise ValueError(f"batch must be positive, got {batch}")
         if isinstance(plan, str) and plan != "auto":
             raise ValueError(f"plan must be 'auto', None, or a KronPlan: {plan!r}")
+        if isinstance(n_slabs, str):
+            if n_slabs != "auto":
+                raise ValueError(f"n_slabs must be 'auto' or an int: {n_slabs!r}")
+        elif int(n_slabs) <= 0:
+            raise ValueError(f"n_slabs must be positive, got {n_slabs}")
         self.n = len(self.ps)
         self.k = math.prod(self.ps)
         self.k_out = math.prod(self.qs)
@@ -791,6 +818,11 @@ class KronOp:
         self.data_axis = data_axis
         self.model_axis = model_axis
         self.per_iteration = bool(per_iteration)
+        # "auto" defers the slab count to the planner (per-sample batched
+        # plans own it as KronPlan.n_slabs; the shared/single round path asks
+        # autotune.choose_n_slabs); an int forces it (clamped to a divisor of
+        # the local row axis by the executor).  Meaningless off-mesh.
+        self._n_slabs_arg = n_slabs if n_slabs == "auto" else int(n_slabs)
         self._m = m
         self._dtype_bytes = dtype_bytes
         self._plan_arg = plan
@@ -850,6 +882,24 @@ class KronOp:
 
     def _batched_plan(self, b: int, m: int, dtype_bytes: int) -> KronPlan:
         if self._plan_arg == "auto":
+            if self.mesh is not None and self._ctx.tune == "measure":
+                # The measured distributed tuner wall-clocks candidate
+                # (t_b, n_slabs) schedules ON the mesh, so it needs the mesh
+                # itself — bypass the hashable-args memo; the plan cache
+                # (``;gk=`` key) deduplicates across ops instead.
+                with telemetry.span(
+                    "plan", m=m, ps=self.ps, qs=self.qs, tune="measure",
+                    batch=b, g_k=self.g_k,
+                ):
+                    return autotune.make_batched_plan(
+                        KronProblem(m, self.ps, self.qs), b,
+                        shared_factors=False, dtype_bytes=dtype_bytes,
+                        enable_prekron=self._ctx.prekron, tune="measure",
+                        backend=self.backend,
+                        cache_path=self._ctx.cache_path, g_k=self.g_k,
+                        mesh=self.mesh, data_axis=self.data_axis,
+                        model_axis=self.model_axis,
+                    )
             return _resolve_batched_plan(
                 b, m, self.ps, self.qs, dtype_bytes, self.backend,
                 self._ctx.prekron, self._ctx.tune, self._ctx.cache_path,
@@ -885,6 +935,27 @@ class KronOp:
         # The paper's M=16 CG-block row count when no row hint exists.
         return self._m if self._m is not None else 16
 
+    def _resolve_n_slabs(self, m_loc: int, plan: KronPlan | None = None) -> int:
+        """Resolved slab count of the round schedule for ``m_loc`` local rows.
+
+        Explicit ints are honoured (clamped to a divisor of the row axis —
+        the same clamp the executor applies); ``"auto"`` reads the batched
+        plan's ``n_slabs`` when one is supplied (the per-sample mesh path,
+        where the planner traded slabs against ``t_b``) and otherwise asks
+        the analytic model.  Always 1 without a model axis to overlap."""
+        if self.mesh is None or self.g_k <= 1 or m_loc <= 1:
+            return 1
+        if self._n_slabs_arg != "auto":
+            return emit.effective_slabs(m_loc, int(self._n_slabs_arg))
+        if plan is not None:
+            return emit.effective_slabs(m_loc, int(getattr(plan, "n_slabs", 1)))
+        b = 1 if (self.batch is None or self.shared_factors) else self.batch
+        n = autotune.choose_n_slabs(
+            KronProblem(m_loc, self.ps, self.qs), self.g_k,
+            batch=b, dtype_bytes=self._dtype_bytes,
+        )
+        return emit.effective_slabs(m_loc, n)
+
     @property
     def plan(self) -> KronPlan | None:
         """The op's resolved KronPlan (last resolved; resolves for the
@@ -914,7 +985,7 @@ class KronOp:
             model_axis=self.model_axis, per_iteration=self.per_iteration,
             backend=self.backend, plan=self._plan_arg, tune=self._ctx.tune,
             cache_path=self._ctx.cache_path, dtype_bytes=self._dtype_bytes,
-            enable_prekron=self._enable_prekron,
+            enable_prekron=self._enable_prekron, n_slabs=self._n_slabs_arg,
         )
         kw.update(changes)
         return KronOp(self.ps, self.qs, **kw)
@@ -962,7 +1033,9 @@ class KronOp:
 
     def cost(self, m: int | None = None) -> KronCost:
         """Analytic cost of one call: sliced-multiply FLOPs plus, on a mesh,
-        the all_to_all payload (elements per device, all rounds)."""
+        the all_to_all payload (elements per device, all rounds), the share
+        of it the slab pipeline hides under compute, and the resulting
+        critical-path wall-clock estimate (``KronCost`` docstring)."""
         m = m if m is not None else self._default_rows()
         b = self.batch or 1
         if self.batch is not None and not self.shared_factors:
@@ -971,20 +1044,34 @@ class KronOp:
             flops = KronProblem(b * m, self.ps, self.qs).flops
         if self.mesh is None:
             return KronCost(flops, 0, 0)
-        from .distributed import comm_elems_per_device
+        from .distributed import comm_elems_per_device, comm_hidden_elems
 
         rows = b * m if self.shared_factors else m
         m_loc = max(1, rows // self.g_m)
+        comm_batch = 1 if self.shared_factors else b
+        ps_rev = tuple(reversed(self.ps))
+        qs_rev = tuple(reversed(self.qs))
         comm = comm_elems_per_device(
-            m_loc,
-            self.k // self.g_k,
-            tuple(reversed(self.ps)),
-            tuple(reversed(self.qs)),
-            self.g_k,
-            rounds=self.rounds,
-            batch=1 if self.shared_factors else b,
+            m_loc, self.k // self.g_k, ps_rev, qs_rev, self.g_k,
+            rounds=self.rounds, batch=comm_batch,
         )
-        return KronCost(flops, comm, len(self.rounds))
+        n = self._resolve_n_slabs(m_loc)
+        hidden = comm_hidden_elems(
+            m_loc, self.k // self.g_k, ps_rev, qs_rev, self.g_k,
+            rounds=self.rounds, batch=comm_batch, n_slabs=n,
+        )
+        # Critical path: per-device compute at the dtype's peak, the EXPOSED
+        # transfer at ICI_BW, one launch latency per collective issued.
+        peak = (
+            autotune.PEAK_FLOPS if self._dtype_bytes <= 2
+            else autotune.PEAK_FLOPS_F32
+        )
+        critical = (
+            flops / (self.g_m * self.g_k) / peak
+            + (comm - hidden) * self._dtype_bytes / autotune.ICI_BW
+            + len(self.rounds) * n * autotune.A2A_LATENCY_S
+        )
+        return KronCost(flops, comm, len(self.rounds), hidden, n, critical)
 
     def profile(
         self,
@@ -1036,11 +1123,24 @@ class KronOp:
             report["comm"] = {
                 "elems_per_device": cost.comm_elems_per_device,
                 "rounds": cost.rounds,
+                "n_slabs": cost.n_slabs,
+                "hidden_elems": cost.comm_hidden_elems,
+                "critical_path_s": cost.critical_path_s,
                 "predicted_s": cost.comm_elems_per_device
                 * self._dtype_bytes
                 / autotune.HBM_BW,
                 "measured_s": None,  # rounds run inside shard_map bodies
             }
+            # Reconcile the analytic overlap term against the per-slab
+            # telemetry gauges (comm.round{k}.slab{s}.elems_per_device): the
+            # registry's hidden total is per-round ``total - max(slab)``,
+            # which equals the model's ``payload - payload/n`` when the
+            # executor ran the schedule cost() predicted.
+            tele = telemetry.comm_summary()
+            if tele:
+                observed_hidden = sum(r["hidden"] for r in tele.values())
+                report["comm"]["telemetry_hidden_elems"] = observed_hidden
+                report["comm"]["telemetry_rounds"] = tele
         telemetry.mark_profile(report)
         for i in report["drift_flagged"]:
             st = report["stages"][i]
@@ -1272,6 +1372,15 @@ class KronOp:
 
         if x.ndim != 2:
             raise ValueError(f"distributed op expects x (M, K), got {x.shape}")
+        n_slabs = self._resolve_n_slabs(max(1, int(x.shape[0]) // self.g_m))
+
+        def _mesh_slabbed():
+            return distributed.run_distributed_rounds(
+                x, factors, self.mesh,
+                data_axis=self.data_axis, model_axis=self.model_axis,
+                backend=self.backend, per_iteration=self.per_iteration,
+                n_slabs=n_slabs,
+            )
 
         def _mesh():
             return distributed.run_distributed_rounds(
@@ -1284,12 +1393,16 @@ class KronOp:
             fn = self._ensure_single(int(x.shape[0]), x.dtype.itemsize)
             return fn(x, factors)
 
-        # Mesh ladder: a failed relocation round degrades to single-host
-        # execution on the (replicated) operands — same contraction, no
-        # collectives.  Only CollectiveError degrades; anything else is a bug.
+        # Mesh ladder: a failed slab relocation degrades to the serial round
+        # schedule, a failed round to single-host execution on the
+        # (replicated) operands — same contraction, no collectives.  Only
+        # CollectiveError degrades; anything else is a bug.
+        rungs = (("mesh-rounds", _mesh), ("local", _local))
+        if n_slabs > 1:
+            rungs = (("mesh-slabbed", _mesh_slabbed),) + rungs
         return guard.run_ladder(
             ("mesh", self.ps, self.qs, self.backend, "single"),
-            (("mesh-rounds", _mesh), ("local", _local)),
+            rungs,
             catch=(guard.CollectiveError,),
         )
 
@@ -1304,6 +1417,15 @@ class KronOp:
                 self._plans, key,
                 self._batched_plan(b, max(1, m // self.g_m), x.dtype.itemsize),
             )
+        n_slabs = self._resolve_n_slabs(max(1, m // self.g_m), plan)
+
+        def _mesh_slabbed():
+            return distributed.run_batched_distributed_rounds(
+                x, factors, self.mesh, t_b=plan.t_b,
+                data_axis=self.data_axis, model_axis=self.model_axis,
+                backend=self.backend, per_iteration=self.per_iteration,
+                n_slabs=n_slabs,
+            )
 
         def _mesh():
             return distributed.run_batched_distributed_rounds(
@@ -1316,9 +1438,12 @@ class KronOp:
             fn = self._ensure_batched(b, m, x.dtype.itemsize)
             return fn(x, factors)
 
+        rungs = (("mesh-rounds", _mesh), ("local", _local))
+        if n_slabs > 1:
+            rungs = (("mesh-slabbed", _mesh_slabbed),) + rungs
         return guard.run_ladder(
             ("mesh", self.ps, self.qs, self.backend, "batched"),
-            (("mesh-rounds", _mesh), ("local", _local)),
+            rungs,
             catch=(guard.CollectiveError,),
         )
 
@@ -1346,6 +1471,7 @@ def kron_op_for(
     cache_path: str | None = None,
     dtype_bytes: int = 4,
     enable_prekron: bool | None = None,
+    n_slabs: int | str = "auto",
 ) -> KronOp:
     """Shared, bounded ``KronOp`` factory: same signature -> same op object.
 
@@ -1359,7 +1485,7 @@ def kron_op_for(
         data_axis=data_axis, model_axis=model_axis,
         per_iteration=per_iteration, backend=backend, plan=plan, tune=tune,
         cache_path=cache_path, dtype_bytes=dtype_bytes,
-        enable_prekron=enable_prekron,
+        enable_prekron=enable_prekron, n_slabs=n_slabs,
     )
 
 

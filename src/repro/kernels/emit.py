@@ -309,6 +309,44 @@ def prekron_product(stage_factors: Sequence[jax.Array]) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Slab-sliced execution (the distributed round pipeline's view of a program)
+# ---------------------------------------------------------------------------
+
+
+def effective_slabs(size: int, n_slabs: int) -> int:
+    """Clamp a requested slab count to what the axis can actually carry: the
+    largest divisor of ``size`` that is ``<= n_slabs``.  Slabs must tile the
+    axis exactly — a ragged tail slab would change the per-slab payload and
+    break the exact comm-accounting invariant (per-slab all_to_all payloads
+    sum to the serial total), so we never allow one.  ``n_slabs <= 1`` (and
+    ``size == 0``) degenerate to 1, the serial schedule."""
+    n = max(1, min(int(n_slabs), int(size) if size else 1))
+    while size % n:
+        n -= 1
+    return n
+
+
+def split_slabs(y: jax.Array, n_slabs: int, axis: int = 0) -> list[jax.Array]:
+    """Split ``y`` into ``n_slabs`` equal slabs along ``axis``.
+
+    The slabs partition an embarrassingly-parallel axis (rows of a 2-D
+    operand, samples of a batched one), so running any stage/chain per slab
+    and concatenating is BITWISE-identical to the unsliced run — the property
+    the slab-pipelined distributed rounds rely on for their serial-parity
+    guarantee.  Callers clamp via ``effective_slabs`` first; a non-dividing
+    count here is a programming error."""
+    size = int(y.shape[axis])
+    if n_slabs <= 1:
+        return [y]
+    if size % n_slabs:
+        raise ValueError(
+            f"n_slabs={n_slabs} does not divide axis {axis} of size {size}; "
+            f"clamp with effective_slabs first"
+        )
+    return list(jnp.split(y, n_slabs, axis=axis))
+
+
+# ---------------------------------------------------------------------------
 # VMEM-growth models (shared by the emitter and the planner)
 # ---------------------------------------------------------------------------
 
@@ -1117,6 +1155,8 @@ __all__ = [
     "sliced_apply",
     "sliced_apply_t",
     "prekron_product",
+    "effective_slabs",
+    "split_slabs",
     "chain_pallas",
     "grad_pallas",
     "fused_growth",

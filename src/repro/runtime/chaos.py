@@ -12,6 +12,8 @@ site               where ``maybe_fail`` is called
 ``per_factor``       ``core/engine.py`` per-factor sliced rung
 ``round_chain``      ``core/distributed.py`` fused chain in a mesh round
 ``collective``       ``core/distributed.py`` before the all_to_all
+``slab_collective``  ``core/distributed.py`` one slab's all_to_all in a
+                     pipelined round (fires only when ``n_slabs > 1``)
 ``plan_cache_load``  ``core/autotune.py`` cache read
 ``plan_cache_save``  ``core/autotune.py`` cache write attempt
 ``root_refresh``     ``optim/shampoo.py`` inverse-root refresh
@@ -52,6 +54,10 @@ SITE_ERRORS = {
     "per_factor": guard.VmemOverflowError,
     "round_chain": guard.VmemOverflowError,
     "collective": guard.CollectiveError,
+    # Slab pipeline: fires per slab relocation when a round is slab-
+    # pipelined (n_slabs > 1) — the guard ladder must degrade slabbed →
+    # serial rounds → local, never corrupt the round schedule.
+    "slab_collective": guard.CollectiveError,
     # Serving: fires inside the engine's bucketed prefill, before a group
     # is admitted to decode slots — the guard ladder must degrade to a
     # smaller prefill chunk, never drop the request (docs/serving.md).

@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import threading
 import time
 
@@ -356,6 +357,42 @@ def snapshot() -> dict:
         }
 
 
+def comm_summary() -> dict:
+    """Aggregate the distributed comm gauges into per-round structure.
+
+    The mesh rounds gauge ``comm.round<k>.elems_per_device`` (round total)
+    and, when the round is slab-pipelined, ``comm.round<k>.slab<s>.
+    elems_per_device`` per slab.  Returns ``{round: {"total": float,
+    "slabs": [per-slab payloads in slab order], "hidden": float}}`` where
+    ``hidden`` is the overlap accounting the gauges imply — everything except
+    one exposed slab per round (0 for serial rounds).  ``KronOp.profile()``
+    reconciles ``KronCost.comm_hidden_elems`` against this; ``{}`` while
+    inactive or before any mesh round ran."""
+    st = _STATE
+    if st is None:
+        return {}
+    pat = re.compile(r"^comm\.round(\d+)\.(?:slab(\d+)\.)?elems_per_device$")
+    rounds: dict[int, dict] = {}
+    with st.lock:
+        items = list(st.gauges.items())
+    for name, value in items:
+        m = pat.match(name)
+        if m is None:
+            continue
+        k = int(m.group(1))
+        rec = rounds.setdefault(k, {"total": 0.0, "slabs": {}})
+        if m.group(2) is None:
+            rec["total"] = float(value)
+        else:
+            rec["slabs"][int(m.group(2))] = float(value)
+    out: dict[int, dict] = {}
+    for k, rec in sorted(rounds.items()):
+        slabs = [rec["slabs"][s] for s in sorted(rec["slabs"])]
+        hidden = rec["total"] - max(slabs) if len(slabs) > 1 else 0.0
+        out[k] = {"total": rec["total"], "slabs": slabs, "hidden": hidden}
+    return out
+
+
 def summary_line() -> str:
     """One-line state summary (``KronOp.describe()`` appends this while
     telemetry is active)."""
@@ -442,6 +479,7 @@ __all__ = [
     "observe",
     "percentiles",
     "snapshot",
+    "comm_summary",
     "summary_line",
     "mark_profile",
     "write_chrome_trace",

@@ -13,7 +13,12 @@ Checks, per the acceptance criteria:
     error is recorded in guard health;
   * ``chaos.inject("collective")`` fails the relocation itself: the KronOp
     mesh ladder degrades to local execution, records ``CollectiveError``,
-    and still matches the unfaulted mesh result.
+    and still matches the unfaulted mesh result;
+  * ``chaos.inject("slab_collective")`` fails one slab's all_to_all inside
+    a pipelined round (PR 10): the three-rung ladder degrades slabbed ->
+    serial rounds with BITWISE recovery (the serial schedule is immune to
+    the slab site), and with the serial relocation failing too it degrades
+    the rest of the way to local execution.
 """
 import math
 import os
@@ -116,6 +121,57 @@ def main() -> None:
     np.testing.assert_array_equal(np.asarray(mesh_ref), np.asarray(got_back))
     assert guard.health(key).consecutive == 0
     print("OK mesh-ladder-local-fallback")
+
+    # --- slab_collective chaos: slabbed -> serial rounds, bitwise ----------
+    from repro.core.distributed import sharded_input
+
+    x1 = jax.random.normal(jax.random.PRNGKey(17), (M, math.prod(PS)))
+    f1 = tuple(
+        jax.random.normal(k, (p, q), jnp.float32)
+        for k, p, q in zip(jax.random.split(jax.random.PRNGKey(19), len(PS)),
+                           PS, QS)
+    )
+    x1s = sharded_input(x1, mesh)
+    op_slab = engine.KronOp(PS, QS, mesh=mesh, n_slabs=2)
+    slab_ref = op_slab(x1s, f1)
+    guard.reset_health()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always", guard.GuardWarning)
+        with chaos.inject("slab_collective:times=1") as specs:
+            got_serial = op_slab(x1s, f1)
+    assert specs[0].fired == 1, specs[0]
+    # the serial-rounds rung is IMMUNE to the slab site: recovery is one
+    # rung down, not local, and bitwise (slabbed == serial by construction)
+    np.testing.assert_array_equal(np.asarray(slab_ref), np.asarray(got_serial))
+    msgs = [str(w.message) for w in caught]
+    assert any(
+        "rung 0 (mesh-slabbed)" in m and "rung 1 (mesh-rounds)" in m
+        for m in msgs
+    ), msgs
+    entries = [(k, h) for k, h in guard.health_entries() if k[0] == "mesh"]
+    [(key, h)] = entries
+    assert h.errors.get("CollectiveError") == 1, h.errors
+    assert h.degraded_calls == 1 and h.calls == 1, h.summary()
+    # injection exhausted: the slabbed rung runs cleanly again
+    np.testing.assert_array_equal(
+        np.asarray(slab_ref), np.asarray(op_slab(x1s, f1))
+    )
+    assert guard.health(key).consecutive == 0
+    print("OK slab-ladder-serial-fallback bitwise")
+
+    # --- slab + serial collectives both failing: all the way to local ------
+    guard.reset_health()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", guard.GuardWarning)
+        with chaos.inject("slab_collective:times=1,collective:times=1"):
+            got_local2 = op_slab(x1s, f1)
+    np.testing.assert_allclose(
+        np.asarray(slab_ref), np.asarray(got_local2), rtol=1e-5, atol=1e-5
+    )
+    [(key, h)] = [(k, h) for k, h in guard.health_entries() if k[0] == "mesh"]
+    assert h.errors.get("CollectiveError") == 2, h.errors
+    assert h.degraded_calls == 1 and h.calls == 1, h.summary()
+    print("OK slab-ladder-local-fallback")
 
     print("ALL-OK")
 

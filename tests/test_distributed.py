@@ -40,10 +40,29 @@ def test_chaos_distributed_driver_all_checks():
     """Fault-injected distributed rounds (PR 6): chaos forces the per-factor
     VMEM fallback in ``_local_multiply_round`` (bitwise parity + still one
     all-to-all per round) and a failed collective degrades the KronOp mesh
-    ladder to local execution with the CollectiveError recorded in health."""
+    ladder to local execution with the CollectiveError recorded in health.
+    PR 10 adds the ``slab_collective`` site: a failed slab all_to_all
+    degrades the three-rung ladder slabbed -> serial rounds (bitwise) and,
+    with the serial relocation failing too, the rest of the way to local."""
     out = _run_driver("chaos_distributed_driver.py")
     assert "OK round-chain-fallback" in out
     assert "OK mesh-ladder-local-fallback" in out
+    assert "OK slab-ladder-serial-fallback bitwise" in out
+    assert "OK slab-ladder-local-fallback" in out
+
+
+@pytest.mark.slow
+def test_overlap_distributed_driver_all_checks():
+    """Slab-pipelined distributed rounds (PR 10): slabbed schedule bitwise
+    (fwd + grads) vs serial on both mesh runners, the ``rounds * n_slabs``
+    all-to-all HLO pin, per-slab comm-gauge accounting summing to the serial
+    ``comm_elems_per_device`` total, cost()/telemetry overlap reconciliation
+    through ``KronOp.profile()``, and the measured distributed tuner's
+    ``;gk=`` plan-cache key — on a forced 8-device (2, 4) host mesh."""
+    out = _run_driver("overlap_distributed_driver.py")
+    assert "OK comm-accounting" in out
+    assert "OK cost-telemetry-reconcile" in out
+    assert "OK measured-tuner" in out
 
 
 @pytest.mark.slow
